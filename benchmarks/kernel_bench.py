@@ -1,0 +1,85 @@
+"""Kernel micro-bench: wall-clock of jnp reference paths on CPU (relative
+numbers; the Pallas kernels target TPU and are validated in interpret mode —
+timing interpret mode is meaningless, so we time the XLA fallback and report
+bytes/flops per call for the roofline narrative)."""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fakewords, lexical_lsh
+from repro.core.types import FakeWordsConfig, LexicalLshConfig
+
+
+def _time(f, *args, n=5) -> float:
+    f(*args)[0].block_until_ready() if isinstance(f(*args), tuple) else None
+    out = f(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = f(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / n
+
+
+def run(n_docs: int = 50_000, dim: int = 300, batch: int = 64) -> List[Dict]:
+    rng = np.random.default_rng(0)
+    vecs = jnp.asarray(rng.normal(size=(n_docs, dim)).astype(np.float32))
+    rows = []
+
+    cfg = FakeWordsConfig(quantization=50)
+    idx = fakewords.build(vecs, cfg)
+    q_tf = fakewords.encode_queries(vecs[:batch], cfg)
+    f = jax.jit(lambda i, q: fakewords.classic_scores(i, q))
+    dt = _time(f, idx, q_tf)
+    gemm_bytes = idx.scored.size * 2 + q_tf.size * 4
+    rows.append({
+        "kernel": "fakewords_score(classic)", "us_per_call": dt * 1e6,
+        "gflops": 2 * batch * n_docs * 2 * dim / dt / 1e9,
+        "stream_mb": gemm_bytes / 1e6,
+    })
+
+    cfg_d = FakeWordsConfig(quantization=50, scoring="dot")
+    idx_d = fakewords.build(vecs, cfg_d)
+    f = jax.jit(lambda i, q: fakewords.dot_scores(i, q))
+    dt = _time(f, idx_d, q_tf)
+    rows.append({
+        "kernel": "fakewords_score(dot-int8)", "us_per_call": dt * 1e6,
+        "gflops": 2 * batch * n_docs * 2 * dim / dt / 1e9,
+        "stream_mb": idx_d.tf.size / 1e6,
+    })
+
+    lcfg = LexicalLshConfig(buckets=300, hashes=1)
+    sig = lexical_lsh.encode(vecs, lcfg)
+    sq = sig[:batch]
+    f = jax.jit(lexical_lsh.match_scores)
+    dt = _time(f, sq, sig)
+    rows.append({
+        "kernel": "lsh_match", "us_per_call": dt * 1e6,
+        "stream_mb": sig.size * 4 / 1e6,
+    })
+
+    from repro.core import bruteforce
+    f = jax.jit(lambda c, q: bruteforce.exact_topk(c, q, 10))
+    dt = _time(f, vecs, vecs[:batch])
+    rows.append({
+        "kernel": "bruteforce_topk", "us_per_call": dt * 1e6,
+        "gflops": 2 * batch * n_docs * dim / dt / 1e9,
+    })
+    return rows
+
+
+def main():
+    rows = run()
+    for r in rows:
+        print(",".join(f"{k}={v:.1f}" if isinstance(v, float) else f"{k}={v}"
+                       for k, v in r.items()))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,78 @@
+"""Render EXPERIMENTS.md tables from results/*.json artifacts.
+
+    PYTHONPATH=src python -m benchmarks.report > /tmp/tables.md
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def dryrun_table(path="results/dryrun.json") -> str:
+    rows = json.load(open(path))
+    out = [
+        "| arch | cell | mesh | compile | GB/dev | fits 16GB | coll ops |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["cell"], r["mesh"])):
+        if not r.get("ok"):
+            out.append(f"| {r['arch']} | {r['cell']} | {r['mesh']} | FAIL | - | - | - |")
+            continue
+        gb = r["memory"]["total_per_device_bytes"] / 1e9
+        alias = r["memory"].get("alias_bytes", 0) / 1e9
+        out.append(
+            f"| {r['arch']} | {r['cell']} | {r['mesh']} | {r['compile_s']}s "
+            f"| {gb:.2f} | {'yes' if r.get('hbm_ok') else 'NO'} "
+            f"| {r.get('collective_ops', '-')} |"
+        )
+    return "\n".join(out)
+
+
+def roofline_table(path="results/roofline_opt.json") -> str:
+    rows = [r for r in json.load(open(path)) if "error" not in r]
+    out = [
+        "| arch | cell | compute_s | memory_s | collective_s | dominant | "
+        "MODEL/HLO flops | roofline frac |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["cell"])):
+        out.append(
+            f"| {r['arch']} | {r['cell']} | {r['compute_s']:.3e} | "
+            f"{r['memory_s']:.3e} | {r['collective_s']:.3e} | {r['dominant']} | "
+            f"{r['useful_flops_ratio']:.2f} | {r['roofline_fraction']:.3f} |"
+        )
+    return "\n".join(out)
+
+
+def perf_compare(base="results/roofline_baseline.json",
+                 opt="results/roofline_opt.json") -> str:
+    b = {(r["arch"], r["cell"]): r for r in json.load(open(base)) if "error" not in r}
+    o = {(r["arch"], r["cell"]): r for r in json.load(open(opt)) if "error" not in r}
+    out = [
+        "| arch | cell | bound before | bound after | speedup | frac before | frac after |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for key in sorted(set(b) & set(o)):
+        rb, ro = b[key], o[key]
+        sp = rb["bound_s"] / ro["bound_s"] if ro["bound_s"] else float("inf")
+        if abs(sp - 1) < 0.02:
+            continue  # unchanged cells skipped
+        out.append(
+            f"| {key[0]} | {key[1]} | {rb['bound_s']*1e3:.2f}ms | "
+            f"{ro['bound_s']*1e3:.2f}ms | {sp:.2f}x | "
+            f"{rb['roofline_fraction']:.3f} | {ro['roofline_fraction']:.3f} |"
+        )
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    if which in ("all", "dryrun"):
+        print("### Dry-run matrix\n")
+        print(dryrun_table())
+    if which in ("all", "roofline"):
+        print("\n### Roofline (optimized)\n")
+        print(roofline_table())
+    if which in ("all", "perf"):
+        print("\n### Before/after\n")
+        print(perf_compare())

@@ -1,0 +1,61 @@
+"""Benchmark aggregator: ``PYTHONPATH=src python -m benchmarks.run``.
+
+One section per paper table/figure + system ablations:
+  table1     — paper Table 1 (R@(10,d) / latency / index size, both corpora)
+  ablations  — df-pruning, rerank, blockmax, scoring mode
+  kernels    — scoring-path micro-bench (CPU wall-clock, relative)
+
+Roofline terms come from the dry-run artifacts (results/*.json via
+launch/roofline.py), not from this CPU — see EXPERIMENTS.md §Roofline.
+
+``--fast`` shrinks corpora for CI-speed runs.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--only", default=None, choices=[None, "table1", "ablations", "kernels"])
+    args = ap.parse_args()
+
+    t0 = time.time()
+    failures = []
+
+    if args.only in (None, "table1"):
+        print("=" * 72)
+        print("== Table 1 reproduction (paper §3)")
+        print("=" * 72, flush=True)
+        from benchmarks import table1
+        rows, problems = table1.main(fast=args.fast)
+        failures += problems
+
+    if args.only in (None, "ablations"):
+        print()
+        print("=" * 72)
+        print("== Ablations: df-pruning / rerank / blockmax / scoring")
+        print("=" * 72, flush=True)
+        from benchmarks import ablations
+        ablations.main()
+
+    if args.only in (None, "kernels"):
+        print()
+        print("=" * 72)
+        print("== Kernel micro-bench (CPU relative)")
+        print("=" * 72, flush=True)
+        from benchmarks import kernel_bench
+        kernel_bench.main()
+
+    print(f"\ntotal bench time: {time.time() - t0:.0f}s")
+    if failures:
+        print("CLAIM FAILURES:", failures)
+        sys.exit(1)
+    print("all paper claims validated")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,20 @@
+"""ANN serving end to end: index build -> batched query service -> metrics.
+
+    PYTHONPATH=src python examples/ann_serving.py
+
+Thin wrapper over launch/serve.py (deliverable (b)'s serving driver) with a
+smaller default corpus; on a pod the identical service runs over the
+sharded index (core/distributed.py + serve/ann_service.py).
+"""
+from repro.launch import serve
+
+
+def main():
+    out = serve.main([
+        "--n-docs", "50000", "--queries", "256", "--batch", "64", "--q", "50",
+    ])
+    assert out["recall@k"] > 0.9  # depth-100 + rerank on 50k docs
+
+
+if __name__ == "__main__":
+    main()

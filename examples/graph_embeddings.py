@@ -1,0 +1,56 @@
+"""GraphSAGE node embeddings -> fake-words ANN (post-hoc applicability).
+
+    PYTHONPATH=src python examples/graph_embeddings.py
+
+Trains 2-layer mean-SAGE on a synthetic power-law graph (full-batch), then
+indexes the trained node embeddings with the paper's fake-words encoding
+and checks neighbor retrieval against brute force.
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import bruteforce, eval as ev, fakewords
+from repro.core.types import FakeWordsConfig
+from repro.data import graph as gd
+from repro.models import gnn
+from repro.train import optimizer as opt_mod
+from repro.train.train_loop import build_train_step, make_train_state
+
+
+def main():
+    g = gd.make_graph(gd.GraphConfig(n_nodes=3000, n_edges=15000, d_feat=64,
+                                     n_classes=10))
+    src, dst = g.edge_list()
+    cfg = gnn.SageConfig(n_layers=2, d_in=64, d_hidden=64, n_classes=10,
+                         fanouts=(25, 10))
+    params = gnn.init_params(jax.random.key(0), cfg)
+    opt = opt_mod.adamw(lr=1e-2)
+    state = make_train_state(params, opt)
+    mask = jnp.ones((g.n_nodes,), jnp.float32)
+
+    def loss_of(p, batch):
+        return gnn.loss_full(p, g.feats, src, dst, g.labels, mask, cfg)
+
+    step = jax.jit(build_train_step(loss_of, opt))
+    print("== training GraphSAGE (100 full-batch steps)")
+    for i in range(100):
+        state, m = step(state, {})
+        if i % 25 == 0:
+            print(f"  step {i}: xent {float(m['loss']):.4f}")
+
+    emb = gnn.embeddings_full(state.params, g.feats, src, dst, cfg)
+    print(f"== node embeddings: {emb.shape}")
+    queries = emb[:64]
+    _, gt = bruteforce.exact_topk(emb, queries, 10)
+    fw = FakeWordsConfig(quantization=50)
+    idx = fakewords.build(emb, fw)
+    q_tf = fakewords.encode_queries(queries, fw)
+    _, ids = fakewords.search(
+        idx, q_tf, bruteforce.l2_normalize(queries), k=10, depth=100, rerank=True)
+    r = float(ev.recall_at(gt, ids))
+    print(f"== fake-words neighbor recall vs brute force: {r:.3f}")
+    assert r > 0.8
+
+
+if __name__ == "__main__":
+    main()

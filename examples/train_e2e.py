@@ -1,0 +1,47 @@
+"""End-to-end training driver demo: ~100M-param LM, a few hundred steps,
+with a mid-run crash + restart proving checkpoint fault tolerance.
+
+    PYTHONPATH=src python examples/train_e2e.py [--steps 300]
+
+(The same driver trains the assigned full-size archs on a pod; this is the
+container-scale run of deliverable (b).)
+"""
+import argparse
+import subprocess
+import sys
+import os
+import tempfile
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--arch", default="tiny-lm", help="tiny-lm (~100M) | micro-lm (~3M)")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    args = ap.parse_args()
+
+    env = dict(os.environ, PYTHONPATH=SRC)
+    with tempfile.TemporaryDirectory() as ck:
+        base = [
+            sys.executable, "-m", "repro.launch.train",
+            "--arch", args.arch, "--steps", str(args.steps),
+            "--global-batch", str(args.batch), "--seq-len", str(args.seq),
+            "--ckpt-dir", ck, "--ckpt-every", str(max(10, args.steps // 6)),
+            "--log-every", "20",
+        ]
+        kill_at = args.steps // 2
+        print(f"== phase 1: train until simulated crash at step {kill_at}")
+        r = subprocess.run(base + ["--kill-at", str(kill_at)], env=env)
+        assert r.returncode == 42, "expected simulated crash"
+        print("== phase 2: restart — resumes from the latest atomic checkpoint")
+        r = subprocess.run(base, env=env)
+        assert r.returncode == 0
+        print("== done: loss curve continued through the crash (stateless "
+              "data + checkpoint restore; see launch/train.py)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Beyond-paper scale config: fake-words ANN over a 1B-document corpus —
+the pod-scale workload that motivates the TPU adaptation (DESIGN.md §2).
+
+dot scoring (int8 index only, no bf16 scored matrix): 1B x 600 int8 =
+600 GB tf matrix + 1.2 TB originals (bf16) for rerank, sharded over all
+mesh axes.
+"""
+import jax.numpy as jnp
+
+from repro.configs.common import ArchSpec, Cell
+from repro.core.types import FakeWordsConfig
+
+CELLS = (
+    Cell("ann_search", "ann_search", batch=256, extra={
+        "n_docs": 1_073_741_824, "dim": 300, "depth": 100, "k": 10,
+        "rerank_dtype": "bfloat16",
+    }),
+)
+
+
+def make_model(cell=None) -> FakeWordsConfig:
+    return FakeWordsConfig(quantization=50, scoring="dot", df_max_ratio=1.0,
+                           signed_store=True)
+
+
+ARCH = ArchSpec(
+    id="ann-web1b",
+    family="ann",
+    make_model=make_model,
+    cells=CELLS,
+    source="beyond-paper scale target (1B docs)",
+)

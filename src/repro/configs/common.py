@@ -1,0 +1,62 @@
+"""Config schema: an architecture = model hyperparams + its shape cells.
+
+Each assigned architecture file exports ``ARCH: ArchSpec`` with the EXACT
+published configuration plus the input-shape cells assigned to its family.
+``make_model(cell)`` builds the model config (GNN feature dims vary per
+cell; LM/recsys models are cell-independent).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class Cell:
+    """One (input-shape) cell of the dry-run matrix."""
+
+    name: str
+    kind: str  # train | prefill | decode | serve | retrieval |
+    #            full_graph | minibatch | molecule | ann_search
+    batch: int = 0
+    seq: int = 0
+    extra: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def get(self, key: str, default=None):
+        return self.extra.get(key, default)
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchSpec:
+    id: str
+    family: str  # "lm" | "gnn" | "recsys" | "ann"
+    make_model: Callable[[Optional[Cell]], Any]
+    cells: Tuple[Cell, ...]
+    optimizer: str = "adamw"  # "adamw" | "adafactor"
+    source: str = ""
+    notes: str = ""
+
+    def cell(self, name: str) -> Cell:
+        for c in self.cells:
+            if c.name == name:
+                return c
+        raise KeyError(f"{self.id} has no cell {name!r}; have {[c.name for c in self.cells]}")
+
+
+# The four LM shapes shared by all five LM architectures.
+LM_CELLS = (
+    Cell("train_4k", "train", batch=256, seq=4096),
+    Cell("prefill_32k", "prefill", batch=32, seq=32768),
+    Cell("decode_32k", "decode", batch=128, seq=32768),
+    # long_500k: O(L) decode against a length-sharded KV cache (engineering
+    # feasibility; full-attention archs — see DESIGN.md §6 caveat).
+    Cell("long_500k", "decode", batch=1, seq=524288, extra={"long": True}),
+)
+
+# The four recsys shapes shared by all four recsys architectures.
+RECSYS_CELLS = (
+    Cell("train_batch", "train", batch=65536),
+    Cell("serve_p99", "serve", batch=512),
+    Cell("serve_bulk", "serve", batch=262144),
+    Cell("retrieval_cand", "retrieval", batch=1, extra={"n_candidates": 1_000_000}),
+)

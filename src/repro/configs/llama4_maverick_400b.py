@@ -1,0 +1,42 @@
+"""llama4-maverick-400b-a17b [hf:meta-llama/Llama-4 family]: 48L d=5120
+40H (GQA kv=8) d_ff=8192 vocab=202048, MoE 128 experts top-1.
+
+Interpretation (DESIGN.md §6): all-layer MoE would give ~780B total,
+contradicting the 400B name; Llama-4 interleaves MoE every other layer
+(moe period=2), giving ~394B total / ~17B active — matching 400b-a17b.
+bf16 params + Adafactor keep states inside the pod's 4 TB HBM.
+"""
+import jax.numpy as jnp
+
+from repro.configs.common import ArchSpec, LM_CELLS
+from repro.models.transformer import MoEConfig, TransformerConfig
+
+
+def make_model(cell=None) -> TransformerConfig:
+    return TransformerConfig(
+        name="llama4-maverick-400b-a17b",
+        n_layers=48,
+        d_model=5120,
+        n_heads=40,
+        n_kv_heads=8,
+        head_dim=128,
+        d_ff=16384,  # dense (non-MoE) layers are 2x wider (Maverick)
+        vocab=202048,
+        moe=MoEConfig(num_experts=128, top_k=1, d_ff=8192, period=2,
+                      shared_expert=True),
+        param_dtype=jnp.bfloat16,  # 394B params: f32 would not fit one pod
+    )
+
+
+ARCH = ArchSpec(
+    id="llama4-maverick-400b-a17b",
+    family="lm",
+    make_model=make_model,
+    cells=LM_CELLS,
+    optimizer="adafactor",
+    source="hf:meta-llama/Llama-4-Scout-17B-16E (family)",
+    notes="moe_layer_period=2 + shared-expert + 16384-wide dense FFN "
+    "interpretation: yields 400.6B total / 17.2B active, matching the "
+    "nameplate; early-fusion frontend stubbed (input_specs provide token "
+    "ids; vision patches would enter as embeddings)",
+)

@@ -1,0 +1,11 @@
+"""Core ANN library: the paper's contribution as composable JAX modules."""
+from repro.core.types import (  # noqa: F401
+    FakeWordsConfig,
+    FakeWordsIndex,
+    KdTreeConfig,
+    KdTreeIndex,
+    LexicalLshConfig,
+    LshIndex,
+    SearchParams,
+)
+from repro.core.index import AnnIndex  # noqa: F401

@@ -1,0 +1,86 @@
+"""Block upper-bound pruning - WAND/BlockMax-WAND adapted to TPU tiles.
+
+Lucene never scores documents that share no query term, and WAND-style
+engines additionally skip whole postings blocks whose term-score upper bounds
+cannot beat the current k-th best.  A dense GEMM scores everything, so we
+recover the skipping *architecturally*: documents are grouped into fixed-size
+blocks, each block stores per-term tf upper bounds, and at query time we
+
+  1. score every block's upper bound with one small GEMM
+     (n_blocks x 2m) @ (2m,)  ->  optimistic block scores,
+  2. keep only the top ``beta``-fraction of blocks (static shape!),
+  3. gather those blocks' rows and run the exact scoring GEMM on them.
+
+This turns the paper's "filter high-frequency terms" latency trick into a
+second, stronger roofline lever: the index-scan GEMM is memory-bound, and
+block pruning cuts its bytes by ~(1 - beta) at a small recall cost that the
+benchmark sweeps (see EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import FakeWordsIndex
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class BlockMaxIndex:
+    """Per-block upper bounds over a FakeWordsIndex, block = ``block_size``
+    consecutive docs.  ub[b,t] = max over docs in block b of the *scored*
+    matrix entry (classic mode) so the block bound is exact."""
+
+    ub: jax.Array  # (n_blocks, 2m) bfloat16
+    block_size: int = dataclasses.field(metadata=dict(static=True))
+
+
+def build_blockmax(index: FakeWordsIndex, block_size: int = 256) -> BlockMaxIndex:
+    assert index.scored is not None, "blockmax requires classic scoring matrix"
+    n, t = index.scored.shape
+    n_pad = (-n) % block_size
+    scored = index.scored
+    if n_pad:
+        scored = jnp.concatenate(
+            [scored, jnp.zeros((n_pad, t), scored.dtype)], axis=0
+        )
+    blocks = scored.reshape(-1, block_size, t)
+    ub = jnp.max(blocks, axis=1)
+    return BlockMaxIndex(ub=ub, block_size=block_size)
+
+
+@functools.partial(jax.jit, static_argnames=("n_keep", "depth"))
+def pruned_search(
+    index: FakeWordsIndex,
+    bm: BlockMaxIndex,
+    q_tf: jax.Array,
+    n_keep: int,
+    depth: int,
+) -> Tuple[jax.Array, jax.Array]:
+    """Two-stage blockmax search: upper-bound GEMM -> keep n_keep blocks ->
+    exact GEMM on the gathered rows.  Returns (scores, doc_ids) at depth."""
+    bsz = bm.block_size
+    qv = q_tf.astype(jnp.bfloat16)  # (B, 2m)
+    # Stage 1: optimistic block scores (tiny GEMM).
+    block_ub = jnp.einsum(
+        "bt,nt->bn", qv, bm.ub, preferred_element_type=jnp.float32
+    )  # (B, n_blocks)
+    _, keep_blocks = jax.lax.top_k(block_ub, n_keep)  # (B, n_keep)
+    # Stage 2: gather kept blocks' scored rows and score exactly.
+    # row ids: (B, n_keep, bsz)
+    row_ids = keep_blocks[:, :, None] * bsz + jnp.arange(bsz)[None, None, :]
+    row_ids = row_ids.reshape(q_tf.shape[0], -1)  # (B, n_keep*bsz)
+    valid = row_ids < index.num_docs
+    rows = index.scored[jnp.minimum(row_ids, index.num_docs - 1)]  # (B,R,2m)
+    scores = jnp.einsum(
+        "bt,brt->br", qv, rows, preferred_element_type=jnp.float32
+    )
+    scores = jnp.where(valid, scores, -jnp.inf)
+    d_s, pos = jax.lax.top_k(scores, depth)
+    d_i = jnp.take_along_axis(row_ids, pos, axis=-1)
+    d_i = jnp.where(d_s > -jnp.inf, d_i, -1)
+    return d_s, d_i

@@ -1,0 +1,267 @@
+"""Pod-scale sharded ANN search (DESIGN.md §5).
+
+Lucene/Elasticsearch scale by sharding the inverted index across nodes: every
+query fans out, each shard returns its local top-d, and a coordinator merges.
+We reproduce that architecture with ``shard_map`` over the full device mesh:
+
+  1. the corpus (tf matrix / signatures / reduced points + original vectors)
+     is sharded over the flattened mesh axes on the document dimension;
+  2. each shard scores locally (one GEMM over its slice) and takes a local
+     top-d;
+  3. *local exact rerank*: each shard recomputes exact cosine for its own
+     candidates from its local original vectors - this keeps the rerank
+     gather local (no cross-shard vector movement);
+  4. one all-gather of (score, global_id) pairs - d*(4+4) bytes per shard,
+     negligible next to the index scan - and a replicated global top-k.
+
+Build is also distributed: document-frequency statistics are ``psum``-ed so
+idf matches a single-node build exactly.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import bruteforce, fakewords
+from repro.core.types import FakeWordsConfig, FakeWordsIndex
+
+
+def flat_axis_index(axes: Sequence[str]) -> jax.Array:
+    """Row-major linear index of this shard over multiple mesh axes."""
+    idx = jnp.int32(0)
+    for name in axes:
+        idx = idx * jax.lax.axis_size(name) + jax.lax.axis_index(name)
+    return idx
+
+
+def flat_axis_size(mesh: Mesh, axes: Sequence[str]) -> int:
+    size = 1
+    for name in axes:
+        size *= mesh.shape[name]
+    return size
+
+
+# --------------------------------------------------------------------------
+# Distributed build
+# --------------------------------------------------------------------------
+
+
+def build_fakewords_sharded(
+    mesh: Mesh,
+    vectors: jax.Array,
+    config: FakeWordsConfig,
+    axes: Sequence[str],
+    keep_vectors: bool = True,
+) -> FakeWordsIndex:
+    """Build a FakeWordsIndex whose doc-sharded leaves live distributed over
+    ``axes``; idf/df are computed globally (psum) and replicated."""
+    axes = tuple(axes)
+    n_shards = flat_axis_size(mesh, axes)
+    n = vectors.shape[0]
+    assert n % n_shards == 0, f"corpus size {n} not divisible by {n_shards} shards"
+
+    def local_build(v):
+        v = bruteforce.l2_normalize(v)
+        tf = fakewords.encode(v, config.quantization, config.store_dtype)
+        df_local = jnp.sum(tf > 0, axis=0).astype(jnp.int32)
+        df = jax.lax.psum(df_local, axes)
+        idf = 1.0 + jnp.log(n / (df.astype(jnp.float32) + 1.0))
+        doc_len = jnp.sum(tf.astype(jnp.float32), axis=-1)
+        norm = jax.lax.rsqrt(jnp.maximum(doc_len, 1.0))
+        scored = None
+        if config.scoring == "classic":
+            scored = (
+                jnp.sqrt(tf.astype(jnp.float32)) * (idf**2)[None, :] * norm[:, None]
+            ).astype(jnp.bfloat16)
+        return FakeWordsIndex(
+            tf=tf,
+            idf=idf,
+            norm=norm,
+            df=df,
+            scored=scored,
+            vectors=v if keep_vectors else None,
+        )
+
+    out_specs = FakeWordsIndex(
+        tf=P(axes, None),
+        idf=P(),
+        norm=P(axes),
+        df=P(),
+        scored=P(axes, None) if config.scoring == "classic" else None,
+        vectors=P(axes, None) if keep_vectors else None,
+    )
+    fn = jax.shard_map(
+        local_build, mesh=mesh, in_specs=P(axes, None), out_specs=out_specs
+    )
+    return fn(vectors)
+
+
+# --------------------------------------------------------------------------
+# Distributed search
+# --------------------------------------------------------------------------
+
+
+def _local_topk_tiled(
+    score_tile_fn, n_local: int, batch: int, depth: int, tile: int,
+    unroll: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """Streaming local top-d: score ``tile`` docs at a time and merge into a
+    running (B, depth) best set.  The (B, n_local) score matrix never
+    materializes in HBM — the index scan streams at full bandwidth (§Perf
+    iteration C2: cuts the cell's HBM traffic ~2.7x at web1b scale).
+
+    score_tile_fn(start) -> (B, tile) scores for docs [start, start+tile).
+    """
+    n_tiles = -(-n_local // tile)
+    d = min(depth, tile)
+    init_s = jnp.full((batch, depth), -jnp.inf, jnp.float32)
+    init_i = jnp.full((batch, depth), -1, jnp.int32)
+
+    def body(carry, t_idx):
+        best_s, best_i = carry
+        start = t_idx * tile
+        s = score_tile_fn(start).astype(jnp.float32)  # (B, tile)
+        ids = start + jnp.arange(tile, dtype=jnp.int32)[None, :]
+        valid = ids < n_local
+        s = jnp.where(valid, s, -jnp.inf)
+        loc_s, pos = jax.lax.top_k(s, d)
+        loc_i = jnp.take_along_axis(jnp.broadcast_to(ids, s.shape), pos, axis=-1)
+        all_s = jnp.concatenate([best_s, loc_s], axis=-1)
+        all_i = jnp.concatenate([best_i, loc_i], axis=-1)
+        top_s, top_pos = jax.lax.top_k(all_s, depth)
+        return (top_s, jnp.take_along_axis(all_i, top_pos, axis=-1)), None
+
+    (best_s, best_i), _ = jax.lax.scan(
+        body, (init_s, init_i), jnp.arange(n_tiles, dtype=jnp.int32),
+        unroll=unroll,  # analysis mode: HLO cost analysis counts a while
+        #                 body once; roofline lowers the unrolled loop
+    )
+    return best_s, best_i
+
+
+def make_sharded_search(
+    mesh: Mesh,
+    config: FakeWordsConfig,
+    axes: Sequence[str],
+    k: int = 10,
+    depth: int = 100,
+    rerank: bool = True,
+    keep_vectors: bool = True,
+    score_tile: int = 262_144,
+    tile_unroll: bool = False,
+):
+    """Returns a jit-able ``search(index, q_tf, queries) -> (scores, ids)``
+    closed over the mesh.  ``index`` leaves must be sharded as produced by
+    :func:`build_fakewords_sharded`; queries are replicated.  Local shards
+    larger than ``score_tile`` docs stream tile-by-tile with a running
+    top-d merge instead of materializing (B, n_local) scores."""
+    axes = tuple(axes)
+
+    def local_search(index: FakeWordsIndex, q_tf, queries):
+        shard = flat_axis_index(axes)
+        n_local = index.tf.shape[0]
+        d_local = min(depth, n_local)
+        if n_local > 2 * score_tile:
+            if config.scoring == "classic":
+                keep = fakewords.df_prune_mask(
+                    index.df, index.num_docs, config.df_max_ratio)
+                qv = (q_tf * keep).astype(jnp.bfloat16)
+
+                def tile_scores(start):
+                    rows = jax.lax.dynamic_slice_in_dim(
+                        index.scored, start, score_tile, axis=0)
+                    return jnp.einsum("bt,nt->bn", qv, rows,
+                                      preferred_element_type=jnp.float32)
+            elif config.signed_store:
+                # index.tf holds the SIGNED (N, m) matrix; q arrives as the
+                # (B, 2m) sign-split counts -> signed (B, m) query.
+                m = index.tf.shape[1]
+                keep2 = fakewords.df_prune_mask(
+                    index.df, index.num_docs, config.df_max_ratio)
+                keep = keep2[:m] & keep2[m:] if keep2.shape[0] == 2 * m else keep2[:m]
+                qv = (q_tf[:, :m] - q_tf[:, m:]).astype(jnp.int32) * keep
+
+                def tile_scores(start):
+                    rows = jax.lax.dynamic_slice_in_dim(
+                        index.tf, start, score_tile, axis=0)
+                    return jnp.einsum(
+                        "bt,nt->bn", qv, rows.astype(jnp.int32),
+                        preferred_element_type=jnp.int32)
+            else:
+                keep = fakewords.df_prune_mask(
+                    index.df, index.num_docs, config.df_max_ratio)
+                m = index.num_terms // 2
+                u = (q_tf[:, :m] - q_tf[:, m:]).astype(jnp.int32)
+                qv = jnp.concatenate([u, -u], axis=-1) * keep
+
+                def tile_scores(start):
+                    rows = jax.lax.dynamic_slice_in_dim(
+                        index.tf, start, score_tile, axis=0)
+                    return jnp.einsum(
+                        "bt,nt->bn", qv, rows.astype(jnp.int32),
+                        preferred_element_type=jnp.int32)
+
+            loc_s, loc_i = _local_topk_tiled(
+                tile_scores, n_local, q_tf.shape[0], d_local, score_tile,
+                unroll=tile_unroll)
+        else:
+            if config.scoring == "classic":
+                scores = fakewords.classic_scores(index, q_tf, config.df_max_ratio)
+            else:
+                scores = fakewords.dot_scores(index, q_tf, config.df_max_ratio)
+            loc_s, loc_i = jax.lax.top_k(scores, d_local)  # (B, d_local)
+        if rerank:
+            # Exact rerank against *local* originals: no cross-shard gather.
+            cand = index.vectors[loc_i]  # (B, d_local, dim)
+            loc_s = jnp.einsum("bd,bcd->bc", queries, cand)
+        glob_i = loc_i + shard * n_local
+        # Tiny collective: d*(score,id) per shard.
+        all_s = jax.lax.all_gather(loc_s, axes, axis=1, tiled=True)
+        all_i = jax.lax.all_gather(glob_i, axes, axis=1, tiled=True)
+        top_s, pos = jax.lax.top_k(all_s, k)
+        top_i = jnp.take_along_axis(all_i, pos, axis=-1)
+        return top_s, top_i
+
+    in_specs = (
+        FakeWordsIndex(
+            tf=P(axes, None),
+            idf=P(),
+            norm=P(axes),
+            df=P(),
+            scored=P(axes, None) if config.scoring == "classic" else None,
+            vectors=P(axes, None) if keep_vectors else None,
+        ),
+        P(),  # q_tf replicated
+        P(),  # queries replicated
+    )
+    # After the full all-gather + top_k the outputs are bitwise-replicated,
+    # but the static VMA checker cannot prove it; disable the check.
+    fn = jax.shard_map(
+        local_search,
+        mesh=mesh,
+        in_specs=in_specs,
+        out_specs=(P(), P()),
+        check_vma=False,
+    )
+    return jax.jit(fn)
+
+
+def shard_index(mesh: Mesh, index: FakeWordsIndex, axes: Sequence[str]) -> FakeWordsIndex:
+    """Place a host-built index onto the mesh with doc-dimension sharding."""
+    axes = tuple(axes)
+
+    def put(x, spec):
+        return jax.device_put(x, NamedSharding(mesh, spec)) if x is not None else None
+
+    return FakeWordsIndex(
+        tf=put(index.tf, P(axes, None)),
+        idf=put(index.idf, P()),
+        norm=put(index.norm, P(axes)),
+        df=put(index.df, P()),
+        scored=put(index.scored, P(axes, None)),
+        vectors=put(index.vectors, P(axes, None)),
+    )

@@ -1,0 +1,28 @@
+"""Evaluation metrics: the paper's R@(k,d) plus helpers."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def recall_at(truth_ids: jax.Array, retrieved_ids: jax.Array) -> jax.Array:
+    """R@(k,d): fraction of the true top-k (truth_ids: (B,k)) present among
+    the retrieved top-d (retrieved_ids: (B,d)), averaged over queries.
+    Ground truth comes from exact brute force (paper §3); -1 ids are padding.
+    """
+    hits = (truth_ids[:, :, None] == retrieved_ids[:, None, :]) & (
+        truth_ids[:, :, None] >= 0
+    )
+    per_query = jnp.sum(jnp.any(hits, axis=-1), axis=-1) / truth_ids.shape[1]
+    return jnp.mean(per_query)
+
+
+def recall_curve(truth_ids: jax.Array, retrieved_ids: jax.Array, depths) -> dict:
+    """R@(k,d) for several retrieval depths d from one deep retrieval."""
+    return {d: float(recall_at(truth_ids, retrieved_ids[:, :d])) for d in depths}
+
+
+def overlap(a_ids: jax.Array, b_ids: jax.Array) -> jax.Array:
+    """Mean fraction of shared ids between two (B,k) result sets."""
+    hits = (a_ids[:, :, None] == b_ids[:, None, :]) & (a_ids[:, :, None] >= 0)
+    return jnp.mean(jnp.sum(jnp.any(hits, axis=-1), axis=-1) / a_ids.shape[1])

@@ -1,0 +1,169 @@
+"""Fake-words ANN encoding (paper §2, after Amato et al. 2016).
+
+A unit-normalized vector w = (w_1..w_m) becomes a bag of synthetic terms where
+feature i's term tau_i appears round(Q * w_i) times.  Term frequency is then
+proportional to the feature value, so Lucene's tf-idf match score approximates
+the inner product (== cosine on unit vectors).
+
+TPU adaptation (DESIGN.md §3): negative features are handled by sign-splitting
+into 2m terms (Amato et al.'s CReLU-style trick); the posting lists become a
+dense (N, 2m) int8 term-frequency matrix and the inverted-index scoring loop
+becomes an int8 GEMM on the MXU.  Lucene semantics preserved:
+
+  * ClassicSimilarity: score(q,d) = sum_t tf_q(t) * sqrt(tf_d(t)) * idf(t)^2
+    * norm(d), idf(t) = 1 + ln(N/(df(t)+1)), norm(d) = 1/sqrt(doc_len(d)).
+    (queryNorm and coord are rank-preserving constants; dropped.)
+  * High-df term filtering at search time = zeroing pruned query columns
+    (identical to Lucene dropping those terms from the query).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bruteforce
+from repro.core.types import FakeWordsConfig, FakeWordsIndex
+
+
+# --------------------------------------------------------------------------
+# Encoding
+# --------------------------------------------------------------------------
+
+
+def encode(vectors: jax.Array, quantization: int, dtype=jnp.int8) -> jax.Array:
+    """Sign-split quantized term frequencies: (N, m) floats -> (N, 2m) ints.
+
+    Columns [0, m) = round(Q * relu(w)); columns [m, 2m) = round(Q * relu(-w)).
+    Assumes unit-normalized input (|w_i| <= 1 => tf <= Q <= 127 fits int8).
+    """
+    q = jnp.asarray(quantization, vectors.dtype)
+    pos = jnp.round(q * jnp.maximum(vectors, 0.0))
+    neg = jnp.round(q * jnp.maximum(-vectors, 0.0))
+    tf = jnp.concatenate([pos, neg], axis=-1)
+    return tf.astype(dtype)
+
+
+def doc_stats(tf: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """(df, idf, norm) from a term-frequency matrix, Lucene-style."""
+    n = tf.shape[0]
+    tf_f = tf.astype(jnp.float32)
+    df = jnp.sum(tf > 0, axis=0).astype(jnp.int32)  # (2m,)
+    idf = 1.0 + jnp.log(n / (df.astype(jnp.float32) + 1.0))
+    doc_len = jnp.sum(tf_f, axis=-1)  # (N,)
+    norm = jax.lax.rsqrt(jnp.maximum(doc_len, 1.0))
+    return df, idf, norm
+
+
+def build(
+    vectors: jax.Array,
+    config: FakeWordsConfig,
+    keep_vectors: bool = True,
+    normalized: bool = False,
+) -> FakeWordsIndex:
+    """Build the fake-words index.  Unlike Lucene's O(Q) repeated-token
+    indexing cost per feature, we store tf directly (O(1) per feature)."""
+    v = vectors if normalized else bruteforce.l2_normalize(vectors)
+    tf = encode(v, config.quantization, config.store_dtype)
+    df, idf, norm = doc_stats(tf)
+    scored = None
+    if config.scoring == "classic":
+        # Precompute the per-(doc, term) scoring matrix so query scoring is a
+        # single GEMM: sqrt(tf_d) * idf^2 * norm_d, stored bf16.
+        scored = (
+            jnp.sqrt(tf.astype(jnp.float32))
+            * (idf**2)[None, :]
+            * norm[:, None]
+        ).astype(jnp.bfloat16)
+    return FakeWordsIndex(
+        tf=tf,
+        idf=idf,
+        norm=norm,
+        df=df,
+        scored=scored,
+        vectors=v if keep_vectors else None,
+    )
+
+
+def encode_queries(
+    queries: jax.Array, config: FakeWordsConfig, normalized: bool = False
+) -> jax.Array:
+    q = queries if normalized else bruteforce.l2_normalize(queries)
+    return encode(q, config.quantization, jnp.int32)
+
+
+def df_prune_mask(df: jax.Array, num_docs: int, df_max_ratio: float) -> jax.Array:
+    """Boolean keep-mask over terms (True = keep).  The paper's search-time
+    high-frequency filtering; also the df-pruning roofline lever."""
+    if df_max_ratio >= 1.0:
+        return jnp.ones_like(df, dtype=bool)
+    return df <= jnp.int32(df_max_ratio * num_docs)
+
+
+# --------------------------------------------------------------------------
+# Scoring
+# --------------------------------------------------------------------------
+
+
+def classic_scores(
+    index: FakeWordsIndex, q_tf: jax.Array, df_max_ratio: float = 1.0
+) -> jax.Array:
+    """Lucene ClassicSimilarity scores for all docs: (B, N).
+
+    scored[d,t] already folds sqrt(tf_d)*idf^2*norm_d; the query side
+    contributes its own tf (repeated query tokens sum in Lucene)."""
+    assert index.scored is not None, "index was built with scoring='dot'"
+    keep = df_prune_mask(index.df, index.num_docs, df_max_ratio)
+    qv = (q_tf * keep).astype(jnp.bfloat16)
+    return jnp.einsum(
+        "bt,nt->bn", qv, index.scored, preferred_element_type=jnp.float32
+    )
+
+
+def dot_scores(
+    index: FakeWordsIndex, q_tf: jax.Array, df_max_ratio: float = 1.0
+) -> jax.Array:
+    """Idealized integer-dot scores: <T_d, t_q>/Q^2 ~= cosine.
+
+    With u = q+ - q- (the signed quantized query, m dims), the signed dot
+    (d+ - d-) . u equals [d+; d-] . [u; -u], so scoring stays a single GEMM
+    over the stored sign-split (N, 2m) matrix with the query lifted to
+    [u; -u]."""
+    keep = df_prune_mask(index.df, index.num_docs, df_max_ratio)
+    m = index.num_terms // 2
+    u = (q_tf[:, :m] - q_tf[:, m:]).astype(jnp.int32)
+    qv = jnp.concatenate([u, -u], axis=-1) * keep
+    return jnp.einsum(
+        "bt,nt->bn",
+        qv,
+        index.tf.astype(jnp.int32),
+        preferred_element_type=jnp.int32,
+    ).astype(jnp.float32)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "depth", "scoring", "rerank", "df_max_ratio")
+)
+def search(
+    index: FakeWordsIndex,
+    q_tf: jax.Array,
+    queries: Optional[jax.Array],
+    k: int = 10,
+    depth: int = 100,
+    scoring: str = "classic",
+    rerank: bool = False,
+    df_max_ratio: float = 1.0,
+) -> Tuple[jax.Array, jax.Array]:
+    """Two-phase search: match depth-d candidates on the fake-words index,
+    optionally exact-rerank to k using the stored original vectors."""
+    if scoring == "classic":
+        scores = classic_scores(index, q_tf, df_max_ratio)
+    else:
+        scores = dot_scores(index, q_tf, df_max_ratio)
+    d_s, d_i = jax.lax.top_k(scores, depth)
+    if not rerank:
+        return d_s[:, :k], d_i[:, :k]
+    assert index.vectors is not None and queries is not None
+    return bruteforce.rerank_exact(index.vectors, queries, d_i, k, normalized=True)

@@ -1,0 +1,106 @@
+"""AnnIndex facade: one entry point over the three paper encodings.
+
+    idx = AnnIndex.build(vectors, FakeWordsConfig(quantization=50))
+    scores, ids = idx.search(queries, k=10, depth=100, rerank=True)
+
+All state lives in pytree index containers, so an AnnIndex can be sharded
+(``jax.device_put`` with a NamedSharding) and searched under ``jit`` /
+``shard_map`` - see ``core/distributed.py`` for the pod-scale path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bruteforce, fakewords, kdtree, lexical_lsh
+from repro.core.types import (
+    FakeWordsConfig,
+    FakeWordsIndex,
+    KdTreeConfig,
+    KdTreeIndex,
+    LexicalLshConfig,
+    LshIndex,
+)
+
+AnyConfig = Union[FakeWordsConfig, LexicalLshConfig, KdTreeConfig]
+AnyIndex = Union[FakeWordsIndex, LshIndex, KdTreeIndex]
+
+
+@dataclasses.dataclass
+class AnnIndex:
+    config: AnyConfig
+    index: AnyIndex
+
+    @classmethod
+    def build(
+        cls, vectors: jax.Array, config: AnyConfig, keep_vectors: bool = True
+    ) -> "AnnIndex":
+        vectors = bruteforce.l2_normalize(jnp.asarray(vectors))
+        if isinstance(config, FakeWordsConfig):
+            idx = fakewords.build(vectors, config, keep_vectors, normalized=True)
+        elif isinstance(config, LexicalLshConfig):
+            idx = lexical_lsh.build(vectors, config, keep_vectors, normalized=True)
+        elif isinstance(config, KdTreeConfig):
+            idx = kdtree.build(vectors, config, keep_vectors, normalized=True)
+        else:
+            raise TypeError(f"unknown config {type(config)}")
+        return cls(config=config, index=idx)
+
+    @property
+    def method(self) -> str:
+        return {
+            FakeWordsIndex: "fake-words",
+            LshIndex: "lexical-lsh",
+            KdTreeIndex: "kd-tree",
+        }[type(self.index)]
+
+    def nbytes(self) -> int:
+        return self.index.nbytes()
+
+    def encode_queries(self, queries: jax.Array) -> jax.Array:
+        """Method-specific query representation (tf row / signature /
+        reduced point)."""
+        q = bruteforce.l2_normalize(jnp.asarray(queries))
+        if isinstance(self.config, FakeWordsConfig):
+            return fakewords.encode_queries(q, self.config, normalized=True)
+        if isinstance(self.config, LexicalLshConfig):
+            return lexical_lsh.encode(q, self.config)
+        return kdtree.reduce_queries(self.index, q, normalized=True)
+
+    def search(
+        self,
+        queries: jax.Array,
+        k: int = 10,
+        depth: int = 100,
+        rerank: bool = False,
+    ) -> Tuple[jax.Array, jax.Array]:
+        queries = bruteforce.l2_normalize(jnp.asarray(queries))
+        if isinstance(self.config, FakeWordsConfig):
+            q_tf = fakewords.encode_queries(queries, self.config, normalized=True)
+            return fakewords.search(
+                self.index,
+                q_tf,
+                queries,
+                k=k,
+                depth=depth,
+                scoring=self.config.scoring,
+                rerank=rerank,
+                df_max_ratio=self.config.df_max_ratio,
+            )
+        if isinstance(self.config, LexicalLshConfig):
+            sig_q = lexical_lsh.encode(queries, self.config)
+            return lexical_lsh.search(
+                self.index, sig_q, queries, k=k, depth=depth, rerank=rerank
+            )
+        return kdtree.search(
+            self.index,
+            queries,
+            k=k,
+            depth=depth,
+            backend=self.config.backend,
+            rerank=rerank,
+            normalized=True,
+        )

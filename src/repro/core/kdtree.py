@@ -1,0 +1,239 @@
+"""k-d tree ANN over dimensionality-reduced vectors (paper §2, third method).
+
+Lucene's BKD point index supports at most 8 dimensions, so the paper reduces
+300-d embeddings (PCA or PPA->PCA->PPA) and indexes the reduced points.
+Nearest-neighbor search is exact *in the reduced space* (L2); the recall
+collapse the paper reports (R@(10,100) <= 0.03) comes from the reduction, not
+the tree.
+
+Two backends (DESIGN.md §3):
+
+* ``tree``  - a faithful array-encoded balanced k-d tree searched with a
+  batched ``lax.while_loop`` DFS + plane-distance pruning.  Correct, but
+  data-dependent control flow with no MXU use: documented as TPU-hostile.
+  Included because it IS the paper's data structure.
+* ``scan``  - the TPU-idiomatic equivalent: brute-scan the (N, <=8) reduced
+  matrix (a skinny, memory-bound streaming matmul).  Returns *identical*
+  results (exact L2 NN in the reduced space) at full HBM streaming bandwidth.
+
+Both return squared-L2 "scores" negated so that bigger = better, matching the
+top-k convention used everywhere else.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bruteforce, pca
+from repro.core.types import KdTreeConfig, KdTreeIndex
+
+
+# --------------------------------------------------------------------------
+# Host-side tree construction (numpy; indexes are built offline)
+# --------------------------------------------------------------------------
+
+
+def _build_arrays(points: np.ndarray, leaf_size: int):
+    """Balanced implicit k-d tree: internal node i has children 2i+1 / 2i+2;
+    leaves are contiguous slots of ``perm``.  Splits on the widest dimension
+    at the median (Lucene BKD's split heuristic)."""
+    n, dims = points.shape
+    n_leaves = max(1, 1 << math.ceil(math.log2(max(1, math.ceil(n / leaf_size)))))
+    depth = int(math.log2(n_leaves))
+    n_internal = n_leaves - 1
+    split_dim = np.zeros((max(n_internal, 1),), np.int32)
+    split_val = np.zeros((max(n_internal, 1),), np.float32)
+    cap = n_leaves * leaf_size
+    if cap < n:
+        leaf_size = math.ceil(n / n_leaves)
+        cap = n_leaves * leaf_size
+    perm = np.full((n_leaves, leaf_size), -1, np.int32)
+
+    def rec(node: int, ids: np.ndarray, level: int):
+        if level == depth:  # leaf
+            leaf = node - n_internal
+            perm[leaf, : len(ids)] = ids
+            return
+        pts = points[ids]
+        dim = int(np.argmax(pts.max(axis=0) - pts.min(axis=0))) if len(ids) else 0
+        order = ids[np.argsort(points[ids, dim], kind="stable")] if len(ids) else ids
+        half = len(order) // 2
+        val = float(points[order[half], dim]) if len(order) else 0.0
+        split_dim[node] = dim
+        split_val[node] = val
+        rec(2 * node + 1, order[:half], level + 1)
+        rec(2 * node + 2, order[half:], level + 1)
+
+    rec(0, np.arange(n, dtype=np.int32), 0)
+    return split_dim, split_val, perm, depth
+
+
+def build(
+    vectors: jax.Array,
+    config: KdTreeConfig,
+    keep_vectors: bool = True,
+    normalized: bool = False,
+) -> KdTreeIndex:
+    v = vectors if normalized else bruteforce.l2_normalize(vectors)
+    model, reduced = pca.fit_reduction(v, config.dims, config.reduction, config.ppa_remove)
+    reduced = reduced.astype(jnp.float32)
+    split_dim = split_val = perm = None
+    if config.backend == "tree":
+        sd, sv, pm, _ = _build_arrays(np.asarray(reduced), config.leaf_size)
+        split_dim, split_val, perm = jnp.asarray(sd), jnp.asarray(sv), jnp.asarray(pm)
+    return KdTreeIndex(
+        reduced=reduced,
+        reduction=model,
+        split_dim=split_dim,
+        split_val=split_val,
+        perm=perm,
+        vectors=v if keep_vectors else None,
+    )
+
+
+def reduce_queries(index: KdTreeIndex, queries: jax.Array, normalized=False) -> jax.Array:
+    q = queries if normalized else bruteforce.l2_normalize(queries)
+    return pca.apply_reduction(index.reduction, q).astype(jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# Backend (a): faithful batched tree traversal
+# --------------------------------------------------------------------------
+
+
+def _tree_knn_single(
+    q: jax.Array,  # (dims,)
+    reduced: jax.Array,  # (N, dims)
+    split_dim: jax.Array,
+    split_val: jax.Array,
+    perm: jax.Array,  # (n_leaves, leaf_size)
+    k: int,
+) -> Tuple[jax.Array, jax.Array]:
+    """Single-query DFS with plane-distance pruning and a fixed-size stack."""
+    n_leaves, leaf_size = perm.shape
+    n_internal = n_leaves - 1
+    depth = int(math.log2(n_leaves))
+    stack_cap = 2 * depth + 4
+
+    # best-k kept unsorted; worst tracked by max().
+    best_d = jnp.full((k,), jnp.inf, jnp.float32)
+    best_i = jnp.full((k,), -1, jnp.int32)
+    stack_node = jnp.zeros((stack_cap,), jnp.int32)
+    stack_pd2 = jnp.zeros((stack_cap,), jnp.float32)  # squared plane distance
+    sp = jnp.int32(1)  # root pushed with plane-dist 0
+
+    def scan_leaf(leaf, best_d, best_i):
+        ids = perm[leaf]  # (leaf_size,)
+        pts = reduced[jnp.maximum(ids, 0)]  # (leaf_size, dims)
+        d2 = jnp.sum((pts - q[None, :]) ** 2, axis=-1)
+        d2 = jnp.where(ids >= 0, d2, jnp.inf)
+        all_d = jnp.concatenate([best_d, d2])
+        all_i = jnp.concatenate([best_i, ids])
+        neg_top, pos = jax.lax.top_k(-all_d, k)
+        return -neg_top, all_i[pos]
+
+    def cond(state):
+        sp, *_ = state
+        return sp > 0
+
+    def body(state):
+        sp, stack_node, stack_pd2, best_d, best_i = state
+        sp = sp - 1
+        node = stack_node[sp]
+        pd2 = stack_pd2[sp]
+        worst = jnp.max(best_d)
+        prune = pd2 > worst
+
+        def visit(args):
+            sp, stack_node, stack_pd2, best_d, best_i = args
+            is_leaf = node >= n_internal
+
+            def leaf_fn(args):
+                sp, sn, spd, bd, bi = args
+                bd, bi = scan_leaf(node - n_internal, bd, bi)
+                return sp, sn, spd, bd, bi
+
+            def internal_fn(args):
+                sp, sn, spd, bd, bi = args
+                dim = split_dim[jnp.minimum(node, n_internal - 1)]
+                val = split_val[jnp.minimum(node, n_internal - 1)]
+                diff = q[dim] - val
+                near = jnp.where(diff < 0, 2 * node + 1, 2 * node + 2)
+                far = jnp.where(diff < 0, 2 * node + 2, 2 * node + 1)
+                # push far (pruned on pop by plane distance), then near.
+                sn = sn.at[sp].set(far)
+                spd = spd.at[sp].set(diff * diff)
+                sn = sn.at[sp + 1].set(near)
+                spd = spd.at[sp + 1].set(jnp.float32(0))
+                return sp + 2, sn, spd, bd, bi
+
+            return jax.lax.cond(is_leaf, leaf_fn, internal_fn, args)
+
+        return jax.lax.cond(
+            prune,
+            lambda a: a,
+            visit,
+            (sp, stack_node, stack_pd2, best_d, best_i),
+        )
+
+    state = (sp, stack_node, stack_pd2, best_d, best_i)
+    _, _, _, best_d, best_i = jax.lax.while_loop(cond, body, state)
+    order = jnp.argsort(best_d)
+    return -best_d[order], best_i[order]
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def tree_search(
+    index: KdTreeIndex, q_reduced: jax.Array, k: int
+) -> Tuple[jax.Array, jax.Array]:
+    fn = functools.partial(
+        _tree_knn_single,
+        reduced=index.reduced,
+        split_dim=index.split_dim,
+        split_val=index.split_val,
+        perm=index.perm,
+        k=k,
+    )
+    return jax.vmap(fn)(q_reduced)
+
+
+# --------------------------------------------------------------------------
+# Backend (b): TPU-idiomatic reduced-space brute scan
+# --------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def scan_search(
+    index: KdTreeIndex, q_reduced: jax.Array, k: int
+) -> Tuple[jax.Array, jax.Array]:
+    """Exact L2 NN in the reduced space as a streaming matmul:
+    ||q - d||^2 = ||q||^2 + ||d||^2 - 2 q.d  (||q||^2 is rank-constant)."""
+    d_norm2 = jnp.sum(index.reduced**2, axis=-1)  # (N,)
+    dots = q_reduced @ index.reduced.T  # (B, N)
+    neg_d2 = 2.0 * dots - d_norm2[None, :]
+    return jax.lax.top_k(neg_d2, k)
+
+
+def search(
+    index: KdTreeIndex,
+    queries: jax.Array,
+    k: int = 10,
+    depth: int = 100,
+    backend: str = "scan",
+    rerank: bool = False,
+    normalized: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    qr = reduce_queries(index, queries, normalized)
+    if backend == "tree":
+        d_s, d_i = tree_search(index, qr, depth)
+    else:
+        d_s, d_i = scan_search(index, qr, depth)
+    if not rerank:
+        return d_s[:, :k], d_i[:, :k]
+    assert index.vectors is not None
+    return bruteforce.rerank_exact(index.vectors, queries, d_i, k, normalized=normalized)

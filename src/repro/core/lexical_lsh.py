@@ -1,0 +1,143 @@
+"""Lexical LSH ANN encoding (paper §2).
+
+Each feature w_i is rounded to the first decimal place and tagged with its
+feature index (e.g. w = {0.12, 0.43, 0.74} -> tokens ``1_0.1 2_0.4 3_0.7``),
+optionally aggregated into n-grams, then passed through MinHash (Lucene's
+MinHashFilter) into ``b`` buckets with ``h`` hash functions.  A vector is
+represented by its LSH signature tokens; matching counts signature collisions.
+
+TPU adaptation (DESIGN.md §3): token strings become 32-bit token ids (the
+string is only ever a carrier for identity); a document's signature set is a
+dense (h*b,) uint32 row with a sentinel for empty buckets, and match scoring
+is an integer equality-popcount over signature slots - a VPU-friendly
+compare+reduce realized by the ``lsh_match`` Pallas kernel (jnp fallback
+here).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bruteforce
+from repro.core.types import LexicalLshConfig, LshIndex
+
+_GOLDEN = np.uint32(0x9E3779B9)
+_SENTINEL = np.uint32(0xFFFFFFFF)
+
+
+def mix32(x: jax.Array) -> jax.Array:
+    """splitmix32 finalizer - a cheap, well-dispersed 32-bit hash."""
+    x = x.astype(jnp.uint32)
+    x = (x ^ (x >> 16)) * np.uint32(0x7FEB352D)
+    x = (x ^ (x >> 15)) * np.uint32(0x846CA68B)
+    return x ^ (x >> 16)
+
+
+def hash_seeds(hashes: int, seed: int) -> jax.Array:
+    """Derive per-hash-function seeds deterministically from ``seed``."""
+    base = jnp.arange(1, hashes + 1, dtype=jnp.uint32) * _GOLDEN
+    return mix32(base + np.uint32(seed & 0xFFFFFFFF))
+
+
+def tokenize(vectors: jax.Array, config: LexicalLshConfig) -> jax.Array:
+    """Quantize + tag features -> (N, T) uint32 token ids.
+
+    Token for feature i with rounded value r = round(w_i, decimals) is the
+    hash of (i, r) - the integer realization of the string ``i_r``.  n-grams
+    combine ``n`` adjacent feature tokens into one id.
+    """
+    scale = float(10**config.decimals)
+    codes = jnp.round(vectors * scale).astype(jnp.int32)  # (N, m)
+    # Lift signed codes to uint32 (offset keeps distinct codes distinct).
+    ucodes = (codes + jnp.int32(1 << 16)).astype(jnp.uint32)
+    feat = jnp.arange(vectors.shape[-1], dtype=jnp.uint32)
+    toks = mix32(feat * _GOLDEN + ucodes)  # (N, m)
+    for _ in range(config.ngram - 1):
+        toks = mix32(toks[..., :-1] * _GOLDEN ^ toks[..., 1:])
+    return toks
+
+
+def minhash_signatures(tokens: jax.Array, config: LexicalLshConfig) -> jax.Array:
+    """MinHash tokens into (N, h*b) uint32 signatures.
+
+    For hash function k, every token gets hv = mix32(tok ^ seed_k); it lands
+    in bucket hv % b and the bucket keeps the minimum hv (Lucene
+    MinHashFilter with hashCount=h, bucketCount=b).  Empty buckets hold the
+    sentinel (never matches: queries and docs hash identically, so a shared
+    empty bucket carries no evidence of similarity).
+    """
+    n, _ = tokens.shape
+    b, h = config.buckets, config.hashes
+    seeds = hash_seeds(h, config.seed)
+    rows = jnp.arange(n, dtype=jnp.int32)[:, None]
+
+    sigs = []
+    for k in range(h):
+        hv = mix32(tokens ^ seeds[k])  # (N, T)
+        bucket = (hv % np.uint32(b)).astype(jnp.int32)
+        sig_k = jnp.full((n, b), _SENTINEL, dtype=jnp.uint32)
+        sig_k = sig_k.at[rows, bucket].min(hv)
+        sigs.append(sig_k)
+    return jnp.concatenate(sigs, axis=-1)  # (N, h*b)
+
+
+def encode(vectors: jax.Array, config: LexicalLshConfig) -> jax.Array:
+    return minhash_signatures(tokenize(vectors, config), config)
+
+
+def build(
+    vectors: jax.Array,
+    config: LexicalLshConfig,
+    keep_vectors: bool = True,
+    normalized: bool = False,
+) -> LshIndex:
+    v = vectors if normalized else bruteforce.l2_normalize(vectors)
+    return LshIndex(sig=encode(v, config), vectors=v if keep_vectors else None)
+
+
+def match_scores(
+    sig_q: jax.Array, sig_d: jax.Array, doc_tile: int = 1024
+) -> jax.Array:
+    """(B, N) collision counts: #slots where signatures agree (non-sentinel).
+
+    jnp reference realization, tiled over documents to bound the (B, tile, S)
+    broadcast-compare working set; the Pallas ``lsh_match`` kernel is the TPU
+    hot path.
+    """
+    b, s = sig_q.shape
+    n = sig_d.shape[0]
+    n_pad = (-n) % doc_tile
+    if n_pad:
+        pad = jnp.full((n_pad, s), _SENTINEL, dtype=sig_d.dtype)
+        sig_d = jnp.concatenate([sig_d, pad], axis=0)
+    tiles = sig_d.reshape(-1, doc_tile, s)
+    valid_q = sig_q != _SENTINEL  # (B, S)
+
+    def body(_, tile):
+        eq = (sig_q[:, None, :] == tile[None, :, :]) & valid_q[:, None, :]
+        return None, jnp.sum(eq, axis=-1, dtype=jnp.int32)  # (B, tile)
+
+    _, per_tile = jax.lax.scan(body, None, tiles)
+    scores = jnp.moveaxis(per_tile, 0, 1).reshape(b, -1)
+    return scores[:, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("k", "depth", "rerank"))
+def search(
+    index: LshIndex,
+    sig_q: jax.Array,
+    queries: Optional[jax.Array],
+    k: int = 10,
+    depth: int = 100,
+    rerank: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    scores = match_scores(sig_q, index.sig).astype(jnp.float32)
+    d_s, d_i = jax.lax.top_k(scores, depth)
+    if not rerank:
+        return d_s[:, :k], d_i[:, :k]
+    assert index.vectors is not None and queries is not None
+    return bruteforce.rerank_exact(index.vectors, queries, d_i, k, normalized=True)

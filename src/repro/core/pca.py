@@ -1,0 +1,110 @@
+"""Dimensionality reduction for the k-d tree path.
+
+The paper reduces 300-d embeddings to <= 8 dims (Lucene's BKD limit) with
+either plain PCA (Wold et al. 1987) or the PPA->PCA->PPA pipeline of Raunak
+(2017), where PPA is the "all-but-the-top" post-processing of Mu et al.
+(2017): subtract the mean, remove the projections onto the top-D principal
+components (D ~ dim/100).
+
+All fits are exact eigendecompositions of the (dim x dim) covariance - dim is
+300 here, so this is tiny; for a pod-scale corpus only the covariance
+accumulation streams over the (sharded) data, which is a single
+``psum``-able matmul.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class PcaModel:
+    mean: jax.Array  # (dim,)
+    components: jax.Array  # (dim, out_dim), columns = top eigenvectors
+
+
+def pca_fit(x: jax.Array, out_dim: int) -> PcaModel:
+    """Fit PCA; returns projection onto the top ``out_dim`` components."""
+    mean = jnp.mean(x, axis=0)
+    xc = x - mean
+    cov = (xc.T @ xc) / x.shape[0]
+    # eigh returns ascending eigenvalues; take the trailing columns.
+    _, vecs = jnp.linalg.eigh(cov)
+    comps = vecs[:, ::-1][:, :out_dim]
+    return PcaModel(mean=mean, components=comps)
+
+
+def pca_apply(model: PcaModel, x: jax.Array) -> jax.Array:
+    return (x - model.mean) @ model.components
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class PpaModel:
+    """All-but-the-top (Mu et al.): remove mean + top-D components."""
+
+    mean: jax.Array  # (dim,)
+    top: jax.Array  # (dim, D)
+
+
+def ppa_fit(x: jax.Array, remove: int) -> PpaModel:
+    mean = jnp.mean(x, axis=0)
+    xc = x - mean
+    cov = (xc.T @ xc) / x.shape[0]
+    _, vecs = jnp.linalg.eigh(cov)
+    top = vecs[:, ::-1][:, :remove]
+    return PpaModel(mean=mean, top=top)
+
+
+def ppa_apply(model: PpaModel, x: jax.Array) -> jax.Array:
+    xc = x - model.mean
+    return xc - (xc @ model.top) @ model.top.T
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class PpaPcaPpaModel:
+    ppa1: PpaModel
+    pca: PcaModel
+    ppa2: PpaModel
+
+
+def ppa_pca_ppa_fit(x: jax.Array, out_dim: int, remove: int = 3) -> PpaPcaPpaModel:
+    """Raunak (2017): PPA -> PCA(out_dim) -> PPA, fitted stage by stage."""
+    ppa1 = ppa_fit(x, remove)
+    x1 = ppa_apply(ppa1, x)
+    pca = pca_fit(x1, out_dim)
+    x2 = pca_apply(pca, x1)
+    # Second PPA removes min(remove, out_dim - 1) comps of the reduced space.
+    r2 = max(1, min(remove, out_dim - 1))
+    ppa2 = ppa_fit(x2, r2)
+    return PpaPcaPpaModel(ppa1=ppa1, pca=pca, ppa2=ppa2)
+
+
+def ppa_pca_ppa_apply(model: PpaPcaPpaModel, x: jax.Array) -> jax.Array:
+    return ppa_apply(model.ppa2, pca_apply(model.pca, ppa_apply(model.ppa1, x)))
+
+
+def fit_reduction(
+    x: jax.Array, out_dim: int, kind: str, ppa_remove: int = 3
+):
+    """Dispatch helper used by the k-d tree index builder."""
+    if kind == "pca":
+        model = pca_fit(x, out_dim)
+        return model, pca_apply(model, x)
+    if kind == "ppa-pca-ppa":
+        model = ppa_pca_ppa_fit(x, out_dim, ppa_remove)
+        return model, ppa_pca_ppa_apply(model, x)
+    raise ValueError(f"unknown reduction kind {kind!r}")
+
+
+def apply_reduction(model, x: jax.Array) -> jax.Array:
+    if isinstance(model, PcaModel):
+        return pca_apply(model, x)
+    if isinstance(model, PpaPcaPpaModel):
+        return ppa_pca_ppa_apply(model, x)
+    raise TypeError(f"unknown reduction model {type(model)}")

@@ -1,0 +1,223 @@
+"""Typed configuration and index containers for the ANN core.
+
+The paper (Teofili & Lin, 2019) adapts Lucene's inverted index to dense-vector
+ANN search via three encodings: "fake words", "lexical LSH" and k-d trees over
+dimensionality-reduced vectors.  Each encoding gets a config dataclass here and
+an index container (a pytree of device arrays) so that the whole index can be
+sharded with ``jax.device_put`` / ``NamedSharding`` and passed through ``jit``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# --------------------------------------------------------------------------
+# Method configs
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class FakeWordsConfig:
+    """Fake-words encoding (Amato et al. 2016, as used in the paper).
+
+    quantization: Q.  tf(tau_i, d) = round(Q * w_i) for the sign-split
+        feature; the paper sweeps Q in {30,40,50,60,70}.
+    df_max_ratio: search-time high-document-frequency term filtering.  Terms
+        whose document frequency exceeds ``df_max_ratio * N`` are dropped from
+        the *query* (the paper's "filter highly-frequent terms at search
+        time"); 1.0 disables it.
+    scoring: "classic" = Lucene ClassicSimilarity (tf-idf variant:
+        sum_t tf_q(t) * sqrt(tf_d(t)) * idf(t)^2 * norm(d));
+        "dot" = raw quantized inner product (idealized mode,
+        <T_d, t_q>/Q^2 ~= cosine on unit vectors).
+    store_dtype: dtype for the stored term-frequency matrix.  Q <= 127 keeps
+        the paper's whole sweep inside int8 (the MXU's fast integer path).
+    """
+
+    quantization: int = 50
+    df_max_ratio: float = 1.0
+    scoring: str = "classic"  # "classic" | "dot"
+    store_dtype: Any = jnp.int8
+    # dot mode only: store the SIGNED quantized matrix (pos - neg, (N, m))
+    # instead of the sign-split (N, 2m).  Mathematically identical scores
+    # ((d+ - d-).(q+ - q-) == [d+;d-].[u;-u]) at HALF the index bytes and
+    # half the scan GEMM width — a beyond-paper optimization (§Perf C3).
+    signed_store: bool = False
+
+    def __post_init__(self):
+        if not (1 <= self.quantization <= 127):
+            raise ValueError(f"quantization must be in [1,127], got {self.quantization}")
+        if self.scoring not in ("classic", "dot"):
+            raise ValueError(f"scoring must be 'classic' or 'dot', got {self.scoring}")
+        if self.signed_store and self.scoring != "dot":
+            raise ValueError("signed_store requires scoring='dot'")
+
+
+@dataclasses.dataclass(frozen=True)
+class LexicalLshConfig:
+    """Lexical LSH encoding.
+
+    Each feature is rounded to ``decimals`` decimal places and tagged with its
+    feature index (``2_0.4``), optionally aggregated into ``ngram``-grams, then
+    MinHashed with ``hashes`` hash functions into ``buckets`` buckets
+    (Lucene's MinHashFilter).  The paper's settings: (b=300,h=1) and
+    (b=50,h=30), with n in {1,2}.
+    """
+
+    buckets: int = 300
+    hashes: int = 1
+    ngram: int = 1
+    decimals: int = 1
+    seed: int = 0x5EED
+
+    def __post_init__(self):
+        if self.ngram not in (1, 2, 3):
+            raise ValueError("ngram in {1,2,3} supported")
+        if self.buckets < 1 or self.hashes < 1:
+            raise ValueError("buckets and hashes must be >= 1")
+
+
+@dataclasses.dataclass(frozen=True)
+class KdTreeConfig:
+    """k-d tree over dimensionality-reduced vectors.
+
+    Lucene's BKD point index handles at most 8 dimensions, so the paper first
+    reduces 300-d embeddings with PCA (Wold et al.) or PPA->PCA->PPA
+    (Mu et al. / Raunak).  ``backend``:
+      * "tree"  - faithful array-based k-d tree with batched while_loop
+                  traversal (documented as TPU-hostile; see DESIGN.md §3);
+      * "scan"  - the TPU-idiomatic equivalent: brute-scan of the reduced
+                  matrix (a streaming matmul).  Identical results (exact NN in
+                  the reduced space), roofline-friendly.
+    """
+
+    dims: int = 8
+    reduction: str = "pca"  # "pca" | "ppa-pca-ppa"
+    ppa_remove: int = 3  # top components removed by PPA (d/100 per Mu et al.)
+    backend: str = "scan"  # "tree" | "scan"
+    leaf_size: int = 32
+
+    def __post_init__(self):
+        if self.dims > 8:
+            raise ValueError("Lucene BKD supports at most 8 dims (paper constraint)")
+        if self.reduction not in ("pca", "ppa-pca-ppa"):
+            raise ValueError(f"unknown reduction {self.reduction}")
+        if self.backend not in ("tree", "scan"):
+            raise ValueError(f"unknown backend {self.backend}")
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchParams:
+    """Two-phase search parameters: retrieve depth-d candidates, optionally
+    exact-rerank them down to k (the refinement the paper describes but did
+    not implement)."""
+
+    k: int = 10
+    depth: int = 100
+    rerank: bool = False
+
+
+# --------------------------------------------------------------------------
+# Index containers (pytrees of arrays)
+# --------------------------------------------------------------------------
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class FakeWordsIndex:
+    """Sign-split quantized term-frequency index.
+
+    tf:      (N, 2m) integer term frequencies; columns [0,m) hold
+             round(Q*relu(w)), columns [m,2m) hold round(Q*relu(-w)).
+    idf:     (2m,) float32 Lucene idf = 1 + ln(N / (df + 1)).
+    norm:    (N,) float32 Lucene field norm = 1/sqrt(doc_len);
+             doc_len = sum_t tf(t, d).
+    df:      (2m,) int32 document frequency per fake term.
+    scored:  (N, 2m) bfloat16 precomputed sqrt(tf)*idf^2*norm (classic mode
+             scoring matrix) or None in dot mode.
+    vectors: (N, dim) original float vectors kept for exact reranking, or
+             None if reranking is disabled at build time.
+    """
+
+    tf: jax.Array
+    idf: jax.Array
+    norm: jax.Array
+    df: jax.Array
+    scored: Optional[jax.Array] = None
+    vectors: Optional[jax.Array] = None
+
+    @property
+    def num_docs(self) -> int:
+        return self.tf.shape[0]
+
+    @property
+    def num_terms(self) -> int:
+        return self.tf.shape[1]
+
+    def nbytes(self) -> int:
+        total = 0
+        for leaf in jax.tree_util.tree_leaves(self):
+            total += leaf.size * leaf.dtype.itemsize
+        return total
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class LshIndex:
+    """MinHash signature index.
+
+    sig:     (N, h*b) uint32 signatures; SENTINEL marks empty buckets.
+    vectors: (N, dim) originals for reranking (optional).
+    """
+
+    sig: jax.Array
+    vectors: Optional[jax.Array] = None
+
+    SENTINEL = jnp.uint32(0xFFFFFFFF)
+
+    @property
+    def num_docs(self) -> int:
+        return self.sig.shape[0]
+
+    def nbytes(self) -> int:
+        total = 0
+        for leaf in jax.tree_util.tree_leaves(self):
+            total += leaf.size * leaf.dtype.itemsize
+        return total
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class KdTreeIndex:
+    """Reduced-space index.
+
+    reduced:   (N, dims) float32 reduced vectors (the "points" in the BKD
+               tree).
+    reduction: fitted reduction model pytree (PcaModel or PpaPcaPpaModel) used
+               to project queries.
+    split_*:   array-encoded balanced k-d tree (backend="tree"); ``perm`` maps
+               leaf slots back to original doc ids (-1 = padding).
+    """
+
+    reduced: jax.Array
+    reduction: Any
+    split_dim: Optional[jax.Array] = None  # (n_internal,) int32
+    split_val: Optional[jax.Array] = None  # (n_internal,) float32
+    perm: Optional[jax.Array] = None  # (n_leaves, leaf_size) int32 doc ids
+    vectors: Optional[jax.Array] = None
+
+    @property
+    def num_docs(self) -> int:
+        return self.reduced.shape[0]
+
+    def nbytes(self) -> int:
+        total = 0
+        for leaf in jax.tree_util.tree_leaves(self):
+            total += leaf.size * leaf.dtype.itemsize
+        return total
+
+
+SearchResult = Tuple[jax.Array, jax.Array]  # (scores (B,k), ids (B,k))

@@ -1,0 +1,6 @@
+"""Synthetic but production-shaped data pipelines.
+
+Every generator is **seeded and stateless**: batch(step) is a pure function
+of (seed, step), so a restarted job resumes mid-epoch deterministically
+(fault-tolerance requirement — no iterator state to checkpoint).
+"""

@@ -1,0 +1,50 @@
+"""Stateless LM token pipeline: batch = f(seed, step).
+
+Synthetic token streams with a Zipfian unigram distribution (real vocab
+usage is Zipf; this exercises the embedding gather exactly like real data).
+Deterministic per (seed, step, shard) so restarts and elastic re-sharding
+reproduce the same global batch (fault-tolerance requirement).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class LmDataConfig:
+    vocab: int = 32064
+    seq_len: int = 4096
+    global_batch: int = 256
+    seed: int = 0
+    zipf_a: float = 1.1
+
+
+def _zipf_tokens(key: jax.Array, shape, vocab: int, a: float) -> jax.Array:
+    """Inverse-CDF Zipf sampling: rank ~ u^(-1/(a-1)) truncated to vocab."""
+    u = jax.random.uniform(key, shape, jnp.float32, 1e-6, 1.0)
+    ranks = jnp.floor(u ** (-1.0 / (a - 1.0))).astype(jnp.int32)
+    return jnp.clip(ranks, 0, vocab - 1)
+
+
+def batch_at(cfg: LmDataConfig, step: int) -> dict:
+    """Global batch for ``step``: {'tokens': (B, S), 'labels': (B, S)}.
+    labels = next-token shifted tokens."""
+    key = jax.random.fold_in(jax.random.key(cfg.seed), step)
+    toks = _zipf_tokens(
+        key, (cfg.global_batch, cfg.seq_len + 1), cfg.vocab, cfg.zipf_a
+    )
+    return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+
+def host_shard_at(cfg: LmDataConfig, step: int, shard: int, n_shards: int) -> dict:
+    """Per-host slice of the global batch (multi-host input pipeline: each
+    host materializes only its rows; rows are globally consistent because
+    the key depends only on (seed, step))."""
+    assert cfg.global_batch % n_shards == 0
+    per = cfg.global_batch // n_shards
+    full = batch_at(cfg, step)
+    sl = slice(shard * per, (shard + 1) * per)
+    return {k: v[sl] for k, v in full.items()}

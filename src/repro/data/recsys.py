@@ -1,0 +1,46 @@
+"""Criteo-shaped recsys batches: multi-hot categorical ids + dense floats.
+
+Per-field ids are Zipf-distributed inside each field's row range (real CTR id
+spaces are heavy-tailed — this stresses the embedding gather with realistic
+hot rows).  Stateless: batch = f(seed, step).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.recsys import TableSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class RecsysDataConfig:
+    table: TableSpec = None  # type: ignore[assignment]
+    batch: int = 65536
+    nnz: int = 1
+    n_dense: int = 0
+    seed: int = 0
+    zipf_a: float = 1.2
+
+
+def _zipf_in_range(key, shape, n_rows: jax.Array, a: float) -> jax.Array:
+    u = jax.random.uniform(key, shape, jnp.float32, 1e-6, 1.0)
+    ranks = jnp.floor(u ** (-1.0 / (a - 1.0))).astype(jnp.int32)
+    return jnp.minimum(ranks, n_rows - 1)
+
+
+def batch_at(cfg: RecsysDataConfig, step: int) -> dict:
+    """{'sparse': (B, F, nnz) local ids, 'dense': (B, n_dense)?, 'label': (B,)}"""
+    key = jax.random.fold_in(jax.random.key(cfg.seed), step)
+    k_sp, k_de, k_lb = jax.random.split(key, 3)
+    rows = jnp.asarray(cfg.table.row_counts, jnp.int32)  # (F,)
+    sparse = _zipf_in_range(
+        k_sp, (cfg.batch, cfg.table.n_fields, cfg.nnz), rows[None, :, None],
+        cfg.zipf_a,
+    )
+    out = {"sparse": sparse, "label": jax.random.bernoulli(k_lb, 0.25, (cfg.batch,)).astype(jnp.float32)}
+    if cfg.n_dense:
+        out["dense"] = jax.random.normal(k_de, (cfg.batch, cfg.n_dense), jnp.float32)
+    return out

@@ -1,0 +1,39 @@
+"""Shared Pallas kernel utilities.
+
+Kernels here target TPU (MXU 128x128 systolic matmul, VMEM tiling via
+BlockSpec) but are validated on CPU with ``interpret=True``, which executes
+the kernel body in Python.  ``INTERPRET`` flips globally for tests.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+# CPU containers run every kernel in interpret mode; on a real TPU leave unset.
+INTERPRET = jax.default_backend() != "tpu" or bool(
+    int(os.environ.get("REPRO_PALLAS_INTERPRET", "0"))
+)
+
+# MXU/VPU-aligned default tiles.
+LANE = 128
+SUBLANE_F32 = 8
+SUBLANE_BF16 = 16
+SUBLANE_INT8 = 32
+
+
+def round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def pad_dim(x: jax.Array, axis: int, multiple: int, value=0) -> jax.Array:
+    """Zero-pad ``axis`` of x up to a multiple (kernels want aligned tiles)."""
+    import jax.numpy as jnp
+
+    size = x.shape[axis]
+    pad = (-size) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)

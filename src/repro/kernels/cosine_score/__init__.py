@@ -1,0 +1,2 @@
+from repro.kernels.cosine_score.kernel import cosine_scores  # noqa: F401
+from repro.kernels.cosine_score.ops import cosine_topk  # noqa: F401

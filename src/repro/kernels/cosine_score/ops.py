@@ -1,0 +1,21 @@
+"""jit'd public wrappers for cosine scoring."""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.cosine_score.kernel import cosine_scores
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def cosine_topk(
+    q: jax.Array, docs: jax.Array, k: int
+) -> Tuple[jax.Array, jax.Array]:
+    """Exact cosine top-k via the fused kernel (normalizes both sides)."""
+    qn = q / jnp.maximum(jnp.linalg.norm(q, axis=-1, keepdims=True), 1e-12)
+    inv = 1.0 / jnp.maximum(jnp.linalg.norm(docs, axis=-1), 1e-12)
+    scores = cosine_scores(qn, docs, inv)
+    return jax.lax.top_k(scores, k)

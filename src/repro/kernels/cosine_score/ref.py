@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the cosine scoring kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def cosine_scores_ref(
+    q: jax.Array, docs: jax.Array, inv_norm: jax.Array
+) -> jax.Array:
+    return (
+        jnp.einsum("bd,nd->bn", q, docs, preferred_element_type=jnp.float32)
+        * inv_norm[None, :]
+    )

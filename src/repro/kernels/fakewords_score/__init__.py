@@ -1,0 +1,2 @@
+from repro.kernels.fakewords_score.kernel import score_matmul  # noqa: F401
+from repro.kernels.fakewords_score.ops import classic_scores, dot_scores  # noqa: F401

@@ -1,0 +1,29 @@
+"""jit'd public wrappers around the fake-words scoring kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fakewords
+from repro.core.types import FakeWordsIndex
+from repro.kernels.fakewords_score.kernel import score_matmul
+
+
+def classic_scores(
+    index: FakeWordsIndex, q_tf: jax.Array, df_max_ratio: float = 1.0
+) -> jax.Array:
+    """Kernel-backed drop-in for core.fakewords.classic_scores."""
+    keep = fakewords.df_prune_mask(index.df, index.num_docs, df_max_ratio)
+    qv = (q_tf * keep).astype(jnp.bfloat16)
+    return score_matmul(qv, index.scored)
+
+
+def dot_scores(
+    index: FakeWordsIndex, q_tf: jax.Array, df_max_ratio: float = 1.0
+) -> jax.Array:
+    """Kernel-backed drop-in for core.fakewords.dot_scores (int8 MXU path)."""
+    keep = fakewords.df_prune_mask(index.df, index.num_docs, df_max_ratio)
+    m = index.num_terms // 2
+    u = q_tf[:, :m] - q_tf[:, m:]
+    q_lift = (jnp.concatenate([u, -u], axis=-1) * keep).astype(jnp.int8)
+    return score_matmul(q_lift, index.tf)

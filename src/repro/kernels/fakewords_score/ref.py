@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the fake-words scoring kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def score_matmul_ref(q: jax.Array, docs: jax.Array) -> jax.Array:
+    acc = jnp.int32 if q.dtype in (jnp.int8, jnp.int32) else jnp.float32
+    out = jnp.einsum("bt,nt->bn", q, docs, preferred_element_type=acc)
+    return out.astype(jnp.float32) if acc == jnp.int32 else out
+
+
+def classic_scores_ref(
+    q_tf: jax.Array, scored: jax.Array, keep: jax.Array
+) -> jax.Array:
+    """End-to-end classic-similarity reference (mirrors core.fakewords)."""
+    qv = (q_tf * keep).astype(jnp.bfloat16)
+    return jnp.einsum("bt,nt->bn", qv, scored, preferred_element_type=jnp.float32)

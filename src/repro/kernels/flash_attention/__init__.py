@@ -1,0 +1,2 @@
+from repro.kernels.flash_attention.kernel import flash_attention  # noqa: F401
+from repro.kernels.flash_attention.ops import causal_attention  # noqa: F401

@@ -1,0 +1,23 @@
+"""jit'd wrapper selecting the flash kernel or the XLA fallback.
+
+Models call ``causal_attention``; on TPU it routes to the Pallas kernel, on
+CPU (tests, smoke runs) it uses the jnp reference so nothing depends on
+interpret-mode speed.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import common
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def causal_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array, use_kernel: bool | None = None
+) -> jax.Array:
+    if use_kernel is None:
+        use_kernel = not common.INTERPRET
+    if use_kernel:
+        return flash_attention(q, k, v)
+    return attention_ref(q, k, v)

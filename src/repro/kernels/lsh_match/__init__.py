@@ -1,0 +1,2 @@
+from repro.kernels.lsh_match.kernel import lsh_match_scores  # noqa: F401
+from repro.kernels.lsh_match.ops import lsh_topk  # noqa: F401

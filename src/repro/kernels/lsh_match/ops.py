@@ -1,0 +1,17 @@
+"""jit'd public wrappers for LSH signature matching."""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import LshIndex
+from repro.kernels.lsh_match.kernel import lsh_match_scores
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def lsh_topk(index: LshIndex, sig_q: jax.Array, k: int) -> Tuple[jax.Array, jax.Array]:
+    scores = lsh_match_scores(sig_q, index.sig).astype(jnp.float32)
+    return jax.lax.top_k(scores, k)

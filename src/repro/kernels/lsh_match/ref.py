@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the LSH match kernel (same math as
+core.lexical_lsh.match_scores, untiled)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+SENTINEL = np.uint32(0xFFFFFFFF)
+
+
+def lsh_match_scores_ref(sig_q: jax.Array, sig_d: jax.Array) -> jax.Array:
+    eq = (sig_q[:, None, :] == sig_d[None, :, :]) & (
+        sig_q[:, None, :] != SENTINEL
+    )
+    return jnp.sum(eq, axis=-1, dtype=jnp.int32)

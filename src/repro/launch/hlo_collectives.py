@@ -1,0 +1,217 @@
+"""Collective-byte extraction from compiled HLO text.
+
+``compiled.cost_analysis()`` has no collective information, so we parse the
+HLO: every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute contributes per-device wire bytes with the standard
+ring-model volume factors over its replica-group size n:
+
+    all-reduce          2 (n-1)/n * operand bytes
+    all-gather            (n-1)/n * result bytes
+    reduce-scatter        (n-1)/n * operand bytes
+    all-to-all            (n-1)/n * operand bytes
+    collective-permute              operand bytes
+
+While-loop awareness: XLA prints each computation once, but a collective in
+a scanned layer body executes trip-count times.  We build the computation
+call graph (while/call/conditional/fusion), extract trip counts from the
+loop condition's comparison constant, and multiply.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# Param lists may contain nested parens (tuple-typed params) — match them
+# greedily up to the '->' return annotation.
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*(?:\(.*\))?\s*->.*{\s*$")
+_CALL_RE = re.compile(
+    r"(?:to_apply|body|condition|true_computation|false_computation|called_computations=\{)"
+    r"=?%?([\w\.\-]+)"
+)
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Total bytes of an HLO type string like 'f32[16,128]' or a tuple
+    '(f32[2], s32[2])'."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveOp:
+    kind: str
+    result_bytes: int
+    operand_bytes: int
+    group_size: int
+    computation: str
+    line: str
+
+    def wire_bytes(self) -> float:
+        n = max(self.group_size, 1)
+        f = (n - 1) / n
+        if self.kind == "all-reduce":
+            return 2.0 * f * self.operand_bytes
+        if self.kind == "all-gather":
+            return f * self.result_bytes
+        if self.kind == "reduce-scatter":
+            return f * self.operand_bytes
+        if self.kind == "all-to-all":
+            return f * self.operand_bytes
+        return float(self.operand_bytes)  # collective-permute
+
+
+_COLLECTIVE_KINDS = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+
+def _split_computations(hlo: str) -> Dict[str, List[str]]:
+    comps: Dict[str, List[str]] = {}
+    cur: Optional[str] = None
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        if cur is None:
+            m = _COMP_HDR.match(stripped)
+            if m and stripped.endswith("{"):
+                cur = m.group(1)
+                comps[cur] = []
+        else:
+            if stripped == "}" or stripped.startswith("} "):
+                cur = None
+            else:
+                comps[cur].append(stripped)
+    return comps
+
+
+def _group_size(line: str, total_devices: int) -> int:
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        # replica_groups=[G,S]<=[...]: G groups of size S
+        return int(m.group(2))
+    return total_devices
+
+
+def _parse_line(line: str, comp: str, total_devices: int) -> Optional[CollectiveOp]:
+    # "[ROOT] %name = TYPE op-name(OPERANDS), ..."
+    m = re.match(r"(?:ROOT\s+)?%?[\w\.\-]+\s*=\s*(\([^)]*\)|[\w\[\],]+)\s+([\w\-]+)", line)
+    if not m:
+        return None
+    rtype, opname = m.group(1), m.group(2)
+    kind = None
+    for k in _COLLECTIVE_KINDS:
+        if opname == k or opname.startswith(k + "-start") or opname == k + "-start":
+            kind = k
+            break
+    if kind is None:
+        return None
+    result_bytes = _shape_bytes(rtype)
+    # operand types: parse the argument list's shapes
+    args = line[m.end():]
+    paren = args.find("(")
+    operand_bytes = _shape_bytes(args[paren: args.find(")", paren) + 1]) if paren >= 0 else 0
+    if operand_bytes == 0:
+        operand_bytes = result_bytes
+    return CollectiveOp(
+        kind=kind, result_bytes=result_bytes, operand_bytes=operand_bytes,
+        group_size=_group_size(line, total_devices), computation=comp, line=line,
+    )
+
+
+def _trip_count(cond_lines: List[str]) -> int:
+    """Heuristic: largest integer constant in the while condition (scan
+    conditions compare the induction var against the trip count)."""
+    best = 1
+    for line in cond_lines:
+        if "constant(" in line and ("compare" in line or "constant" in line):
+            for m in re.finditer(r"constant\((\d+)\)", line):
+                best = max(best, int(m.group(1)))
+    return best
+
+
+def collective_bytes(hlo: str, total_devices: int) -> Dict[str, float]:
+    """Per-device wire bytes by collective kind, while-trip-count aware."""
+    comps = _split_computations(hlo)
+    entry = None
+    for line in hlo.splitlines():
+        if line.strip().startswith("ENTRY"):
+            m = _COMP_HDR.match(line.strip())
+            if m:
+                entry = m.group(1)
+    if entry is None:
+        entry = next(iter(comps), None)
+
+    # multipliers per computation: BFS from entry
+    mult: Dict[str, float] = {entry: 1.0} if entry else {}
+    frontier = [entry] if entry else []
+    visited = set()
+    while frontier:
+        name = frontier.pop()
+        if name in visited or name not in comps:
+            continue
+        visited.add(name)
+        base = mult.get(name, 1.0)
+        for line in comps[name]:
+            trips = 1.0
+            if re.search(r"\bwhile\(", line):
+                mb = re.search(r"body=%?([\w\.\-]+)", line)
+                mc = re.search(r"condition=%?([\w\.\-]+)", line)
+                if mc and mc.group(1) in comps:
+                    trips = float(_trip_count(comps[mc.group(1)]))
+                if mb:
+                    child = mb.group(1)
+                    mult[child] = mult.get(child, 0.0) + base * trips
+                    frontier.append(child)
+                continue
+            for cm in _CALL_RE.finditer(line):
+                child = cm.group(1)
+                if child in comps and child != name:
+                    mult[child] = mult.get(child, 0.0) + base
+                    frontier.append(child)
+
+    out: Dict[str, float] = {k: 0.0 for k in _COLLECTIVE_KINDS}
+    out["total"] = 0.0
+    for name, lines in comps.items():
+        m = mult.get(name)
+        if m is None:
+            continue  # unreachable (e.g. dead computations)
+        for line in lines:
+            op = _parse_line(line, name, total_devices)
+            if op is not None:
+                b = op.wire_bytes() * m
+                out[op.kind] += b
+                out["total"] += b
+    return out
+
+
+def collective_op_count(hlo: str) -> int:
+    n = 0
+    for line in hlo.splitlines():
+        s = line.strip()
+        if re.match(r"%?[\w\.\-]+\s*=", s) and any(
+            f" {k}" in s or f"{k}(" in s for k in _COLLECTIVE_KINDS
+        ):
+            n += 1
+    return n

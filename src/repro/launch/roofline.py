@@ -1,0 +1,277 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+# (module may also be imported from dryrun, which already set the flag)
+
+"""Roofline-term extraction (EXPERIMENTS.md §Roofline).
+
+XLA's HLO cost analysis counts a while-loop body ONCE regardless of trip
+count, so scanned layer stacks under-report flops/bytes by ~n_layers.  For
+LM cells we therefore lower two shallow UNROLLED variants (depth d1, d2)
+and extrapolate linearly to the full depth:
+
+    per_layer = (cost(d2) - cost(d1)) / (d2 - d1)
+    total     = cost(d1) + per_layer * (L - d1)
+
+which is exact because every per-layer cost term is layer-linear.  GNN /
+recsys / ANN cells have no layer scans — their single lowering is already
+exact.  Collective bytes always come from the HLO parser
+(launch/hlo_collectives.py), which multiplies while-loop trip counts.
+
+Terms (per device; cost_analysis of an SPMD module is per-device):
+
+    compute    = flops / 197e12          (bf16 peak / chip)
+    memory     = bytes / 819e9           (HBM bw / chip)
+    collective = wire_bytes / 100e9      (2 usable ICI links x 50 GB/s)
+
+Analysis-mode fidelity notes: blockwise attention lowers with 8192-token
+blocks (the unrolled 32k x 1k grid would explode the HLO); the memory term
+for prefill cells reflects that tiling.
+"""
+import argparse
+import dataclasses
+import json
+import time
+from typing import Dict, Optional
+
+import jax
+
+from repro import configs
+from repro.configs.common import ArchSpec, Cell
+from repro.launch import cells as cells_mod
+from repro.launch import hlo_collectives
+from repro.launch.mesh import make_production_mesh
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 2 * 50e9
+
+_ANALYSIS_BLOCK = 8192
+
+
+def model_bytes(arch, cell, n_dev: int) -> float:
+    """Analytic per-device HBM traffic (fused-TPU estimate).
+
+    XLA:CPU's cost_analysis 'bytes accessed' sums every unfused op's
+    operands — a 10-30x overestimate of TPU HBM traffic where fusion keeps
+    intermediates in VMEM/registers.  This model counts only buffers that
+    MUST cross HBM: parameters (+grad/opt traffic for train), the residual
+    stream per layer, attention KV, the KV cache / index / embedding-table
+    streams.  Reported alongside the raw HLO bytes; the §Roofline memory
+    term uses this estimate (EXPERIMENTS.md documents both).
+    """
+    fam = arch.family
+    if fam == "lm":
+        cfg = arch.make_model(cell)
+        total, active = cfg.param_count()
+        pbytes = 2 if cfg.param_dtype.__name__ == "bfloat16" else 4
+        d = cfg.d_model
+        if cell.kind == "train":
+            b_loc = cell.batch / (n_dev / 16)  # batch rows per device (model axis excluded)
+            acts = cfg.n_layers * b_loc * cell.seq * d * 2 * 2  # ckpt w+r (bf16)
+            # params: fwd read + bwd read (remat re-read) + grad write + opt r/w
+            par = active / n_dev * 16 * pbytes  # model-axis shard resident per device... conservative: full pass over local shards
+            par_traffic = (total / n_dev) * (3 * pbytes + 3 * 4)
+            logits = b_loc * cell.seq * (cfg.vocab / 16) * 4 * 3
+            return par_traffic + acts + logits
+        if cell.kind == "prefill":
+            b_loc = cell.batch / (n_dev / 16)
+            acts = cfg.n_layers * b_loc * cell.seq * d * 2 * 2
+            kv = cfg.n_layers * b_loc * cell.seq * cfg.n_kv_heads * cfg.dh * 2 * 2
+            # blockwise attention re-reads KV nq times per layer
+            nq = max(1, cell.seq // _ANALYSIS_BLOCK)
+            kv_reread = kv * nq / 2
+            par = (active / n_dev) * pbytes
+            return par + acts + kv + kv_reread
+        # decode: stream the whole local cache once + params once
+        cache = 2 * cfg.n_layers * cell.batch * cell.seq * cfg.n_kv_heads * cfg.dh * 2 / n_dev
+        par = (active / n_dev) * pbytes
+        return cache + par
+    if fam == "gnn":
+        cfg = arch.make_model(cell)
+        if cell.kind == "full_graph":
+            n, e = cell.get("n_nodes"), cell.get("n_edges")
+            # gather features per edge (dominant), 2 layers fwd + bwd ~ 3x
+            msg = (e / n_dev) * (cfg.d_in + cfg.d_hidden) * 4 * 3
+            nodes = n * (cfg.d_in + 2 * cfg.d_hidden) * 4 * 3  # replicated acts
+            return msg + nodes
+        if cell.kind == "minibatch":
+            b = cell.batch / n_dev
+            f1, f2 = cfg.fanouts
+            return b * (1 + f1 + f1 * f2) * cfg.d_in * 4 * 3
+        g = cell.batch / (n_dev / 16)
+        return g * cell.get("n_nodes") * cfg.d_in * 4 * 3
+    if fam == "recsys":
+        cfg = arch.make_model(cell)
+        f, dim = cfg.n_fields, cfg.dim
+        if cell.kind == "retrieval":
+            n_cand = cell.get("n_candidates")
+            return (n_cand / n_dev) * dim * 4  # stream candidates once
+        b = cell.batch / (n_dev / 16)
+        look = b * f * cfg.nnz * dim * 4  # gathered rows
+        mlpw = sum(
+            4 * a * bb for a, bb in zip(
+                (f * dim,) + tuple(cfg.mlp), tuple(cfg.mlp) + (1,))
+        ) if cfg.mlp else 0
+        act = b * f * dim * 4 * 3
+        if cell.kind == "train":
+            # embedding grad scatter + adamw moments over touched rows
+            return 3 * look + act + 3 * mlpw
+        return look + act + mlpw
+    # ann: stream the local index slice once.  Scoring is fused with the
+    # running top-d merge (core/distributed._local_topk_tiled), so the
+    # (B, N_local) score matrix never crosses HBM; signed_store halves the
+    # dot-mode matrix width.
+    cell_n = cell.get("n_docs") / n_dev
+    m2 = 2 * cell.get("dim")
+    cfgm = arch.make_model(cell)
+    if cfgm.scoring == "classic":
+        per_doc = m2 * (1 + 2)  # int8 tf + bf16 scored
+    else:
+        per_doc = (m2 // 2) if getattr(cfgm, "signed_store", False) else m2
+    tile = 262_144
+    scores = cell.batch * min(cell_n, tile) * 4  # one resident tile
+    return cell_n * per_doc + scores
+
+
+def _lower_costs(built: cells_mod.CellBuild, n_dev: int) -> Dict[str, float]:
+    compiled = built.lower().compile()
+    ca = compiled.cost_analysis() or {}
+    text = compiled.as_text()
+    coll = hlo_collectives.collective_bytes(text, n_dev)
+    return {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes": float(ca.get("bytes accessed", 0.0)),
+        "collective_bytes": coll["total"],
+        "coll_by_kind": {k: v for k, v in coll.items() if k != "total"},
+    }
+
+
+def _lm_depth_variant(arch: ArchSpec, cell: Cell, mesh, multi_pod: bool, depth: int):
+    cfg = arch.make_model(cell)
+    cfg = dataclasses.replace(
+        cfg,
+        n_layers=depth,
+        scan_unroll=True,
+        blockwise_q=_ANALYSIS_BLOCK,
+        blockwise_kv=_ANALYSIS_BLOCK,
+    )
+    return cells_mod.build_cell(arch, cell, mesh, multi_pod, cfg=cfg)
+
+
+def lm_costs(arch: ArchSpec, cell: Cell, mesh, multi_pod: bool) -> Dict[str, float]:
+    """Two-point depth extrapolation for scanned LM stacks."""
+    cfg_full = arch.make_model(cell)
+    L = cfg_full.n_layers
+    period = cfg_full.moe.period if cfg_full.moe else 1
+    d1, d2 = period, 2 * period
+    n_dev = mesh.size
+    c1 = _lower_costs(_lm_depth_variant(arch, cell, mesh, multi_pod, d1), n_dev)
+    c2 = _lower_costs(_lm_depth_variant(arch, cell, mesh, multi_pod, d2), n_dev)
+    out = {}
+    for key in ("flops", "bytes", "collective_bytes"):
+        per = (c2[key] - c1[key]) / (d2 - d1)
+        out[key] = c1[key] + per * (L - d1)
+        out[f"{key}_per_layer"] = per
+        out[f"{key}_fixed"] = c1[key] - per * d1
+    return out
+
+
+def cell_costs(arch_id: str, cell_name: str, multi_pod: bool = False) -> Dict:
+    arch = configs.get(arch_id)
+    cell = arch.cell(cell_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    if arch.family == "lm":
+        costs = lm_costs(arch, cell, mesh, multi_pod)
+    else:
+        if arch.family == "ann":
+            cell = dataclasses.replace(
+                cell, extra={**cell.extra, "tile_unroll": True})
+        built = cells_mod.build_cell(arch, cell, mesh, multi_pod)
+        costs = _lower_costs(built, mesh.size)
+    built_info = cells_mod.build_cell(arch, cell, mesh, multi_pod).static
+
+    compute_s = costs["flops"] / PEAK_FLOPS
+    memory_hlo_s = costs["bytes"] / HBM_BW
+    mb = model_bytes(arch, cell, mesh.size)
+    memory_s = mb / HBM_BW  # fused-TPU estimate (see model_bytes docstring)
+    collective_s = costs["collective_bytes"] / LINK_BW
+    dominant = max(
+        ("compute", compute_s), ("memory", memory_s), ("collective", collective_s),
+        key=lambda kv: kv[1],
+    )[0]
+    model_flops = built_info.get("model_flops", 0.0)
+    hlo_flops_global = costs["flops"] * mesh.size
+    bound = max(compute_s, memory_s, collective_s)
+    rec = {
+        "arch": arch_id, "cell": cell_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "devices": mesh.size,
+        "flops_per_device": costs["flops"],
+        "bytes_per_device_hlo": costs["bytes"],
+        "bytes_per_device_model": mb,
+        "collective_bytes_per_device": costs["collective_bytes"],
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "memory_hlo_s": memory_hlo_s,
+        "collective_s": collective_s,
+        "dominant": dominant,
+        "bound_s": bound,
+        "model_flops": model_flops,
+        "useful_flops_ratio": (model_flops / hlo_flops_global) if hlo_flops_global else 0.0,
+        "roofline_fraction": (
+            (model_flops / mesh.size / PEAK_FLOPS) / bound if bound > 0 else 0.0
+        ),
+        "analysis_s": round(time.time() - t0, 1),
+    }
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--include-ann", action="store_true")
+    ap.add_argument("--out", default="results/roofline.json")
+    ap.add_argument("--skip-done", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    results = []
+    if args.skip_done and os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+    done = {(r["arch"], r["cell"], r["mesh"]) for r in results if "error" not in r}
+
+    mesh_name = "2x16x16" if args.multi_pod else "16x16"
+    arch_ids = [args.arch] if args.arch else configs.all_ids(include_ann=args.include_ann)
+    for arch_id in arch_ids:
+        arch = configs.get(arch_id)
+        for cell in arch.cells:
+            if args.shape and cell.name != args.shape:
+                continue
+            if (arch_id, cell.name, mesh_name) in done:
+                continue
+            try:
+                rec = cell_costs(arch_id, cell.name, args.multi_pod)
+                print(
+                    f"[ok] {arch_id} x {cell.name}: dominant={rec['dominant']} "
+                    f"bound={rec['bound_s']*1e3:.2f}ms useful={rec['useful_flops_ratio']:.2f} "
+                    f"roofline_frac={rec['roofline_fraction']:.3f}",
+                    flush=True,
+                )
+            except Exception as e:
+                rec = {"arch": arch_id, "cell": cell.name, "mesh": mesh_name,
+                       "error": f"{type(e).__name__}: {e}"}
+                print(f"[FAIL] {arch_id} x {cell.name}: {str(e)[:200]}", flush=True)
+            results = [r for r in results
+                       if (r["arch"], r["cell"], r["mesh"]) != (arch_id, cell.name, mesh_name)]
+            results.append(rec)
+            with open(args.out, "w") as f:
+                json.dump(results, f, indent=1)
+    print(f"-> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

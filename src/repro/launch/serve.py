@@ -1,0 +1,79 @@
+"""End-to-end ANN serving driver (the paper's system, running for real).
+
+    PYTHONPATH=src python -m repro.launch.serve --n-docs 100000 --queries 512
+
+Builds a fake-words index over a synthetic word2vec-like corpus, stands up
+the batched AnnService, replays a query stream, and reports R@(k,d) against
+the brute-force oracle plus latency percentiles.  On a pod the same service
+runs over the sharded index (core/distributed.py); here it exercises the
+single-device path end to end.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import bruteforce, eval as ev, fakewords
+from repro.core.types import FakeWordsConfig
+from repro.data import embeddings
+from repro.serve.ann_service import AnnService, AnnServiceConfig
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n-docs", type=int, default=100_000)
+    ap.add_argument("--dim", type=int, default=300)
+    ap.add_argument("--queries", type=int, default=512)
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--q", type=int, default=50, help="fake-words quantization")
+    ap.add_argument("--depth", type=int, default=100)
+    ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--rerank", action="store_true", default=True)
+    args = ap.parse_args(argv)
+
+    corpus = embeddings.make_corpus(
+        embeddings.CorpusConfig(n_vectors=args.n_docs, dim=args.dim)
+    )
+    queries, qids = embeddings.make_queries(corpus, args.queries)
+
+    config = FakeWordsConfig(quantization=args.q, df_max_ratio=0.25)
+    t0 = time.time()
+    index = fakewords.build(jnp.asarray(corpus), config)
+    build_s = time.time() - t0
+    print(f"[serve] indexed {args.n_docs} docs in {build_s:.1f}s "
+          f"({index.nbytes()/1e6:.0f} MB)")
+
+    svc = AnnService(index, config, AnnServiceConfig(
+        k=args.k, depth=args.depth, rerank=args.rerank, max_batch=args.batch))
+
+    # Warmup (compile) then timed replay.
+    svc.search_batch(queries[: args.batch])
+    lat = []
+    ids_all = []
+    for i in range(0, len(queries), args.batch):
+        chunk = queries[i : i + args.batch]
+        t = time.time()
+        _, ids = svc.search_batch(chunk)
+        lat.append((time.time() - t) / len(chunk))
+        ids_all.append(ids)
+    ids_all = np.concatenate(ids_all)
+
+    gt_s, gt_i = bruteforce.exact_topk(jnp.asarray(corpus), jnp.asarray(queries), args.k)
+    recall = float(ev.recall_at(jnp.asarray(np.asarray(gt_i)), jnp.asarray(ids_all)))
+    lat_ms = np.array(lat) * 1e3
+    out = {
+        "recall@k": round(recall, 4),
+        "p50_ms_per_query": round(float(np.percentile(lat_ms, 50)), 3),
+        "p99_ms_per_query": round(float(np.percentile(lat_ms, 99)), 3),
+        "index_mb": round(index.nbytes() / 1e6, 1),
+        "queries": int(svc.queries_served),
+    }
+    print(f"[serve] {out}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,239 @@
+"""GraphSAGE (Hamilton et al. 2017) — mean aggregator, full-batch + sampled.
+
+Kernel regime (taxonomy §GNN): SpMM via ``jax.ops.segment_sum`` over an
+edge-index → node scatter.  JAX sparse is BCOO-only, so message passing is
+implemented directly as gather(src) → segment_sum(dst) → divide(degree):
+
+    h_neigh[v] = mean_{u in N(v)} h[u]
+    h'[v]      = relu(W_self h[v] + W_neigh h_neigh[v])      (+ l2 normalize)
+
+Three execution paths cover the assigned shapes:
+
+* ``forward_full``      — whole-graph message passing (full_graph_sm /
+  ogb_products).  Edges shard over devices: each shard computes a partial
+  segment_sum over its edge slice and the partials are summed by GSPMD
+  (the scatter's natural psum); features/params replicated.
+* ``forward_sampled``   — GraphSAGE minibatch: dense (B, f1) / (B, f1, f2)
+  sampled neighbor indices, gathered from the (N, F) feature table
+  (minibatch_lg; the real neighbor sampler lives in data/graph.py).
+* ``forward_batched``   — vmap over a batch of small fixed-size graphs with
+  mean-pool readout (molecule).
+
+Applicability note (DESIGN.md §6): trained node embeddings are exactly the
+"arbitrary dense vectors" the paper indexes — examples/graph_embeddings.py
+feeds them to the fake-words index.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class SageConfig:
+    name: str = "graphsage"
+    n_layers: int = 2
+    d_in: int = 602
+    d_hidden: int = 128
+    n_classes: int = 41
+    aggregator: str = "mean"
+    fanouts: Tuple[int, ...] = (25, 10)  # paper's sample_sizes, hop 1..L
+    l2_normalize: bool = True
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        if self.aggregator != "mean":
+            raise ValueError("only the mean aggregator is implemented")
+        if len(self.fanouts) != self.n_layers:
+            raise ValueError("need one fanout per layer")
+
+
+def param_shapes(cfg: SageConfig) -> Params:
+    shapes: Params = {}
+    d_prev = cfg.d_in
+    for l in range(cfg.n_layers):
+        d_out = cfg.d_hidden
+        shapes[f"layer{l}"] = {
+            "w_self": (d_prev, d_out),
+            "w_neigh": (d_prev, d_out),
+            "bias": (d_out,),
+        }
+        d_prev = d_out
+    shapes["classifier"] = {"w": (d_prev, cfg.n_classes), "b": (cfg.n_classes,)}
+    return shapes
+
+
+def init_params(key: jax.Array, cfg: SageConfig) -> Params:
+    shapes = param_shapes(cfg)
+    flat, treedef = jax.tree_util.tree_flatten(
+        shapes, is_leaf=lambda x: isinstance(x, tuple)
+    )
+    keys = jax.random.split(key, len(flat))
+
+    def one(k, s):
+        if len(s) == 2:
+            return jax.random.normal(k, s, jnp.float32) / math.sqrt(s[0])
+        return jnp.zeros(s, jnp.float32)
+
+    return jax.tree_util.tree_unflatten(
+        treedef, [one(k, s) for k, s in zip(keys, flat)]
+    )
+
+
+def _sage_combine(h_self, h_neigh, layer, last: bool, cfg: SageConfig):
+    h = h_self @ layer["w_self"] + h_neigh @ layer["w_neigh"] + layer["bias"]
+    if not last:
+        h = jax.nn.relu(h)
+    if cfg.l2_normalize:
+        h = h / jnp.maximum(jnp.linalg.norm(h, axis=-1, keepdims=True), 1e-12)
+    return h
+
+
+# --------------------------------------------------------------------------
+# Full-batch message passing (segment_sum SpMM)
+# --------------------------------------------------------------------------
+
+
+def mean_aggregate(
+    h: jax.Array, src: jax.Array, dst: jax.Array, num_nodes: int
+) -> jax.Array:
+    """h_neigh[v] = mean of h[src] over edges (src -> dst=v).
+
+    gather + segment_sum; degree recomputed with the same scatter so that
+    isolated nodes get 0 (GraphSAGE convention: empty neighborhood -> zeros).
+    Under pjit, src/dst sharded over devices => per-shard partial sums that
+    GSPMD all-reduces.
+    """
+    msgs = jnp.take(h, src, axis=0)  # (E, d)
+    agg = jax.ops.segment_sum(msgs, dst, num_segments=num_nodes)
+    deg = jax.ops.segment_sum(
+        jnp.ones_like(dst, dtype=h.dtype), dst, num_segments=num_nodes
+    )
+    return agg / jnp.maximum(deg, 1.0)[:, None]
+
+
+def forward_full(
+    params: Params, feats: jax.Array, src: jax.Array, dst: jax.Array,
+    cfg: SageConfig,
+) -> jax.Array:
+    """feats: (N, d_in); src/dst: (E,) int32 -> logits (N, n_classes)."""
+    n = feats.shape[0]
+    h = feats.astype(cfg.dtype)
+    for l in range(cfg.n_layers):
+        h_neigh = mean_aggregate(h, src, dst, n)
+        h = _sage_combine(h, h_neigh, params[f"layer{l}"], l == cfg.n_layers - 1, cfg)
+    return h @ params["classifier"]["w"] + params["classifier"]["b"]
+
+
+def embeddings_full(params, feats, src, dst, cfg: SageConfig) -> jax.Array:
+    """Node embeddings (pre-classifier) — the dense vectors the paper's ANN
+    layer indexes."""
+    n = feats.shape[0]
+    h = feats.astype(cfg.dtype)
+    for l in range(cfg.n_layers):
+        h_neigh = mean_aggregate(h, src, dst, n)
+        h = _sage_combine(h, h_neigh, params[f"layer{l}"], l == cfg.n_layers - 1, cfg)
+    return h
+
+
+# --------------------------------------------------------------------------
+# Sampled minibatch (GraphSAGE alg. 2): dense neighbor blocks
+# --------------------------------------------------------------------------
+
+
+def forward_sampled(
+    params: Params,
+    feats: jax.Array,        # (N, d_in) full feature table (replicated/sharded)
+    batch_nodes: jax.Array,  # (B,) int32
+    nbr1: jax.Array,         # (B, f1) int32 — hop-1 samples of batch nodes
+    nbr2: jax.Array,         # (B, f1, f2) int32 — hop-2 samples of nbr1
+    cfg: SageConfig,
+) -> jax.Array:
+    """Two-layer sampled forward (fanouts f1, f2). -1 indices = padding
+    (isolated-node slots) and contribute zeros to the mean."""
+    assert cfg.n_layers == 2, "sampled path implements the paper's 2-layer setting"
+    b, f1 = nbr1.shape
+    f2 = nbr2.shape[-1]
+
+    def gather(table, idx):
+        safe = jnp.maximum(idx, 0)
+        x = jnp.take(table, safe.reshape(-1), axis=0).reshape(*idx.shape, -1)
+        return jnp.where((idx >= 0)[..., None], x, 0.0).astype(cfg.dtype)
+
+    def masked_mean(x, idx):
+        cnt = jnp.sum(idx >= 0, axis=-1, keepdims=True).astype(x.dtype)
+        return jnp.sum(x, axis=-2) / jnp.maximum(cnt, 1.0)
+
+    x_b = gather(feats, batch_nodes)          # (B, d)
+    x_1 = gather(feats, nbr1)                 # (B, f1, d)
+    x_2 = gather(feats, nbr2)                 # (B, f1, f2, d)
+
+    # Layer 0: update batch nodes (from nbr1) and nbr1 nodes (from nbr2).
+    l0 = params["layer0"]
+    h_b = _sage_combine(x_b, masked_mean(x_1, nbr1), l0, False, cfg)
+    h_1 = _sage_combine(x_1, masked_mean(x_2, nbr2), l0, False, cfg)
+    # Layer 1: final update of batch nodes from updated nbr1.
+    l1 = params["layer1"]
+    h = _sage_combine(h_b, masked_mean(h_1, nbr1), l1, True, cfg)
+    return h @ params["classifier"]["w"] + params["classifier"]["b"]
+
+
+# --------------------------------------------------------------------------
+# Batched small graphs (molecule): vmap + mean-pool readout
+# --------------------------------------------------------------------------
+
+
+def forward_batched(
+    params: Params,
+    feats: jax.Array,  # (G, n_nodes, d_in)
+    src: jax.Array,    # (G, n_edges) int32
+    dst: jax.Array,    # (G, n_edges) int32
+    cfg: SageConfig,
+) -> jax.Array:
+    """Graph-level logits (G, n_classes) via per-graph message passing and
+    mean-pool readout."""
+    n = feats.shape[1]
+
+    def one_graph(f, s, d):
+        h = f.astype(cfg.dtype)
+        for l in range(cfg.n_layers):
+            h_neigh = mean_aggregate(h, s, d, n)
+            h = _sage_combine(h, h_neigh, params[f"layer{l}"], l == cfg.n_layers - 1, cfg)
+        return jnp.mean(h, axis=0)  # readout
+
+    pooled = jax.vmap(one_graph)(feats, src, dst)
+    return pooled @ params["classifier"]["w"] + params["classifier"]["b"]
+
+
+# --------------------------------------------------------------------------
+# Losses
+# --------------------------------------------------------------------------
+
+
+def softmax_xent(logits: jax.Array, labels: jax.Array, mask=None) -> jax.Array:
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - ll
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+def loss_full(params, feats, src, dst, labels, mask, cfg: SageConfig):
+    return softmax_xent(forward_full(params, feats, src, dst, cfg), labels, mask)
+
+
+def loss_sampled(params, feats, batch_nodes, nbr1, nbr2, labels, cfg: SageConfig):
+    return softmax_xent(
+        forward_sampled(params, feats, batch_nodes, nbr1, nbr2, cfg), labels
+    )
+
+
+def loss_batched(params, feats, src, dst, labels, cfg: SageConfig):
+    return softmax_xent(forward_batched(params, feats, src, dst, cfg), labels)

@@ -1,0 +1,376 @@
+"""RecSys towers: FM, DeepFM, DLRM (RM-2), xDeepFM over huge sparse tables.
+
+The hot path is the embedding lookup.  JAX has no native EmbeddingBag, so we
+build one (taxonomy §RecSys): all categorical fields share ONE concatenated
+(total_rows, dim) table with per-field row offsets — this is what lets the
+table row-shard over the ``model`` axis as a single array — and a bag lookup
+is ``jnp.take`` + ``jax.ops.segment_sum`` over a (B*nnz,) flattened index
+stream (ragged, CSR-style) or a sum over a dense (B, F, nnz) index block
+(fixed-nnz fast path used by the training/serving steps; the ragged path is
+the general API and the two are property-tested equal).
+
+Feature interactions:
+  * FM      — pairwise <v_i, v_j> x_i x_j via the O(nk) sum-square trick
+              0.5 * ((Σ v)² − Σ v²) (Rendle 2010).
+  * DeepFM  — FM + shared-embedding MLP (400-400-400).
+  * DLRM    — bottom MLP on 13 dense feats → dot-interaction among
+              27 vectors (upper triangle) → top MLP (512-512-256-1).
+  * xDeepFM — CIN (200-200-200): x^k_{h} = Σ_{i,j} W^k_{h,ij} (x^{k-1}_i ∘
+              x^0_j), realized as einsum over the outer product, + DNN.
+
+``retrieval_cand`` (1 query × 10⁶ candidates) is the paper-representative
+cell: candidate scoring is an inner product over item embeddings — served
+either brute-force (cosine_score kernel) or through the fake-words index
+(core/): see serve/ann_service.py and examples/recsys_retrieval.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+# --------------------------------------------------------------------------
+# Table spec + EmbeddingBag
+# --------------------------------------------------------------------------
+
+
+def criteo_row_counts(n_fields: int, total_rows: int, alpha: float = 1.6) -> Tuple[int, ...]:
+    """Deterministic power-law per-field row counts summing to ~total_rows
+    (Criteo-like: a few huge id spaces, a long tail of small ones).  The
+    total is padded up to a multiple of 512 so the concatenated table's rows
+    shard evenly over any production mesh axis."""
+    raw = [(i + 1) ** (-alpha) for i in range(n_fields)]
+    s = sum(raw)
+    counts = [max(4, int(total_rows * r / s)) for r in raw]
+    counts[0] += (-sum(counts)) % 512
+    return tuple(counts)
+
+
+@dataclasses.dataclass(frozen=True)
+class TableSpec:
+    """One concatenated embedding table for all categorical fields."""
+
+    row_counts: Tuple[int, ...]
+    dim: int
+
+    @property
+    def n_fields(self) -> int:
+        return len(self.row_counts)
+
+    @property
+    def total_rows(self) -> int:
+        return sum(self.row_counts)
+
+    @property
+    def offsets(self) -> Tuple[int, ...]:
+        out, acc = [], 0
+        for c in self.row_counts:
+            out.append(acc)
+            acc += c
+        return tuple(out)
+
+    def globalize(self, idx: jax.Array) -> jax.Array:
+        """Per-field local ids (B, F, ...) -> global row ids in the
+        concatenated table (field axis must be axis 1)."""
+        off = jnp.asarray(self.offsets, jnp.int32)
+        shape = (1, self.n_fields) + (1,) * (idx.ndim - 2)
+        return idx + off.reshape(shape)
+
+
+def embedding_bag_dense(
+    table: jax.Array, idx: jax.Array, weights: Optional[jax.Array] = None,
+    combine: str = "sum",
+) -> jax.Array:
+    """Fixed-nnz bag lookup: idx (B, F, nnz) global rows -> (B, F, dim).
+
+    -1 indices are padding.  This is the fast TPU path: one gather plus a
+    dense reduction (XLA lowers the gather efficiently; under pjit with the
+    table row-sharded over 'model' it becomes the classic DLRM
+    gather + all-to-all pattern).
+    """
+    safe = jnp.maximum(idx, 0)
+    vecs = jnp.take(table, safe.reshape(-1), axis=0).reshape(*idx.shape, -1)
+    mask = (idx >= 0)[..., None].astype(vecs.dtype)
+    if weights is not None:
+        mask = mask * weights[..., None]
+    out = jnp.sum(vecs * mask, axis=-2)
+    if combine == "mean":
+        cnt = jnp.sum((idx >= 0), axis=-1, keepdims=True).astype(vecs.dtype)
+        out = out / jnp.maximum(cnt, 1.0)
+    return out
+
+
+def embedding_bag_ragged(
+    table: jax.Array,
+    values: jax.Array,    # (NNZ,) int32 global row ids
+    bag_ids: jax.Array,   # (NNZ,) int32 target bag per value, in [0, n_bags)
+    n_bags: int,
+    weights: Optional[jax.Array] = None,
+    combine: str = "sum",
+) -> jax.Array:
+    """Ragged EmbeddingBag: take + segment_sum (the general CSR-style API)."""
+    vecs = jnp.take(table, values, axis=0)  # (NNZ, dim)
+    if weights is not None:
+        vecs = vecs * weights[:, None]
+    out = jax.ops.segment_sum(vecs, bag_ids, num_segments=n_bags)
+    if combine == "mean":
+        cnt = jax.ops.segment_sum(
+            jnp.ones_like(values, dtype=vecs.dtype), bag_ids, num_segments=n_bags
+        )
+        out = out / jnp.maximum(cnt, 1.0)[:, None]
+    return out
+
+
+# --------------------------------------------------------------------------
+# Configs
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class RecsysConfig:
+    name: str = "fm"
+    model: str = "fm"  # "fm" | "deepfm" | "dlrm" | "xdeepfm"
+    table: TableSpec = dataclasses.field(
+        default_factory=lambda: TableSpec(criteo_row_counts(39, 1_300_000), 10)
+    )
+    nnz: int = 1              # multi-hot width per field
+    n_dense: int = 0          # dense (continuous) features (DLRM: 13)
+    bot_mlp: Tuple[int, ...] = ()        # DLRM bottom MLP widths
+    top_mlp: Tuple[int, ...] = ()        # DLRM top MLP widths (last = 1)
+    mlp: Tuple[int, ...] = ()            # DeepFM / xDeepFM DNN widths
+    cin_layers: Tuple[int, ...] = ()     # xDeepFM CIN feature-map counts
+    dtype: Any = jnp.float32
+    param_dtype: Any = jnp.float32
+
+    @property
+    def n_fields(self) -> int:
+        return self.table.n_fields
+
+    @property
+    def dim(self) -> int:
+        return self.table.dim
+
+    def param_count(self) -> int:
+        shapes = param_shapes(self)
+        return sum(
+            math.prod(s)
+            for s in jax.tree_util.tree_leaves(
+                shapes, is_leaf=lambda x: isinstance(x, tuple)
+            )
+        )
+
+
+def _mlp_shapes(widths: Sequence[int], d_in: int, prefix: str) -> Params:
+    shapes: Params = {}
+    prev = d_in
+    for i, w in enumerate(widths):
+        shapes[f"{prefix}{i}"] = {"w": (prev, w), "b": (w,)}
+        prev = w
+    return shapes
+
+
+def param_shapes(cfg: RecsysConfig) -> Params:
+    f, d = cfg.n_fields, cfg.dim
+    shapes: Params = {
+        "table": (cfg.table.total_rows, d),
+        "linear": (cfg.table.total_rows, 1),
+        "bias": (1,),
+    }
+    if cfg.model == "fm":
+        pass
+    elif cfg.model == "deepfm":
+        shapes.update(_mlp_shapes(cfg.mlp + (1,), f * d, "mlp"))
+    elif cfg.model == "dlrm":
+        shapes.pop("linear")
+        shapes.update(_mlp_shapes(cfg.bot_mlp, cfg.n_dense, "bot"))
+        n_vec = f + 1
+        d_inter = n_vec * (n_vec - 1) // 2 + cfg.bot_mlp[-1]
+        shapes.update(_mlp_shapes(cfg.top_mlp, d_inter, "top"))
+    elif cfg.model == "xdeepfm":
+        shapes.update(_mlp_shapes(cfg.mlp + (1,), f * d, "mlp"))
+        prev_maps = f
+        for i, h in enumerate(cfg.cin_layers):
+            shapes[f"cin{i}"] = {"w": (prev_maps * f, h)}
+            prev_maps = h
+        shapes["cin_out"] = {"w": (sum(cfg.cin_layers), 1)}
+    else:
+        raise ValueError(cfg.model)
+    return shapes
+
+
+def init_params(key: jax.Array, cfg: RecsysConfig) -> Params:
+    shapes = param_shapes(cfg)
+    flat, treedef = jax.tree_util.tree_flatten(
+        shapes, is_leaf=lambda x: isinstance(x, tuple)
+    )
+    keys = jax.random.split(key, len(flat))
+
+    def one(k, s):
+        if len(s) == 1:
+            return jnp.zeros(s, cfg.param_dtype)
+        scale = 1.0 / math.sqrt(s[0])
+        return (jax.random.normal(k, s, jnp.float32) * scale).astype(cfg.param_dtype)
+
+    return jax.tree_util.tree_unflatten(
+        treedef, [one(k, s) for k, s in zip(keys, flat)]
+    )
+
+
+# --------------------------------------------------------------------------
+# Interactions
+# --------------------------------------------------------------------------
+
+
+def fm_interaction(emb: jax.Array) -> jax.Array:
+    """emb (B, F, d) -> (B,) second-order FM term via the sum-square trick:
+    0.5 * Σ_d ((Σ_i v_id)² − Σ_i v_id²)   — O(F·d), not O(F²·d)."""
+    s = jnp.sum(emb, axis=1)          # (B, d)
+    s2 = jnp.sum(emb * emb, axis=1)   # (B, d)
+    return 0.5 * jnp.sum(s * s - s2, axis=-1)
+
+
+def dot_interaction(vecs: jax.Array) -> jax.Array:
+    """vecs (B, n, d) -> (B, n(n-1)/2) pairwise dots (upper triangle,
+    DLRM's interaction)."""
+    b, n, _ = vecs.shape
+    gram = jnp.einsum("bnd,bmd->bnm", vecs, vecs)
+    iu, ju = jnp.triu_indices(n, k=1)
+    return gram[:, iu, ju]
+
+
+def cin(emb: jax.Array, params: Params, layer_maps: Sequence[int]) -> jax.Array:
+    """Compressed Interaction Network (xDeepFM).  emb (B, F, d).
+
+    x^k[h] = Σ_{i,j} W^k[h,(i,j)] * (x^{k-1}[i] ∘ x^0[j]); sum-pool each
+    layer's maps over d and concatenate."""
+    b, f, d = emb.shape
+    x0 = emb
+    xk = emb
+    pooled = []
+    for i, h in enumerate(layer_maps):
+        outer = jnp.einsum("bid,bjd->bijd", xk, x0)  # (B, Hk-1, F, d)
+        flat = outer.reshape(b, -1, d)               # (B, Hk-1*F, d)
+        xk = jnp.einsum("bmd,mh->bhd", flat, params[f"cin{i}"]["w"])
+        pooled.append(jnp.sum(xk, axis=-1))          # (B, Hk)
+    return jnp.concatenate(pooled, axis=-1)
+
+
+def mlp_apply(x: jax.Array, params: Params, n: int, prefix: str,
+              final_act: bool = False) -> jax.Array:
+    for i in range(n):
+        p = params[f"{prefix}{i}"]
+        x = x @ p["w"].astype(x.dtype) + p["b"].astype(x.dtype)
+        if i < n - 1 or final_act:
+            x = jax.nn.relu(x)
+    return x
+
+
+# --------------------------------------------------------------------------
+# Forward passes  (logits, pre-sigmoid)
+# --------------------------------------------------------------------------
+
+
+def _lookup(params: Params, cfg: RecsysConfig, sparse_idx: jax.Array) -> jax.Array:
+    """sparse_idx: (B, F, nnz) local per-field ids -> (B, F, dim)."""
+    gidx = cfg.table.globalize(sparse_idx)
+    return embedding_bag_dense(params["table"].astype(cfg.dtype), gidx)
+
+
+def _linear_term(params: Params, cfg: RecsysConfig, sparse_idx: jax.Array) -> jax.Array:
+    gidx = cfg.table.globalize(sparse_idx)
+    w = embedding_bag_dense(params["linear"].astype(cfg.dtype), gidx)  # (B,F,1)
+    return jnp.sum(w[..., 0], axis=-1)
+
+
+def forward(
+    params: Params,
+    cfg: RecsysConfig,
+    sparse_idx: jax.Array,                 # (B, F, nnz) int32, -1 pad
+    dense_feats: Optional[jax.Array] = None,  # (B, n_dense) float
+) -> jax.Array:
+    """CTR logit (B,)."""
+    emb = _lookup(params, cfg, sparse_idx)  # (B, F, d)
+    b = emb.shape[0]
+
+    if cfg.model == "fm":
+        return params["bias"][0] + _linear_term(params, cfg, sparse_idx) + fm_interaction(emb)
+
+    if cfg.model == "deepfm":
+        y_fm = _linear_term(params, cfg, sparse_idx) + fm_interaction(emb)
+        y_dnn = mlp_apply(emb.reshape(b, -1), params, len(cfg.mlp) + 1, "mlp")[:, 0]
+        return params["bias"][0] + y_fm + y_dnn
+
+    if cfg.model == "dlrm":
+        assert dense_feats is not None
+        x_bot = mlp_apply(
+            dense_feats.astype(cfg.dtype), params, len(cfg.bot_mlp), "bot",
+            final_act=True,
+        )  # (B, d)
+        vecs = jnp.concatenate([x_bot[:, None, :], emb], axis=1)  # (B, F+1, d)
+        inter = jnp.concatenate([dot_interaction(vecs), x_bot], axis=-1)
+        return mlp_apply(inter, params, len(cfg.top_mlp), "top")[:, 0]
+
+    if cfg.model == "xdeepfm":
+        y_lin = _linear_term(params, cfg, sparse_idx)
+        y_cin = (cin(emb, params, cfg.cin_layers) @ params["cin_out"]["w"])[:, 0]
+        y_dnn = mlp_apply(emb.reshape(b, -1), params, len(cfg.mlp) + 1, "mlp")[:, 0]
+        return params["bias"][0] + y_lin + y_cin + y_dnn
+
+    raise ValueError(cfg.model)
+
+
+def bce_loss(
+    params: Params,
+    cfg: RecsysConfig,
+    sparse_idx: jax.Array,
+    labels: jax.Array,
+    dense_feats: Optional[jax.Array] = None,
+) -> jax.Array:
+    logit = forward(params, cfg, sparse_idx, dense_feats)
+    y = labels.astype(jnp.float32)
+    z = logit.astype(jnp.float32)
+    # numerically-stable BCE-with-logits
+    return jnp.mean(jnp.maximum(z, 0) - z * y + jnp.log1p(jnp.exp(-jnp.abs(z))))
+
+
+# --------------------------------------------------------------------------
+# Retrieval scoring (retrieval_cand): 1 query vs 10^6 candidates
+# --------------------------------------------------------------------------
+
+
+def retrieval_scores(
+    user_vec: jax.Array,       # (B, d) pooled query-side embedding
+    cand_table: jax.Array,     # (N_cand, d) candidate item embeddings
+) -> jax.Array:
+    """Batched dot scoring — NOT a loop.  (B, N_cand)."""
+    return jnp.einsum(
+        "bd,nd->bn", user_vec, cand_table, preferred_element_type=jnp.float32
+    )
+
+
+def retrieval_topk(
+    user_vec: jax.Array, cand_table: jax.Array, k: int = 100
+) -> Tuple[jax.Array, jax.Array]:
+    return jax.lax.top_k(retrieval_scores(user_vec, cand_table), k)
+
+
+def user_tower(
+    params: Params, cfg: RecsysConfig, sparse_idx: jax.Array,
+    dense_feats: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Query-side embedding for retrieval: mean of field embeddings (+ DLRM
+    bottom-MLP dense vector when present)."""
+    emb = _lookup(params, cfg, sparse_idx)
+    u = jnp.mean(emb, axis=1)
+    if cfg.model == "dlrm" and dense_feats is not None:
+        u = u + mlp_apply(
+            dense_feats.astype(cfg.dtype), params, len(cfg.bot_mlp), "bot",
+            final_act=True,
+        )
+    return u

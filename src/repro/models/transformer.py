@@ -1,0 +1,897 @@
+"""Decoder-only transformer LM: GQA + RoPE + SwiGLU, optional interleaved MoE.
+
+Covers the five assigned LM architectures (phi3-mini/medium, deepseek-coder,
+phi3.5-moe, llama4-maverick).  Design points:
+
+* Layers are **scan-stacked**: every per-layer parameter has a leading
+  ``n_blocks`` axis and the layer stack runs under ``lax.scan`` +
+  ``jax.checkpoint`` - O(1) HLO size for 62-layer models and
+  activation-checkpointed memory.
+* A scan "block" holds ``moe_period - 1`` dense layers plus one MoE layer
+  (llama4 interleaves MoE every other layer; phi3.5-moe is all-MoE,
+  period=1; dense archs have no MoE).
+* MoE dispatch is **sort-based with static capacity** (GShard-style): tokens
+  are argsorted by expert, truncated to capacity C, processed with a grouped
+  einsum over an (E, C, d) buffer that shards cleanly over the ``model``
+  (expert) axis, and combined via the inverse permutation.  No (T, E, C)
+  one-hot tensors.
+* Attention is switchable: "einsum" (masked logits; short seq) or
+  "blockwise" (double-scan online softmax; O(bq*bk) memory - the pure-JAX
+  flash attention used for 32k prefill).  The Pallas flash kernel is the TPU
+  drop-in for the same contract.
+* Decode runs against a (layers, B, Hkv, S_max, dh) KV cache; the cache is
+  length-sharded on the ``model`` axis (flash-decoding split-K: GSPMD turns
+  the masked softmax into per-shard partials + psum).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+def _scan(cfg, f, init, xs):
+    """lax.scan that fully unrolls in analysis mode (cfg.scan_unroll)."""
+    return jax.lax.scan(f, init, xs, unroll=bool(cfg.scan_unroll))
+
+
+def _constrained(x: jax.Array, cfg: "TransformerConfig", *dims) -> jax.Array:
+    """with_sharding_constraint if any activation axis is configured.
+    ``dims`` are PartitionSpec entries (axis name / tuple / None)."""
+    if not (cfg.batch_axes or cfg.tp_axis or cfg.seq_axis or cfg.kv_axes):
+        return x
+    from jax.sharding import PartitionSpec as P
+
+    return jax.lax.with_sharding_constraint(x, P(*dims))
+
+
+def _res_spec(cfg):  # residual stream (B, S, d)
+    return (cfg.batch_axes or None, cfg.seq_axis, None)
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int = 16
+    top_k: int = 2
+    d_ff: int = 6400
+    period: int = 1  # an MoE layer every `period` layers
+    capacity_factor: float = 1.25
+    shared_expert: bool = False  # always-active expert beside the routed one
+    #                              (Llama-4 Maverick style)
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str = "tiny"
+    n_layers: int = 2
+    d_model: int = 128
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    d_ff: int = 256
+    vocab: int = 1024
+    head_dim: Optional[int] = None  # default d_model // n_heads
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+    moe: Optional[MoEConfig] = None
+    dtype: Any = jnp.bfloat16  # compute/activation dtype
+    param_dtype: Any = jnp.float32
+    attn_impl: str = "auto"  # "einsum" | "blockwise" | "auto"
+    blockwise_q: int = 1024
+    blockwise_kv: int = 1024
+    tie_embeddings: bool = False
+    # Analysis mode: fully unroll every lax.scan.  XLA's HLO cost analysis
+    # counts a while body ONCE regardless of trip count, so roofline-term
+    # extraction lowers shallow unrolled variants (launch/roofline.py);
+    # production keeps scan (O(1) HLO size).
+    scan_unroll: bool = False
+    # Activation sharding constraints (mesh axis names).  GSPMD propagation
+    # alone loses the batch sharding through the layer stack (observed:
+    # logits replicated over 'data' => 134 GB/dev); explicit constraints on
+    # the residual stream / logits / KV cache pin it.  Empty tuples / None
+    # disable (single-device tests).  Set by launch/cells.py per cell.
+    batch_axes: Tuple[str, ...] = ()   # DP axes for activations
+    tp_axis: Optional[str] = None      # tensor axis (vocab dim of logits)
+    # Flat-GQA: materialize K/V at full query-head count before attention so
+    # the head dim shards cleanly over TP.  With n_kv_heads < TP size, GSPMD
+    # otherwise splits the GQA group dim to fill the axis and emits
+    # logits-sized partial all-reduces in the backward (measured: 60 GB AR
+    # per layer for deepseek train_4k).  Costs a K/V repeat + head padding.
+    attn_flat_heads: bool = False
+    seq_axis: Optional[Any] = None     # sequence axis (SP) — perf lever
+    kv_axes: Optional[Any] = None      # KV-cache length axis (decode split-K)
+
+    @property
+    def dh(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def moe_period(self) -> int:
+        return self.moe.period if self.moe else 0
+
+    @property
+    def n_blocks(self) -> int:
+        if not self.moe:
+            return self.n_layers
+        assert self.n_layers % self.moe.period == 0
+        return self.n_layers // self.moe.period
+
+    @property
+    def dense_per_block(self) -> int:
+        return 0 if not self.moe else self.moe.period - 1
+
+    def param_count(self) -> Tuple[int, int]:
+        """(total, active) parameter counts (active differs for MoE)."""
+        d, dh = self.d_model, self.dh
+        attn = d * (self.n_heads * dh) + 2 * d * (self.n_kv_heads * dh) + (
+            self.n_heads * dh
+        ) * d
+        dense_ffn = 3 * d * self.d_ff
+        emb = self.vocab * d * (1 if self.tie_embeddings else 2)
+        norms = 2 * d
+        if not self.moe:
+            per_layer = attn + dense_ffn + norms
+            total = self.n_layers * per_layer + emb + d
+            return total, total
+        moe_ffn = 3 * d * self.moe.d_ff
+        shared = moe_ffn if self.moe.shared_expert else 0
+        router = d * self.moe.num_experts
+        n_moe = self.n_blocks
+        n_dense = self.n_layers - n_moe
+        total = (
+            n_dense * (attn + dense_ffn + norms)
+            + n_moe * (attn + router + self.moe.num_experts * moe_ffn + shared + norms)
+            + emb
+            + d
+        )
+        active = (
+            n_dense * (attn + dense_ffn + norms)
+            + n_moe * (attn + router + self.moe.top_k * moe_ffn + shared + norms)
+            + emb
+            + d
+        )
+        return total, active
+
+
+# --------------------------------------------------------------------------
+# Initialization
+# --------------------------------------------------------------------------
+
+
+def _dense_layer_shapes(cfg: TransformerConfig, d_ff: int) -> Dict[str, tuple]:
+    d, dh = cfg.d_model, cfg.dh
+    return {
+        "ln1": (d,),
+        "ln2": (d,),
+        "wq": (d, cfg.n_heads * dh),
+        "wk": (d, cfg.n_kv_heads * dh),
+        "wv": (d, cfg.n_kv_heads * dh),
+        "wo": (cfg.n_heads * dh, d),
+        "w_gate": (d, d_ff),
+        "w_up": (d, d_ff),
+        "w_down": (d_ff, d),
+    }
+
+
+def _moe_layer_shapes(cfg: TransformerConfig) -> Dict[str, tuple]:
+    d, dh, m = cfg.d_model, cfg.dh, cfg.moe
+    return {
+        "ln1": (d,),
+        "ln2": (d,),
+        "wq": (d, cfg.n_heads * dh),
+        "wk": (d, cfg.n_kv_heads * dh),
+        "wv": (d, cfg.n_kv_heads * dh),
+        "wo": (cfg.n_heads * dh, d),
+        "router": (d, m.num_experts),
+        "moe_gate": (m.num_experts, d, m.d_ff),
+        "moe_up": (m.num_experts, d, m.d_ff),
+        "moe_down": (m.num_experts, m.d_ff, d),
+        **({"w_gate": (d, m.d_ff), "w_up": (d, m.d_ff),
+            "w_down": (m.d_ff, d)} if m.shared_expert else {}),
+    }
+
+
+def param_shapes(cfg: TransformerConfig) -> Params:
+    """Abstract parameter tree (shapes only) - used by init and the dry-run
+    (jax.eval_shape avoids materializing 400B parameters on the host)."""
+    nb = cfg.n_blocks
+    shapes: Params = {
+        "embed": (cfg.vocab, cfg.d_model),
+        "final_ln": (cfg.d_model,),
+    }
+    if not cfg.tie_embeddings:
+        shapes["lm_head"] = (cfg.d_model, cfg.vocab)
+    if cfg.moe:
+        if cfg.dense_per_block:
+            shapes["dense_layers"] = {
+                k: (nb, cfg.dense_per_block) + s
+                for k, s in _dense_layer_shapes(cfg, cfg.d_ff).items()
+            }
+        shapes["moe_layers"] = {
+            k: (nb,) + s for k, s in _moe_layer_shapes(cfg).items()
+        }
+    else:
+        shapes["layers"] = {
+            k: (nb,) + s for k, s in _dense_layer_shapes(cfg, cfg.d_ff).items()
+        }
+    return shapes
+
+
+def init_params(key: jax.Array, cfg: TransformerConfig) -> Params:
+    shapes = param_shapes(cfg)
+    flat, treedef = jax.tree_util.tree_flatten(shapes, is_leaf=lambda x: isinstance(x, tuple))
+    keys = jax.random.split(key, len(flat))
+
+    def init_one(k, shape):
+        if len(shape) >= 2:
+            fan_in = shape[-2]
+            std = 1.0 / math.sqrt(fan_in)
+            return (jax.random.normal(k, shape, jnp.float32) * std).astype(
+                cfg.param_dtype
+            )
+        return jnp.ones(shape, cfg.param_dtype)  # norms
+
+    leaves = [init_one(k, s) for k, s in zip(keys, flat)]
+    params = jax.tree_util.tree_unflatten(treedef, leaves)
+    # Embedding init: std 0.02, norms ones.
+    params["embed"] = (
+        jax.random.normal(jax.random.fold_in(key, 999), shapes["embed"], jnp.float32)
+        * 0.02
+    ).astype(cfg.param_dtype)
+    return params
+
+
+# --------------------------------------------------------------------------
+# Primitives
+# --------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float) -> jax.Array:
+    # Variance accumulates in f32 WITHOUT materializing an f32 copy of x:
+    # an f32 x would make the residual-stream cotangents f32 too, doubling
+    # every TP all-reduce in the backward (measured on deepseek train_4k).
+    var = jnp.einsum(
+        "...d,...d->...", x, x, preferred_element_type=jnp.float32
+    ) / x.shape[-1]
+    inv = jax.lax.rsqrt(var + eps)[..., None].astype(x.dtype)
+    return x * inv * w.astype(x.dtype)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, dh); positions: (..., S)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = jnp.exp(
+        -math.log(theta) * jnp.arange(0, half, dtype=jnp.float32) / half
+    )
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, half)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+def _einsum_attention(q, k, v, q_offset: int = 0, flat_gqa: bool = False) -> jax.Array:
+    """q: (B,S,Hq,dh), k/v: (B,T,Hkv,dh). Causal w.r.t. absolute positions
+    (q position i attends to kv positions <= q_offset + i)."""
+    b, s, hq, dh = q.shape
+    if flat_gqa and k.shape[2] != hq:
+        rep = hq // k.shape[2]
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    t, hkv = k.shape[1], k.shape[2]
+    group = hq // hkv
+    qg = q.reshape(b, s, hkv, group, dh)
+    logits = jnp.einsum(
+        "bshgd,bthd->bhgst", qg, k, preferred_element_type=jnp.float32
+    ) / math.sqrt(dh)
+    q_pos = q_offset + jnp.arange(s)[:, None]
+    k_pos = jnp.arange(t)[None, :]
+    mask = q_pos >= k_pos  # (s, t)
+    logits = jnp.where(mask[None, None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgst,bthd->bshgd", probs.astype(v.dtype), v)
+    return out.reshape(b, s, hq, dh)
+
+
+def _blockwise_attention(
+    q, k, v, bq: int, bk: int, q_offset: int = 0, unroll: bool = False,
+    flat_gqa: bool = False,
+) -> jax.Array:
+    """Memory-efficient causal attention: outer scan over query blocks,
+    inner scan over KV blocks with online-softmax carry.  Pure jnp (and so
+    differentiable + shardable); the Pallas flash kernel implements the same
+    contract on TPU."""
+    b, s, hq, dh = q.shape
+    if flat_gqa and k.shape[2] != hq:
+        rep = hq // k.shape[2]
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    t, hkv = k.shape[1], k.shape[2]
+    group = hq // hkv
+    s_pad, t_pad = (-s) % bq, (-t) % bk
+    qp = jnp.pad(q, ((0, 0), (0, s_pad), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, t_pad), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, t_pad), (0, 0), (0, 0)))
+    nq, nk = qp.shape[1] // bq, kp.shape[1] // bk
+    qb = jnp.moveaxis(qp.reshape(b, nq, bq, hkv, group, dh), 1, 0)
+    kb = jnp.moveaxis(kp.reshape(b, nk, bk, hkv, dh), 1, 0)
+    vb = jnp.moveaxis(vp.reshape(b, nk, bk, hkv, dh), 1, 0)
+    scale = 1.0 / math.sqrt(dh)
+
+    def q_step(_, qi_and_block):
+        qi, qblk = qi_and_block  # qblk: (b, bq, hkv, g, dh)
+
+        def kv_step(carry, ki_and_blocks):
+            m_prev, l_prev, acc = carry
+            ki, kblk, vblk = ki_and_blocks
+            logits = (
+                jnp.einsum(
+                    "bqhgd,bkhd->bhgqk", qblk, kblk,
+                    preferred_element_type=jnp.float32,
+                )
+                * scale
+            )
+            q_pos = q_offset + qi * bq + jnp.arange(bq)[:, None]
+            k_pos = ki * bk + jnp.arange(bk)[None, :]
+            mask = (q_pos >= k_pos) & (k_pos < t)
+            logits = jnp.where(mask[None, None, None], logits, -1e30)
+            m_cur = jnp.max(logits, axis=-1)
+            m_new = jnp.maximum(m_prev, m_cur)
+            p = jnp.exp(logits - m_new[..., None])
+            alpha = jnp.exp(m_prev - m_new)
+            l_new = alpha * l_prev + jnp.sum(p, axis=-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p.astype(vblk.dtype), vblk,
+                preferred_element_type=jnp.float32,
+            )
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((b, hkv, group, bq), -1e30, jnp.float32)
+        l0 = jnp.zeros((b, hkv, group, bq), jnp.float32)
+        a0 = jnp.zeros((b, hkv, group, bq, dh), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), (jnp.arange(nk), kb, vb), unroll=unroll
+        )
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        out = jnp.moveaxis(out, (1, 2), (2, 3))  # (b, bq, hkv, g, dh)
+        return None, out.astype(q.dtype)
+
+    _, blocks = jax.lax.scan(q_step, None, (jnp.arange(nq), qb), unroll=unroll)
+    out = jnp.moveaxis(blocks, 0, 1).reshape(b, nq * bq, hkv * group, dh)
+    return out[:, :s]
+
+
+def _blockwise_attention_unrolled(
+    q, k, v, bq: int, bk: int, q_offset: int = 0
+) -> jax.Array:
+    """Python-unrolled blockwise attention with STATIC causal skipping: kv
+    blocks entirely in the future of a query block are never computed —
+    matching what the Pallas flash kernel does on TPU (the lax.scan variant
+    masks them instead, which double-counts attention flops in analysis).
+    Used when cfg.scan_unroll (roofline analysis mode)."""
+    b, s, hq, dh = q.shape
+    t, hkv = k.shape[1], k.shape[2]
+    group = hq // hkv
+    s_pad, t_pad = (-s) % bq, (-t) % bk
+    qp = jnp.pad(q, ((0, 0), (0, s_pad), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, t_pad), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, t_pad), (0, 0), (0, 0)))
+    nq, nk = qp.shape[1] // bq, kp.shape[1] // bk
+    scale = 1.0 / math.sqrt(dh)
+    out_blocks = []
+    for qi in range(nq):
+        qblk = qp[:, qi * bq : (qi + 1) * bq].reshape(b, bq, hkv, group, dh)
+        m = jnp.full((b, hkv, group, bq), -1e30, jnp.float32)
+        l = jnp.zeros((b, hkv, group, bq), jnp.float32)
+        acc = jnp.zeros((b, hkv, group, bq, dh), jnp.float32)
+        q_max = q_offset + (qi + 1) * bq - 1
+        for ki in range(nk):
+            if ki * bk > q_max:
+                continue  # static causal skip
+            kblk = kp[:, ki * bk : (ki + 1) * bk].reshape(b, bk, hkv, dh)
+            vblk = vp[:, ki * bk : (ki + 1) * bk].reshape(b, bk, hkv, dh)
+            logits = jnp.einsum(
+                "bqhgd,bkhd->bhgqk", qblk, kblk,
+                preferred_element_type=jnp.float32,
+            ) * scale
+            q_pos = q_offset + qi * bq + jnp.arange(bq)[:, None]
+            k_pos = ki * bk + jnp.arange(bk)[None, :]
+            mask = (q_pos >= k_pos) & (k_pos < t)
+            logits = jnp.where(mask[None, None, None], logits, -1e30)
+            m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+            p = jnp.exp(logits - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l = alpha * l + jnp.sum(p, axis=-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p.astype(vblk.dtype), vblk,
+                preferred_element_type=jnp.float32,
+            )
+            m = m_new
+        o = acc / jnp.maximum(l, 1e-30)[..., None]
+        o = jnp.moveaxis(o, (1, 2), (2, 3))  # (b, bq, hkv, g, dh)
+        out_blocks.append(o.astype(q.dtype))
+    out = jnp.concatenate(out_blocks, axis=1).reshape(b, nq * bq, hq, dh)
+    return out[:, :s].reshape(b, s, hq, dh)
+
+
+def attention(x, layer, cfg: TransformerConfig, positions) -> jax.Array:
+    b, s, d = x.shape
+    dh = cfg.dh
+    q = (x @ layer["wq"].astype(x.dtype)).reshape(b, s, cfg.n_heads, dh)
+    k = (x @ layer["wk"].astype(x.dtype)).reshape(b, s, cfg.n_kv_heads, dh)
+    v = (x @ layer["wv"].astype(x.dtype)).reshape(b, s, cfg.n_kv_heads, dh)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    if cfg.attn_flat_heads:
+        # Materialize K/V at full query-head count and pin the head dim to
+        # TP: heads shard cleanly (GSPMD pads 56 -> 64 rather than splitting
+        # the GQA group axis into tiny partial-reduce groups).
+        if cfg.n_kv_heads != cfg.n_heads:
+            rep = cfg.n_heads // cfg.n_kv_heads
+            k = jnp.repeat(k, rep, axis=2)
+            v = jnp.repeat(v, rep, axis=2)
+        hd_spec = (cfg.batch_axes or None, None, cfg.tp_axis, None)
+        q = _constrained(q, cfg, *hd_spec)
+        k = _constrained(k, cfg, *hd_spec)
+        v = _constrained(v, cfg, *hd_spec)
+    # Clamp tiles to the (padded) sequence so oversized analysis blocks
+    # never pad S upward (bq=8192 on S=4096 doubled the padded length and
+    # quadrupled attention work — measured).
+    bq = min(cfg.blockwise_q, s)
+    bk = min(cfg.blockwise_kv, s)
+    impl = cfg.attn_impl
+    if impl == "auto":
+        impl = "blockwise" if s > 2048 else "einsum"
+    if impl == "blockwise" and cfg.scan_unroll:
+        o = _blockwise_attention_unrolled(q, k, v, bq, bk)
+    elif impl == "blockwise":
+        o = _blockwise_attention(
+            q, k, v, bq, bk, unroll=False, flat_gqa=False,
+        )
+    else:
+        o = _einsum_attention(q, k, v)
+    return o.reshape(b, s, cfg.n_heads * dh) @ layer["wo"].astype(x.dtype)
+
+
+def swiglu(x, layer, prefix: str = "w") -> jax.Array:
+    g = x @ layer[f"{prefix}_gate"].astype(x.dtype)
+    u = x @ layer[f"{prefix}_up"].astype(x.dtype)
+    return (jax.nn.silu(g) * u) @ layer[f"{prefix}_down"].astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# MoE: sort-based capacity dispatch (GShard-style, static shapes)
+# --------------------------------------------------------------------------
+
+
+def _moe_dispatch_group(xt, top_e, top_p, e: int, k: int, cap: int):
+    """Per-group (one sequence) sort-based dispatch.  xt: (S, d), top_e/p:
+    (S, k).  Returns (expert_in (E, C, d), st, slot, keep, sp) for combine.
+    Runs under vmap over the batch axis, so sorts stay shard-local when the
+    batch is data-sharded (no distributed sort — the pod-scale requirement).
+    """
+    s, d = xt.shape
+    flat_e = top_e.reshape(-1)  # (S*k,)
+    flat_t = jnp.repeat(jnp.arange(s), k)
+    flat_p = top_p.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)  # group by expert
+    se, st, sp = flat_e[order], flat_t[order], flat_p[order]
+    counts = jnp.bincount(se, length=e)  # (E,)
+    starts = jnp.concatenate([jnp.zeros((1,), counts.dtype), jnp.cumsum(counts)[:-1]])
+    pos_in_e = jnp.arange(s * k) - starts[se]
+    keep = pos_in_e < cap  # capacity drop (overflow tokens pass through)
+    slot = jnp.where(keep, se * cap + pos_in_e, e * cap)  # overflow -> trash row
+    buf = jnp.zeros((e * cap + 1, d), xt.dtype).at[slot].set(xt[st])
+    return buf[: e * cap].reshape(e, cap, d), st, slot, keep, sp
+
+
+def moe_ffn(
+    x: jax.Array, layer: Params, cfg: TransformerConfig, dropless: bool = False
+) -> jax.Array:
+    """x: (B, S, d) -> (B, S, d).  GShard-style sort-based dispatch with
+    static capacity, **grouped by batch row**: each sequence dispatches its
+    own tokens (capacity = capacity_factor * S * k / E per group), so with
+    the batch sharded over 'data' the argsort/scatter are shard-local and
+    the only cross-device movement is the (B, E, C, d) buffer's expert axis
+    (the MoE all-to-all, experts sharded over 'model').
+
+    ``dropless=True`` sets capacity = S (no token ever dropped); used by the
+    decode path, where a drop would silently skip the FFN for a live
+    request."""
+    m = cfg.moe
+    b, s, d = x.shape
+    e, k = m.num_experts, m.top_k
+    cap = s if dropless else max(1, min(int(m.capacity_factor * s * k / e), s))
+
+    router_logits = (x @ layer["router"].astype(x.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(router_logits, axis=-1)  # (B, S, E)
+    top_p, top_e = jax.lax.top_k(probs, k)  # (B, S, k)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)  # renormalize
+
+    expert_in, st, slot, keep, sp = jax.vmap(
+        functools.partial(_moe_dispatch_group, e=e, k=k, cap=cap)
+    )(x.reshape(b, s, d), top_e, top_p)  # expert_in: (B, E, C, d)
+
+    # Grouped expert FFN over the stacked expert weights (EP over 'model').
+    g = jnp.einsum("becd,edf->becf", expert_in, layer["moe_gate"].astype(x.dtype))
+    u = jnp.einsum("becd,edf->becf", expert_in, layer["moe_up"].astype(x.dtype))
+    y = jnp.einsum(
+        "becf,efd->becd", jax.nn.silu(g) * u, layer["moe_down"].astype(x.dtype)
+    )
+    y = y.reshape(b, e * cap, d)
+
+    # Combine: weighted scatter-add back to token order, per group.
+    def combine(y_g, st_g, slot_g, keep_g, sp_g):
+        contrib = jnp.where(
+            keep_g[:, None], y_g[jnp.minimum(slot_g, e * cap - 1)], 0.0
+        )
+        return (
+            jnp.zeros((s, d), x.dtype)
+            .at[st_g]
+            .add(contrib * sp_g[:, None].astype(x.dtype))
+        )
+
+    out = jax.vmap(combine)(y, st, slot, keep, sp)
+    return out.reshape(b, s, d)
+
+
+def moe_aux_loss(router_logits: jax.Array, top_e: jax.Array, e: int) -> jax.Array:
+    """Load-balancing auxiliary loss (Switch/GShard): E * sum_e f_e * p_e."""
+    probs = jax.nn.softmax(router_logits.astype(jnp.float32), axis=-1)
+    p_mean = jnp.mean(probs, axis=0)
+    f = jnp.mean(
+        jax.nn.one_hot(top_e[..., 0], e, dtype=jnp.float32), axis=0
+    )
+    return e * jnp.sum(f * p_mean)
+
+
+# --------------------------------------------------------------------------
+# Forward / loss
+# --------------------------------------------------------------------------
+
+
+def _dense_layer(x, layer, cfg, positions):
+    x = x + attention(rms_norm(x, layer["ln1"], cfg.norm_eps), layer, cfg, positions)
+    x = x + swiglu(rms_norm(x, layer["ln2"], cfg.norm_eps), layer)
+    return x
+
+
+def _moe_layer(x, layer, cfg, positions, dropless: bool = False):
+    """dropless=True on serving paths (prefill/decode): a capacity drop
+    there would silently skip the FFN for a live request; training keeps
+    the GShard static capacity."""
+    x = x + attention(rms_norm(x, layer["ln1"], cfg.norm_eps), layer, cfg, positions)
+    h = rms_norm(x, layer["ln2"], cfg.norm_eps)
+    y = moe_ffn(h, layer, cfg, dropless=dropless)
+    if cfg.moe.shared_expert:
+        y = y + swiglu(h, layer)
+    return x + y
+
+
+def forward(params: Params, tokens: jax.Array, cfg: TransformerConfig) -> jax.Array:
+    """tokens: (B, S) int32 -> logits (B, S, vocab) in f32."""
+    b, s = tokens.shape
+    x = params["embed"].astype(cfg.dtype)[tokens]
+    x = _constrained(x, cfg, *_res_spec(cfg))
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+    if cfg.moe:
+        dense_stack = params.get("dense_layers")
+
+        def block(x, blk_params):
+            if dense_stack is not None:
+                dl = blk_params["dense"]
+
+                def inner(x, one_dense):
+                    return _dense_layer(x, one_dense, cfg, positions), None
+
+                x, _ = _scan(cfg, inner, x, dl)
+            x = _moe_layer(x, blk_params["moe"], cfg, positions)
+            return _constrained(x, cfg, *_res_spec(cfg)), None
+
+        blk_tree = {"moe": params["moe_layers"]}
+        if dense_stack is not None:
+            blk_tree["dense"] = dense_stack
+        x, _ = _scan(
+            cfg,
+            jax.checkpoint(block, policy=jax.checkpoint_policies.nothing_saveable),
+            x,
+            blk_tree,
+        )
+    else:
+
+        def block(x, layer):
+            x = _dense_layer(x, layer, cfg, positions)
+            return _constrained(x, cfg, *_res_spec(cfg)), None
+
+        x, _ = _scan(
+            cfg,
+            jax.checkpoint(block, policy=jax.checkpoint_policies.nothing_saveable),
+            x,
+            params["layers"],
+        )
+
+    x = rms_norm(x, params["final_ln"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = (x @ head.astype(x.dtype)).astype(jnp.float32)
+    return _constrained(logits, cfg, cfg.batch_axes or None, cfg.seq_axis, cfg.tp_axis)
+
+
+def loss_fn(
+    params: Params, tokens: jax.Array, labels: jax.Array, cfg: TransformerConfig
+) -> jax.Array:
+    logits = forward(params, tokens, cfg)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    # Label-logit extraction via iota-compare + masked max instead of
+    # take_along_axis: with logits vocab-sharded over 'model' (TP head) this
+    # stays elementwise + reduce (psum), whereas a gather on the sharded
+    # vocab axis would force GSPMD to all-gather the (B, S, V) logits.
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 2)
+    hit = vocab_iota == labels[..., None]
+    label_logit = jnp.max(jnp.where(hit, logits, -jnp.inf), axis=-1)
+    return jnp.mean(logz - label_logit)
+
+
+# --------------------------------------------------------------------------
+# Serving: prefill + single-token decode against a KV cache
+# --------------------------------------------------------------------------
+
+
+def _layer_kv(x, layer, cfg, positions):
+    b, s, _ = x.shape
+    h = rms_norm(x, layer["ln1"], cfg.norm_eps)
+    k = (h @ layer["wk"].astype(x.dtype)).reshape(b, s, cfg.n_kv_heads, cfg.dh)
+    v = (h @ layer["wv"].astype(x.dtype)).reshape(b, s, cfg.n_kv_heads, cfg.dh)
+    k, v = (
+        _constrained(k, cfg, cfg.batch_axes or None, cfg.kv_axes, None, None),
+        _constrained(v, cfg, cfg.batch_axes or None, cfg.kv_axes, None, None),
+    )
+    return rope(k, positions, cfg.rope_theta), v
+
+
+def prefill(
+    params: Params, tokens: jax.Array, cfg: TransformerConfig
+) -> Tuple[Params, jax.Array]:
+    """Full-sequence forward that also returns the per-layer KV cache
+    (stacked (n_layers_effective, B, S, Hkv, dh)) and last-position logits."""
+    b, s = tokens.shape
+    x = params["embed"].astype(cfg.dtype)[tokens]
+    x = _constrained(x, cfg, *_res_spec(cfg))
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    caches_k, caches_v = [], []
+
+    def run_dense_stack(x, stack):
+        def step(x, layer):
+            k, v = _layer_kv(x, layer, cfg, positions)
+            return _dense_layer(x, layer, cfg, positions), (k, v)
+
+        return _scan(cfg, step, x, stack)
+
+    if cfg.moe:
+        if params.get("dense_layers") is not None:
+
+            def blk(x, p):
+                x, (kd, vd) = run_dense_stack(x, p["dense"])
+                km, vm = _layer_kv(x, p["moe"], cfg, positions)
+                # capped dispatch: dropless at prefill (cap = S = 32k)
+                # inflates the (E, C, d) buffers to ~43 GB/device and was
+                # measured 18x collective-worse; bounded-drop prefill is
+                # the production standard.  Decode stays dropless (S = 1).
+                x = _moe_layer(x, p["moe"], cfg, positions)
+                return x, (kd, vd, km, vm)
+
+            tree = {"dense": params["dense_layers"], "moe": params["moe_layers"]}
+            x, (kd, vd, km, vm) = _scan(cfg, blk, x, tree)
+            # Interleave dense + moe caches into layer order.
+            nb, dp = kd.shape[0], kd.shape[1]
+            kd = kd.reshape((nb * dp,) + kd.shape[2:])
+            vd = vd.reshape((nb * dp,) + vd.shape[2:])
+            # layer order per block: dense..., moe - concatenate per block.
+            k_all = jnp.concatenate(
+                [kd.reshape(nb, dp, *kd.shape[1:]), km[:, None]], axis=1
+            ).reshape(nb * (dp + 1), *km.shape[1:])
+            v_all = jnp.concatenate(
+                [vd.reshape(nb, dp, *vd.shape[1:]), vm[:, None]], axis=1
+            ).reshape(nb * (dp + 1), *vm.shape[1:])
+        else:
+
+            def blk(x, p):
+                k, v = _layer_kv(x, p, cfg, positions)
+                x = _moe_layer(x, p, cfg, positions)
+                return x, (k, v)
+
+            x, (k_all, v_all) = _scan(cfg, blk, x, params["moe_layers"])
+    else:
+
+        def blk(x, p):
+            k, v = _layer_kv(x, p, cfg, positions)
+            x = _dense_layer(x, p, cfg, positions)
+            return x, (k, v)
+
+        x, (k_all, v_all) = _scan(cfg, blk, x, params["layers"])
+
+    x = rms_norm(x, params["final_ln"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits_last = (x[:, -1] @ head.astype(x.dtype)).astype(jnp.float32)
+    cache = {"k": k_all, "v": v_all, "length": jnp.int32(s)}
+    return cache, logits_last
+
+
+def _decode_attention(q, cache_k, cache_v, length) -> jax.Array:
+    """q: (B, 1, Hq, dh); cache: (B, T, Hkv, dh); positions >= length masked.
+    With the cache length-sharded on 'model', GSPMD lowers this to
+    flash-decoding split-K partials + psum."""
+    b, _, hq, dh = q.shape
+    t, hkv = cache_k.shape[1], cache_k.shape[2]
+    group = hq // hkv
+    qg = q.reshape(b, hkv, group, dh)
+    logits = jnp.einsum(
+        "bhgd,bthd->bhgt", qg, cache_k, preferred_element_type=jnp.float32
+    ) / math.sqrt(dh)
+    mask = jnp.arange(t)[None, None, None, :] < length
+    logits = jnp.where(mask, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgt,bthd->bhgd", probs.astype(cache_v.dtype), cache_v)
+    return out.reshape(b, 1, hq * dh)
+
+
+def _decode_attention_incremental(
+    q, cache_k, cache_v, k_new, v_new, length
+) -> jax.Array:
+    """Decode attention over the PRE-update cache plus an explicit term for
+    the token being generated (exact: softmax over [cache[<length], new]).
+    Lets the cache update stay in-place (see decode_step.one_layer)."""
+    b, _, hq, dh = q.shape
+    t, hkv = cache_k.shape[1], cache_k.shape[2]
+    group = hq // hkv
+    qg = q.reshape(b, hkv, group, dh)
+    logits = jnp.einsum(
+        "bhgd,bthd->bhgt", qg, cache_k, preferred_element_type=jnp.float32
+    ) / math.sqrt(dh)
+    mask = jnp.arange(t)[None, None, None, :] < length  # strictly past
+    logits = jnp.where(mask, logits, -1e30)
+    logit_new = jnp.einsum(
+        "bhgd,bhd->bhg", qg, k_new[:, 0], preferred_element_type=jnp.float32
+    ) / math.sqrt(dh)
+    m = jnp.maximum(jnp.max(logits, axis=-1), logit_new)
+    p = jnp.exp(logits - m[..., None])
+    p_new = jnp.exp(logit_new - m)
+    denom = jnp.sum(p, axis=-1) + p_new
+    acc = jnp.einsum(
+        "bhgt,bthd->bhgd", p.astype(cache_v.dtype), cache_v,
+        preferred_element_type=jnp.float32,
+    ) + p_new[..., None] * v_new[:, 0][:, :, None, :].astype(jnp.float32)
+    out = (acc / denom[..., None]).astype(cache_v.dtype)
+    return out.reshape(b, 1, hq * dh)
+
+
+def decode_step(
+    params: Params,
+    cache: Params,
+    token: jax.Array,  # (B,) int32
+    cfg: TransformerConfig,
+) -> Tuple[Params, jax.Array]:
+    """One decode step: append the token's KV at position ``length`` and
+    return next-token logits.  Cache layout (L, B, T_max, Hkv, dh).
+
+    The full cache rides the scan CARRY (not stacked ys): XLA aliases while
+    -loop carries in place, so with the cache donated the step runs with one
+    cache buffer — stacking per-layer ys instead was measured to double the
+    footprint (6.4 GB extra/device for phi3-mini decode_32k)."""
+    b = token.shape[0]
+    length = cache["length"]
+    x = params["embed"].astype(cfg.dtype)[token][:, None, :]  # (B,1,d)
+    x = _constrained(x, cfg, cfg.batch_axes or None, None, None)
+    positions = jnp.full((b, 1), length, jnp.int32)
+
+    def one_layer(x, layer, i, kf, vf):
+        """kf/vf: full (L, B, T, Hkv, dh) cache; i: layer index.
+
+        In-place discipline: the cache row is read BEFORE the update and the
+        new token's attention term is added analytically
+        (_decode_attention_incremental) — a read of the row *after* the
+        dynamic-update forces XLA to keep two live cache versions
+        (measured: +2x cache temp).  No sharding constraint on the carry
+        either (a Sharding custom-call also breaks buffer aliasing); in/out
+        jit shardings pin the layout."""
+        h = rms_norm(x, layer["ln1"], cfg.norm_eps)
+        q = (h @ layer["wq"].astype(x.dtype)).reshape(b, 1, cfg.n_heads, cfg.dh)
+        k = (h @ layer["wk"].astype(x.dtype)).reshape(b, 1, cfg.n_kv_heads, cfg.dh)
+        v = (h @ layer["wv"].astype(x.dtype)).reshape(b, 1, cfg.n_kv_heads, cfg.dh)
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+        k_old = jax.lax.dynamic_index_in_dim(kf, i, 0, keepdims=False)
+        v_old = jax.lax.dynamic_index_in_dim(vf, i, 0, keepdims=False)
+        attn_out = _decode_attention_incremental(q, k_old, v_old, k, v, length)
+        kf = jax.lax.dynamic_update_slice(kf, k[None], (i, 0, length, 0, 0))
+        vf = jax.lax.dynamic_update_slice(vf, v[None], (i, 0, length, 0, 0))
+        x = x + attn_out @ layer["wo"].astype(x.dtype)
+        return x, kf, vf
+
+    def dense_step(x, layer, i, kf, vf):
+        x, kf, vf = one_layer(x, layer, i, kf, vf)
+        x = x + swiglu(rms_norm(x, layer["ln2"], cfg.norm_eps), layer)
+        return x, kf, vf
+
+    def moe_step(x, layer, i, kf, vf):
+        x, kf, vf = one_layer(x, layer, i, kf, vf)
+        h = rms_norm(x, layer["ln2"], cfg.norm_eps)
+        y = moe_ffn(h, layer, cfg, dropless=True)
+        if cfg.moe.shared_expert:
+            y = y + swiglu(h, layer)
+        return x + y, kf, vf
+
+    carry0 = (x, cache["k"], cache["v"])
+    if cfg.moe and params.get("dense_layers") is not None:
+        dp = cfg.dense_per_block
+        nb = cfg.n_blocks
+
+        def blk(carry, xs):
+            x, kf, vf = carry
+            p_dense, p_moe, bi = xs
+
+            def inner(carry2, xs2):
+                x, kf, vf = carry2
+                layer, j = xs2
+                x, kf, vf = dense_step(x, layer, bi * (dp + 1) + j, kf, vf)
+                return (x, kf, vf), None
+
+            (x, kf, vf), _ = _scan(
+                cfg, inner, (x, kf, vf), (p_dense, jnp.arange(dp))
+            )
+            x, kf, vf = moe_step(x, p_moe, bi * (dp + 1) + dp, kf, vf)
+            return (x, kf, vf), None
+
+        (x, k_new, v_new), _ = _scan(
+            cfg, blk, carry0,
+            (params["dense_layers"], params["moe_layers"], jnp.arange(nb)),
+        )
+    elif cfg.moe:
+
+        def blk(carry, xs):
+            x, kf, vf = carry
+            layer, i = xs
+            x, kf, vf = moe_step(x, layer, i, kf, vf)
+            return (x, kf, vf), None
+
+        (x, k_new, v_new), _ = _scan(
+            cfg, blk, carry0, (params["moe_layers"], jnp.arange(cfg.n_blocks))
+        )
+    else:
+
+        def blk(carry, xs):
+            x, kf, vf = carry
+            layer, i = xs
+            x, kf, vf = dense_step(x, layer, i, kf, vf)
+            return (x, kf, vf), None
+
+        (x, k_new, v_new), _ = _scan(
+            cfg, blk, carry0, (params["layers"], jnp.arange(cfg.n_layers))
+        )
+
+    x = rms_norm(x, params["final_ln"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = (x[:, 0] @ head.astype(x.dtype)).astype(jnp.float32)
+    new_cache = {"k": k_new, "v": v_new, "length": length + 1}
+    return new_cache, logits
+
+
+def make_cache(
+    cfg: TransformerConfig, batch: int, max_len: int, dtype=None
+) -> Params:
+    dtype = dtype or cfg.dtype
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.dh)
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+        "length": jnp.int32(0),
+    }

@@ -1,0 +1,99 @@
+"""Batched ANN query service over a sharded fake-words index.
+
+The serving-side realization of the paper: a query stream is micro-batched
+(latency/throughput knob), encoded to fake-words term vectors, and searched
+against the pod-sharded index (core/distributed.py: local GEMM + local
+top-d + rerank + tiny all-gather merge).  This is the Lucene
+query-fan-out/merge architecture, one jit'd function per batch.
+
+Also provides the single-node service used by examples and benchmarks.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.core import bruteforce, distributed, fakewords
+from repro.core.types import FakeWordsConfig, FakeWordsIndex
+
+
+@dataclasses.dataclass
+class AnnServiceConfig:
+    k: int = 10
+    depth: int = 100
+    rerank: bool = True
+    max_batch: int = 64       # micro-batch size (pad to this)
+    max_wait_s: float = 0.002  # batching window in a real deployment
+
+
+class AnnService:
+    """Single- or multi-device fake-words search service."""
+
+    def __init__(
+        self,
+        index: FakeWordsIndex,
+        config: FakeWordsConfig,
+        service: AnnServiceConfig,
+        mesh: Optional[Mesh] = None,
+        shard_axes: Sequence[str] = (),
+    ):
+        self.index = index
+        self.config = config
+        self.scfg = service
+        self.mesh = mesh
+        if mesh is not None:
+            self._search = distributed.make_sharded_search(
+                mesh, config, shard_axes,
+                k=service.k, depth=service.depth, rerank=service.rerank,
+            )
+        else:
+            self._search = None
+        self.queries_served = 0
+        self.batches = 0
+
+    def _encode(self, queries: jax.Array) -> Tuple[jax.Array, jax.Array]:
+        q = bruteforce.l2_normalize(queries)
+        return fakewords.encode_queries(q, self.config, normalized=True), q
+
+    def search_batch(self, queries: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """(B, dim) -> (scores (B,k), ids (B,k)); pads to max_batch so the
+        jit cache holds exactly one entry."""
+        b = queries.shape[0]
+        mb = self.scfg.max_batch
+        pad = (-b) % mb
+        if pad:
+            queries = np.concatenate(
+                [queries, np.zeros((pad, queries.shape[1]), queries.dtype)], 0
+            )
+        out_s, out_i = [], []
+        for i in range(0, queries.shape[0], mb):
+            chunk = jnp.asarray(queries[i : i + mb])
+            q_tf, q = self._encode(chunk)
+            if self._search is not None:
+                s, ids = self._search(self.index, q_tf, q)
+            else:
+                s, ids = fakewords.search(
+                    self.index, q_tf, q,
+                    k=self.scfg.k, depth=self.scfg.depth,
+                    scoring=self.config.scoring, rerank=self.scfg.rerank,
+                    df_max_ratio=self.config.df_max_ratio,
+                )
+            out_s.append(np.asarray(s))
+            out_i.append(np.asarray(ids))
+            self.batches += 1
+        self.queries_served += b
+        return np.concatenate(out_s)[:b], np.concatenate(out_i)[:b]
+
+    def stats(self) -> dict:
+        return {
+            "queries": self.queries_served,
+            "batches": self.batches,
+            "index_bytes": self.index.nbytes(),
+            "num_docs": self.index.num_docs,
+        }

@@ -1,0 +1,229 @@
+"""LM serving engine: continuous-batching decode over a shared KV cache.
+
+A fixed pool of B slots; each slot holds one in-flight request.  Per step:
+
+  1. admit queued requests into free slots (prefill writes their KV into the
+     slot's cache region and emits the first token);
+  2. one batched ``decode_step`` advances every active slot by a token;
+  3. slots that emit EOS (or hit max_len) retire and free up.
+
+All device work is two jit'd functions (slot prefill, batched decode);
+admission/retirement is host-side bookkeeping — the standard
+continuous-batching split (vLLM-style, minus paging: slots are fixed-length
+KV regions, the right first cut for TPU where contiguous DMA wins).
+
+Per-slot cache layout (L, B, T_max, Hkv, dh) matches models/transformer;
+under pjit the cache shards batch->'data', length->'model' (flash-decoding
+split-K; DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as tfm
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray          # (plen,) int32
+    max_new_tokens: int = 32
+    out_tokens: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    batch_slots: int = 8
+    max_len: int = 512
+    eos_id: int = 1
+    greedy: bool = True
+
+
+class DecodeEngine:
+    """Host-side continuous batcher around jit'd prefill/decode."""
+
+    def __init__(self, params: Params, cfg: tfm.TransformerConfig, ecfg: EngineConfig):
+        self.params = params
+        self.cfg = cfg
+        self.ecfg = ecfg
+        b, t = ecfg.batch_slots, ecfg.max_len
+        self.cache = tfm.make_cache(cfg, b, t)
+        # Per-slot decode positions (the engine's cache['length'] is per-slot).
+        self.cache["length"] = jnp.zeros((b,), jnp.int32)
+        self.slot_req: List[Optional[Request]] = [None] * b
+        self.queue: List[Request] = []
+        self.steps = 0
+
+        self._decode = jax.jit(self._decode_fn)
+        self._prefill = jax.jit(self._prefill_fn, static_argnames=("plen",))
+
+    # -- device fns --------------------------------------------------------
+
+    def _prefill_fn(self, params, cache, tokens, slot, plen: int):
+        """Prefill one request of static length plen into cache slot."""
+        c, logits = tfm.prefill(params, tokens[None, :], self.cfg)
+        k = cache["k"].at[:, slot, :plen].set(c["k"][:, 0])
+        v = cache["v"].at[:, slot, :plen].set(c["v"][:, 0])
+        length = cache["length"].at[slot].set(plen)
+        first = jnp.argmax(logits[0]).astype(jnp.int32)
+        return {"k": k, "v": v, "length": length}, first
+
+    def _decode_fn(self, params, cache, tokens, active):
+        """Batched decode with PER-SLOT lengths.  tokens: (B,), active: (B,)
+        bool.  Inactive slots decode at position 0 and their cache writes are
+        masked out."""
+        cfg = self.cfg
+        b = tokens.shape[0]
+        lengths = cache["length"]  # (B,)
+        x = params["embed"].astype(cfg.dtype)[tokens][:, None, :]
+        positions = lengths[:, None]
+
+        def one_layer(x, layer, k_cache, v_cache):
+            h = tfm.rms_norm(x, layer["ln1"], cfg.norm_eps)
+            q = (h @ layer["wq"].astype(x.dtype)).reshape(b, 1, cfg.n_heads, cfg.dh)
+            k = (h @ layer["wk"].astype(x.dtype)).reshape(b, 1, cfg.n_kv_heads, cfg.dh)
+            v = (h @ layer["wv"].astype(x.dtype)).reshape(b, 1, cfg.n_kv_heads, cfg.dh)
+            q = tfm.rope(q, positions, cfg.rope_theta)
+            k = tfm.rope(k, positions, cfg.rope_theta)
+            # per-slot scatter at (slot, length) — masked for inactive slots
+            onehot = (
+                jnp.arange(k_cache.shape[1])[None, :] == lengths[:, None]
+            ) & active[:, None]
+            k_cache = jnp.where(onehot[:, :, None, None], k, k_cache)
+            v_cache = jnp.where(onehot[:, :, None, None], v, v_cache)
+            # attention masked per-slot to positions < length+1
+            t = k_cache.shape[1]
+            hkv, group = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads
+            qg = q.reshape(b, hkv, group, cfg.dh)
+            logits = jnp.einsum(
+                "bhgd,bthd->bhgt", qg, k_cache, preferred_element_type=jnp.float32
+            ) / np.sqrt(cfg.dh)
+            mask = jnp.arange(t)[None, None, None, :] <= lengths[:, None, None, None]
+            logits = jnp.where(mask, logits, -1e30)
+            probs = jax.nn.softmax(logits, axis=-1)
+            attn = jnp.einsum("bhgt,bthd->bhgd", probs.astype(v_cache.dtype), v_cache)
+            attn = attn.reshape(b, 1, cfg.n_heads * cfg.dh)
+            x = x + attn @ layer["wo"].astype(x.dtype)
+            return x, k_cache, v_cache
+
+        def dense_step(x, layer, kc, vc):
+            x, kc, vc = one_layer(x, layer, kc, vc)
+            x = x + tfm.swiglu(tfm.rms_norm(x, layer["ln2"], cfg.norm_eps), layer)
+            return x, (kc, vc)
+
+        def moe_step(x, layer, kc, vc):
+            x, kc, vc = one_layer(x, layer, kc, vc)
+            x = x + tfm.moe_ffn(
+                tfm.rms_norm(x, layer["ln2"], cfg.norm_eps), layer, cfg, dropless=True
+            )
+            return x, (kc, vc)
+
+        if cfg.moe and params.get("dense_layers") is not None:
+            dp, nb = cfg.dense_per_block, cfg.n_blocks
+            k_all = cache["k"].reshape(nb, dp + 1, *cache["k"].shape[1:])
+            v_all = cache["v"].reshape(nb, dp + 1, *cache["v"].shape[1:])
+
+            def blk(x, xs):
+                p_dense, p_moe, kc, vc = xs
+
+                def inner(x, one):
+                    layer, kci, vci = one
+                    x, (kci, vci) = dense_step(x, layer, kci, vci)
+                    return x, (kci, vci)
+
+                x, (kcd, vcd) = jax.lax.scan(inner, x, (p_dense, kc[:dp], vc[:dp]))
+                x, (kcm, vcm) = moe_step(x, p_moe, kc[dp], vc[dp])
+                return x, (
+                    jnp.concatenate([kcd, kcm[None]], 0),
+                    jnp.concatenate([vcd, vcm[None]], 0),
+                )
+
+            x, (k_new, v_new) = jax.lax.scan(
+                blk, x, (params["dense_layers"], params["moe_layers"], k_all, v_all)
+            )
+            k_new = k_new.reshape(cache["k"].shape)
+            v_new = v_new.reshape(cache["v"].shape)
+        elif cfg.moe:
+            def blk(x, xs):
+                layer, kc, vc = xs
+                x, (kc, vc) = moe_step(x, layer, kc, vc)
+                return x, (kc, vc)
+            x, (k_new, v_new) = jax.lax.scan(
+                blk, x, (params["moe_layers"], cache["k"], cache["v"])
+            )
+        else:
+            def blk(x, xs):
+                layer, kc, vc = xs
+                x, (kc, vc) = dense_step(x, layer, kc, vc)
+                return x, (kc, vc)
+            x, (k_new, v_new) = jax.lax.scan(
+                blk, x, (params["layers"], cache["k"], cache["v"])
+            )
+
+        x = tfm.rms_norm(x, params["final_ln"], cfg.norm_eps)
+        head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+        logits = (x[:, 0] @ head.astype(x.dtype)).astype(jnp.float32)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        new_len = jnp.where(active, lengths + 1, lengths)
+        return {"k": k_new, "v": v_new, "length": new_len}, next_tok
+
+    # -- host-side batching --------------------------------------------------
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        for slot in range(self.ecfg.batch_slots):
+            if self.slot_req[slot] is None and self.queue:
+                req = self.queue.pop(0)
+                toks = jnp.asarray(req.prompt, jnp.int32)
+                self.cache, first = self._prefill(
+                    self.params, self.cache, toks, slot, plen=len(req.prompt)
+                )
+                req.out_tokens.append(int(first))
+                self.slot_req[slot] = req
+                self._last_tok = None  # force rebuild
+
+    def step(self) -> int:
+        """One engine tick; returns number of active slots."""
+        self._admit()
+        active_mask = np.array([r is not None for r in self.slot_req])
+        if not active_mask.any():
+            return 0
+        toks = np.zeros(self.ecfg.batch_slots, np.int32)
+        for i, r in enumerate(self.slot_req):
+            if r is not None:
+                toks[i] = r.out_tokens[-1]
+        self.cache, next_tok = self._decode(
+            self.params, self.cache, jnp.asarray(toks), jnp.asarray(active_mask)
+        )
+        next_np = np.asarray(next_tok)
+        for i, r in enumerate(self.slot_req):
+            if r is None:
+                continue
+            tok = int(next_np[i])
+            r.out_tokens.append(tok)
+            done = tok == self.ecfg.eos_id or len(r.out_tokens) >= r.max_new_tokens
+            total = len(r.prompt) + len(r.out_tokens)
+            if done or total >= self.ecfg.max_len:
+                r.done = True
+                self.slot_req[i] = None  # retire; slot reusable
+                # zero the slot's length so a new request starts clean
+                self.cache["length"] = self.cache["length"].at[i].set(0)
+        self.steps += 1
+        return int(active_mask.sum())
+
+    def run(self, max_steps: int = 10_000) -> List[Request]:
+        done: List[Request] = []
+        while (self.queue or any(self.slot_req)) and self.steps < max_steps:
+            self.step()
+        return done

@@ -1,0 +1,219 @@
+"""Per-family PartitionSpec rules (DESIGN.md §5).
+
+One function per family maps the parameter/activation trees onto the
+production mesh axes:
+
+    pod   — replica axis across pods (pure DP; params replicated)
+    data  — FSDP/DP within a pod (params sharded for FSDP; batch sharded)
+    model — TP (attention/FFN inner dims), EP (experts), KV-length shards,
+            embedding-table rows, corpus docs
+
+Specs are name-based over the parameter tree produced by each model's
+``param_shapes`` so they track structure changes automatically; leading
+stack axes ((n_blocks,) or (n_blocks, dense_per_block)) get None's padded.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Pytree = Any
+
+FSDP = "data"
+TP = "model"
+
+
+def batch_axes(multi_pod: bool) -> Tuple[str, ...]:
+    return ("pod", "data") if multi_pod else ("data",)
+
+
+def all_axes(multi_pod: bool) -> Tuple[str, ...]:
+    return ("pod", "data", "model") if multi_pod else ("data", "model")
+
+
+# --------------------------------------------------------------------------
+# LM transformer
+# --------------------------------------------------------------------------
+
+_LM_TRAILING = {
+    # name -> trailing-dims spec (applied right-aligned to the leaf shape)
+    "embed": (TP, FSDP),       # (V, d): vocab->TP, d->FSDP
+    "lm_head": (FSDP, TP),     # (d, V)
+    "final_ln": (None,),
+    "ln1": (None,),
+    "ln2": (None,),
+    "wq": (FSDP, TP),          # (d, H*dh)
+    "wk": (FSDP, TP),
+    "wv": (FSDP, TP),
+    "wo": (TP, FSDP),          # (H*dh, d)
+    "w_gate": (FSDP, TP),      # (d, f)
+    "w_up": (FSDP, TP),
+    "w_down": (TP, FSDP),      # (f, d)
+    "router": (FSDP, None),    # (d, E)
+    "moe_gate": (TP, FSDP, None),  # (E, d, f): experts->TP (EP)
+    "moe_up": (TP, FSDP, None),
+    "moe_down": (TP, None, FSDP),  # (E, f, d)
+}
+
+
+def _leaf_name(path) -> str:
+    for entry in reversed(path):
+        if hasattr(entry, "key"):
+            return entry.key
+    raise ValueError(f"no key in path {path}")
+
+
+def _spec_for(name: str, ndim: int, table) -> P:
+    trailing = table[name]
+    lead = (None,) * (ndim - len(trailing))
+    return P(*lead, *trailing)
+
+
+def lm_param_specs(shapes: Pytree) -> Pytree:
+    """PartitionSpec tree mirroring transformer.param_shapes(cfg)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, s: _spec_for(_leaf_name(path), len(s), _LM_TRAILING),
+        shapes,
+        is_leaf=lambda x: isinstance(x, tuple),
+    )
+
+
+def lm_batch_spec(multi_pod: bool) -> P:
+    return P(batch_axes(multi_pod), None)  # (B, S)
+
+
+def lm_cache_spec(multi_pod: bool, long_context: bool = False) -> P:
+    """KV cache (L, B, T, Hkv, dh).  Normal decode: batch->DP axes,
+    length->TP (flash-decoding split-K).  Long-context (B=1): length over
+    ALL axes — the only way 524288-token caches spread across the pod."""
+    if long_context:
+        return P(None, None, all_axes(multi_pod), None, None)
+    return P(None, batch_axes(multi_pod), TP, None, None)
+
+
+def lm_logit_spec(multi_pod: bool) -> P:
+    return P(batch_axes(multi_pod), TP)  # (B, V)
+
+
+# --------------------------------------------------------------------------
+# Optimizer-state specs mirror the parameter specs
+# --------------------------------------------------------------------------
+
+
+def adamw_state_specs(param_specs: Pytree) -> Pytree:
+    return {
+        "mu": param_specs,
+        "nu": param_specs,
+        "step": P(),
+    }
+
+
+def adafactor_state_specs(param_specs: Pytree, param_shapes: Pytree) -> Pytree:
+    def leaf(spec: P, shape) -> Any:
+        if len(shape) >= 2:
+            return {"vr": P(*spec[:-1]), "vc": P(*spec[:-2], spec[-1])}
+        return {"v": spec}
+
+    v = jax.tree_util.tree_map(
+        leaf, param_specs, param_shapes,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+    return {"v": v, "step": P()}
+
+
+def opt_state_specs(kind: str, param_specs: Pytree, param_shapes: Pytree) -> Pytree:
+    if kind == "adamw":
+        return adamw_state_specs(param_specs)
+    return adafactor_state_specs(param_specs, param_shapes)
+
+
+# --------------------------------------------------------------------------
+# GNN
+# --------------------------------------------------------------------------
+
+
+def gnn_param_specs(shapes: Pytree) -> Pytree:
+    """GraphSAGE params are < 1 MB — replicate everything."""
+    return jax.tree_util.tree_map(
+        lambda s: P(), shapes, is_leaf=lambda x: isinstance(x, tuple)
+    )
+
+
+def gnn_edge_spec(multi_pod: bool) -> P:
+    return P(all_axes(multi_pod))  # (E,) sharded over every device
+
+
+def gnn_minibatch_spec(multi_pod: bool, ndim: int) -> P:
+    return P(all_axes(multi_pod), *(None,) * (ndim - 1))
+
+
+# --------------------------------------------------------------------------
+# RecSys
+# --------------------------------------------------------------------------
+
+
+def recsys_param_specs(shapes: Pytree) -> Pytree:
+    """Embedding tables row-shard over TP ('model'); dense MLPs replicate."""
+
+    def rule(path, s):
+        name = _leaf_name(path)
+        if name in ("table", "linear"):
+            return P(TP, None)
+        return P(*(None,) * len(s))
+
+    return jax.tree_util.tree_map_with_path(
+        rule, shapes, is_leaf=lambda x: isinstance(x, tuple)
+    )
+
+
+def recsys_batch_spec(multi_pod: bool, ndim: int) -> P:
+    return P(batch_axes(multi_pod), *(None,) * (ndim - 1))
+
+
+def recsys_cand_spec(multi_pod: bool) -> P:
+    return P(all_axes(multi_pod), None)  # (N_cand, d) docs over everything
+
+
+def drop_axis(spec: P, name: str) -> P:
+    """Remove one mesh axis from every entry of a PartitionSpec (ZeRO-2:
+    the bf16 compute copy replicates over the FSDP axis while the f32
+    master + optimizer states stay fully sharded)."""
+    out = []
+    for entry in spec:
+        if entry == name:
+            out.append(None)
+        elif isinstance(entry, tuple):
+            kept = tuple(a for a in entry if a != name)
+            out.append(kept if len(kept) > 1 else (kept[0] if kept else None))
+        else:
+            out.append(entry)
+    return P(*out)
+
+
+# --------------------------------------------------------------------------
+# Helpers
+# --------------------------------------------------------------------------
+
+
+def named(mesh: Mesh, spec_tree: Pytree) -> Pytree:
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def struct_with_sharding(shape_tree: Pytree, dtype_tree, mesh: Mesh, spec_tree: Pytree):
+    """ShapeDtypeStruct pytree with NamedShardings attached (dry-run
+    stand-ins: weak-type-correct, shardable, no allocation)."""
+
+    def mk(shape, dtype, spec):
+        return jax.ShapeDtypeStruct(shape, dtype, sharding=NamedSharding(mesh, spec))
+
+    return jax.tree_util.tree_map(
+        mk, shape_tree, dtype_tree, spec_tree,
+        is_leaf=lambda x: isinstance(x, tuple),
+    )

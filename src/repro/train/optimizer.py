@@ -1,0 +1,218 @@
+"""Sharded optimizers: AdamW and Adafactor, plus schedules and clipping.
+
+Implemented directly on pytrees (no optax dependency in the container).
+Optimizer state mirrors the parameter tree, so whatever NamedSharding the
+params carry, the states inherit it (FSDP: states shard with the weights).
+
+Adafactor stores row/col second-moment factors for rank>=2 leaves —
+O(n+m) instead of O(n*m) state — which is what makes 400B-param optimizer
+state fit a pod (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+# --------------------------------------------------------------------------
+# Schedules
+# --------------------------------------------------------------------------
+
+
+def cosine_schedule(
+    base_lr: float, warmup_steps: int, total_steps: int, min_ratio: float = 0.1
+) -> Callable[[jax.Array], jax.Array]:
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = step / jnp.maximum(warmup_steps, 1)
+        prog = (step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1)
+        prog = jnp.clip(prog, 0.0, 1.0)
+        cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return base_lr * jnp.where(step < warmup_steps, warm, cos)
+
+    return lr
+
+
+def global_norm(tree: Pytree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)
+    )
+
+
+def clip_by_global_norm(tree: Pytree, max_norm: float) -> Tuple[Pytree, jax.Array]:
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree_util.tree_map(lambda g: g * scale.astype(g.dtype), tree), norm
+
+
+# --------------------------------------------------------------------------
+# AdamW
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: Callable[[jax.Array], jax.Array] | float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    max_grad_norm: float = 1.0
+
+    def _lr(self, step):
+        return self.lr(step) if callable(self.lr) else jnp.asarray(self.lr)
+
+
+def adamw_init(params: Pytree) -> Pytree:
+    zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    return {
+        "mu": jax.tree_util.tree_map(zeros, params),
+        "nu": jax.tree_util.tree_map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(
+    cfg: AdamWConfig, grads: Pytree, state: Pytree, params: Pytree
+) -> Tuple[Pytree, Pytree, dict]:
+    grads, gnorm = clip_by_global_norm(grads, cfg.max_grad_norm)
+    step = state["step"] + 1
+    t = step.astype(jnp.float32)
+    lr = cfg._lr(step)
+    bc1 = 1 - cfg.b1**t
+    bc2 = 1 - cfg.b2**t
+
+    def upd(g, mu, nu, p):
+        g32 = g.astype(jnp.float32)
+        mu = cfg.b1 * mu + (1 - cfg.b1) * g32
+        nu = cfg.b2 * nu + (1 - cfg.b2) * g32 * g32
+        u = (mu / bc1) / (jnp.sqrt(nu / bc2) + cfg.eps)
+        if p.ndim >= 2:  # no decay on norms/biases
+            u = u + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype), mu, nu
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_mu = treedef.flatten_up_to(state["mu"])
+    flat_nu = treedef.flatten_up_to(state["nu"])
+    new = [upd(g, m, n, p) for g, m, n, p in zip(flat_g, flat_mu, flat_nu, flat_p)]
+    new_p = treedef.unflatten([x[0] for x in new])
+    new_state = {
+        "mu": treedef.unflatten([x[1] for x in new]),
+        "nu": treedef.unflatten([x[2] for x in new]),
+        "step": step,
+    }
+    return new_p, new_state, {"grad_norm": gnorm, "lr": lr}
+
+
+# --------------------------------------------------------------------------
+# Adafactor (factored second moments)
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class AdafactorConfig:
+    lr: Callable[[jax.Array], jax.Array] | float = 1e-2
+    decay: float = 0.8  # beta2 = 1 - t^-decay
+    eps: float = 1e-30
+    clip_threshold: float = 1.0
+    weight_decay: float = 0.0
+
+    def _lr(self, step):
+        return self.lr(step) if callable(self.lr) else jnp.asarray(self.lr)
+
+
+def _factored(shape) -> bool:
+    return len(shape) >= 2
+
+
+def adafactor_init(params: Pytree) -> Pytree:
+    def leaf(p):
+        if _factored(p.shape):
+            return {
+                "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+            }
+        return {"v": jnp.zeros_like(p, dtype=jnp.float32)}
+
+    return {
+        "v": jax.tree_util.tree_map(leaf, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adafactor_update(
+    cfg: AdafactorConfig, grads: Pytree, state: Pytree, params: Pytree
+) -> Tuple[Pytree, Pytree, dict]:
+    step = state["step"] + 1
+    t = step.astype(jnp.float32)
+    beta2 = 1.0 - t ** (-cfg.decay)
+    lr = cfg._lr(step)
+
+    def upd(g, v, p):
+        g32 = g.astype(jnp.float32)
+        g2 = g32 * g32 + cfg.eps
+        if _factored(p.shape):
+            vr = beta2 * v["vr"] + (1 - beta2) * jnp.mean(g2, axis=-1)
+            vc = beta2 * v["vc"] + (1 - beta2) * jnp.mean(g2, axis=-2)
+            denom = jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), cfg.eps)
+            # rank-general: vr/denom is p.shape[:-1]; expand to [..., None],
+            # vc expands on axis -2 (stacked (layers, ..., n, m) leaves too).
+            u = (
+                g32
+                * jax.lax.rsqrt(vr / denom)[..., None]
+                * jax.lax.rsqrt(jnp.expand_dims(vc, -2))
+            )
+            new_v = {"vr": vr, "vc": vc}
+        else:
+            vv = beta2 * v["v"] + (1 - beta2) * g2
+            u = g32 * jax.lax.rsqrt(vv)
+            new_v = {"v": vv}
+        # update clipping (RMS(u) <= clip_threshold)
+        rms = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+        u = u / jnp.maximum(1.0, rms / cfg.clip_threshold)
+        if cfg.weight_decay and p.ndim >= 2:
+            u = u + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype), new_v
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_v = treedef.flatten_up_to(state["v"])
+    new = [upd(g, v, p) for g, v, p in zip(flat_g, flat_v, flat_p)]
+    new_p = treedef.unflatten([x[0] for x in new])
+    new_state = {"v": treedef.unflatten([x[1] for x in new]), "step": step}
+    return new_p, new_state, {"lr": lr}
+
+
+# --------------------------------------------------------------------------
+# Uniform facade
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    kind: str  # "adamw" | "adafactor"
+    config: Any
+
+    def init(self, params: Pytree) -> Pytree:
+        return adamw_init(params) if self.kind == "adamw" else adafactor_init(params)
+
+    def update(self, grads, state, params):
+        if self.kind == "adamw":
+            return adamw_update(self.config, grads, state, params)
+        return adafactor_update(self.config, grads, state, params)
+
+
+def adamw(**kw) -> Optimizer:
+    return Optimizer("adamw", AdamWConfig(**kw))
+
+
+def adafactor(**kw) -> Optimizer:
+    return Optimizer("adafactor", AdafactorConfig(**kw))

@@ -1,0 +1,123 @@
+"""Train-step builder: grad accumulation, clipping, metrics, watchdog.
+
+``build_train_step`` turns any ``loss_fn(params, batch) -> scalar`` into a
+jit-able ``step(state, batch) -> (state, metrics)`` with:
+
+  * microbatch accumulation under ``lax.scan`` (global batch stays constant
+    while per-device activation memory scales 1/n_microbatches);
+  * global-norm clipping + optimizer update (train/optimizer.py);
+  * loss/grad-norm metrics.
+
+``Watchdog`` is the host-side straggler monitor: per-step wall times feed an
+EWMA; a step slower than ``threshold`` x EWMA is flagged (on real pods this
+is the signal to evict/restart a slow host — here it logs).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.train.optimizer import Optimizer
+
+Pytree = Any
+LossFn = Callable[[Pytree, Dict[str, jax.Array]], jax.Array]
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: Pytree
+    opt_state: Pytree
+    step: jax.Array
+
+    def tree_flatten(self):
+        return (self.params, self.opt_state, self.step), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+jax.tree_util.register_pytree_node(
+    TrainState, TrainState.tree_flatten, TrainState.tree_unflatten
+)
+
+
+def make_train_state(params: Pytree, opt: Optimizer) -> TrainState:
+    return TrainState(params=params, opt_state=opt.init(params), step=jnp.zeros((), jnp.int32))
+
+
+def build_train_step(
+    loss_fn: LossFn,
+    opt: Optimizer,
+    n_microbatches: int = 1,
+    donate: bool = True,
+):
+    """Returns jit-able ``step(state, batch)``.  ``batch`` leaves must have a
+    leading global-batch axis divisible by ``n_microbatches``."""
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(loss_fn)(params, batch)
+
+    def step(state: TrainState, batch: Dict[str, jax.Array]):
+        params = state.params
+        if n_microbatches == 1:
+            loss, grads = grads_of(params, batch)
+        else:
+            def resh(x):
+                b = x.shape[0]
+                assert b % n_microbatches == 0
+                return x.reshape(n_microbatches, b // n_microbatches, *x.shape[1:])
+
+            micro = jax.tree_util.tree_map(resh, batch)
+
+            def acc_step(carry, mb):
+                loss_acc, grad_acc = carry
+                loss, grads = grads_of(params, mb)
+                grad_acc = jax.tree_util.tree_map(jnp.add, grad_acc, grads)
+                return (loss_acc + loss, grad_acc), None
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (loss, grads), _ = jax.lax.scan(
+                acc_step, (jnp.zeros((), jnp.float32), zeros), micro
+            )
+            loss = loss / n_microbatches
+            grads = jax.tree_util.tree_map(lambda g: g / n_microbatches, grads)
+
+        new_params, new_opt, info = opt.update(grads, state.opt_state, params)
+        metrics = {"loss": loss, **info}
+        return TrainState(new_params, new_opt, state.step + 1), metrics
+
+    return step
+
+
+@dataclasses.dataclass
+class Watchdog:
+    """EWMA step-time straggler detector (host side)."""
+
+    threshold: float = 2.0
+    alpha: float = 0.1
+    ewma: Optional[float] = None
+    flagged: int = 0
+    _t0: Optional[float] = None
+
+    def start(self):
+        self._t0 = time.monotonic()
+
+    def stop(self, step: int, log=print) -> float:
+        dt = time.monotonic() - self._t0
+        if self.ewma is None:
+            self.ewma = dt
+        elif dt > self.threshold * self.ewma:
+            self.flagged += 1
+            log(
+                f"[watchdog] step {step}: {dt * 1e3:.1f}ms > "
+                f"{self.threshold:.1f}x EWMA {self.ewma * 1e3:.1f}ms — straggler"
+            )
+        self.ewma = (1 - self.alpha) * self.ewma + self.alpha * dt
+        return dt

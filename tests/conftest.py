@@ -1,0 +1,20 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — smoke tests and benches must
+see the real single device; only launch/dryrun.py forces 512 host devices.
+Tests that need a small multi-device mesh run in a subprocess
+(tests/test_distributed.py) so they don't poison this process's jax init.
+"""
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def small_corpus(rng):
+    """(2000, 64) unit-ish vectors with a planted mean component."""
+    x = rng.normal(size=(2000, 64)).astype(np.float32)
+    x += 0.5 * rng.normal(size=(1, 64)).astype(np.float32)
+    return x

@@ -1,0 +1,109 @@
+"""Cell builder & sharding rules: structural checks that run WITHOUT the
+512-device env (no lowering here — that's the dry-run's job; these verify
+the abstract problem statement is well-formed on the real single device).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro import configs
+from repro.models import transformer as tfm
+from repro.sharding import rules
+
+
+def test_lm_param_specs_cover_every_leaf():
+    cfg = configs.get("llama4-maverick-400b-a17b").make_model(None)
+    shapes = tfm.param_shapes(cfg)
+    specs = rules.lm_param_specs(shapes)
+    flat_shapes = jax.tree_util.tree_leaves(
+        shapes, is_leaf=lambda x: isinstance(x, tuple))
+    flat_specs = jax.tree_util.tree_leaves(
+        specs, is_leaf=lambda x: isinstance(x, P))
+    assert len(flat_shapes) == len(flat_specs)
+    for s, p in zip(flat_shapes, flat_specs):
+        assert len(p) <= len(s)  # spec rank never exceeds leaf rank
+
+
+def test_lm_param_specs_shard_big_dims_divisibly():
+    """Every sharded dim of every full-size LM arch must divide 16 (the
+    data/model axis size) — else the input sharding is rejected at lower."""
+    for arch_id in configs.ASSIGNED:
+        spec = configs.get(arch_id)
+        if spec.family != "lm":
+            continue
+        cfg = spec.make_model(None)
+        shapes = tfm.param_shapes(cfg)
+        specs = rules.lm_param_specs(shapes)
+
+        def check(shape, pspec):
+            for dim, ax in zip(shape, tuple(pspec) + (None,) * len(shape)):
+                if ax is not None:
+                    assert dim % 16 == 0, (arch_id, shape, pspec)
+
+        jax.tree_util.tree_map(
+            check, shapes, specs, is_leaf=lambda x: isinstance(x, tuple))
+
+
+def test_opt_state_specs_mirror_params():
+    cfg = configs.get("phi3-mini-3.8b").make_model(None)
+    shapes = tfm.param_shapes(cfg)
+    pspecs = rules.lm_param_specs(shapes)
+    adamw = rules.opt_state_specs("adamw", pspecs, shapes)
+    assert jax.tree_util.tree_structure(adamw["mu"]) == jax.tree_util.tree_structure(
+        pspecs)
+    adaf = rules.opt_state_specs("adafactor", pspecs, shapes)
+    # factored leaves: vr spec = param spec minus last dim
+    flat_p = jax.tree_util.tree_leaves(pspecs, is_leaf=lambda x: isinstance(x, P))
+    flat_v = jax.tree_util.tree_leaves(
+        adaf["v"], is_leaf=lambda x: isinstance(x, P))
+    assert len(flat_v) >= len(flat_p)  # vr+vc per matrix leaf
+
+
+def test_batch_and_cache_specs():
+    assert rules.lm_batch_spec(False) == P(("data",), None)
+    assert rules.lm_batch_spec(True) == P(("pod", "data"), None)
+    assert rules.lm_cache_spec(False) == P(None, ("data",), "model", None, None)
+    assert rules.lm_cache_spec(True, long_context=True) == P(
+        None, None, ("pod", "data", "model"), None, None)
+
+
+def test_cell_divisibility_constraints():
+    """Every cell's sharded input dims divide the production meshes."""
+    for arch_id in configs.ASSIGNED:
+        spec = configs.get(arch_id)
+        for cell in spec.cells:
+            if cell.kind in ("train", "prefill", "decode") and cell.batch > 1:
+                assert cell.batch % 32 == 0, (arch_id, cell.name)  # pod*data
+            if cell.kind == "decode":
+                assert cell.seq % 512 == 0  # KV length over all axes (long)
+
+
+def test_model_flops_positive_and_ordered():
+    """MODEL_FLOPS sanity: train > prefill > decode for every LM arch."""
+    from repro.launch import cells as cm
+    for arch_id in configs.ASSIGNED:
+        spec = configs.get(arch_id)
+        if spec.family != "lm":
+            continue
+        cfg = spec.make_model(None)
+        f = {c.name: cm.lm_model_flops(cfg, c) for c in spec.cells}
+        assert f["train_4k"] > f["prefill_32k"] > f["decode_32k"] > 0
+    # recsys: bulk > p99
+    for arch_id in ("fm", "dlrm-rm2"):
+        spec = configs.get(arch_id)
+        cfg = spec.make_model(None)
+        f = {c.name: cm.recsys_model_flops(cfg, c) for c in spec.cells}
+        assert f["serve_bulk"] > f["serve_p99"] > 0
+        assert f["retrieval_cand"] > 0
+
+
+def test_ann_web1b_index_fits_pod():
+    """1B-doc index bytes per device stay under HBM (the sizing claim in
+    DESIGN.md §2)."""
+    spec = configs.get("ann-web1b")
+    cell = spec.cells[0]
+    n, dim = cell.get("n_docs"), cell.get("dim")
+    per_dev = (n * 2 * dim * 1 + n * dim * 2 + n * 4) / 256  # tf + bf16 vecs + norm
+    assert per_dev < 16e9

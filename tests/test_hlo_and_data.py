@@ -1,0 +1,128 @@
+"""HLO collective parser + data-pipeline determinism."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import lm as lm_data
+from repro.data import recsys as rec_data
+from repro.data import graph as graph_data
+from repro.launch import hlo_collectives as hc
+from repro.models.recsys import TableSpec, criteo_row_counts
+
+
+SYNTH = """
+HloModule test
+
+%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %r = f32[] add(%a, %b)
+}
+
+%body (p: (s32[], f32[128,256])) -> (s32[], f32[128,256]) {
+  %p = (s32[], f32[128,256]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[128,256] get-tuple-element(%p), index=1
+  %ar = f32[128,256] all-reduce(%x), replica_groups={{0,1,2,3}}, to_apply=%add
+  %one = s32[] constant(1)
+  %ni = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[128,256]) tuple(%ni, %ar)
+}
+
+%cond (p: (s32[], f32[128,256])) -> pred[] {
+  %p = (s32[], f32[128,256]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %n = s32[] constant(10)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+ENTRY %main (x: f32[128,256]) -> f32[128,256] {
+  %x = f32[128,256] parameter(0)
+  %ag = f32[128,256] all-gather(%x), dimensions={0}, replica_groups=[2,4]<=[8]
+  %init = s32[] constant(0)
+  %t0 = (s32[], f32[128,256]) tuple(%init, %ag)
+  %w = (s32[], f32[128,256]) while(%t0), condition=%cond, body=%body
+  ROOT %out = f32[128,256] get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_collective_parser_factors_and_trip_counts():
+    out = hc.collective_bytes(SYNTH, total_devices=8)
+    nbytes = 128 * 256 * 4
+    # all-gather: groups of 4 -> (3/4) * result bytes, once
+    expect_ag = 0.75 * nbytes
+    # all-reduce in while body: groups of 4 -> 2*(3/4)*bytes, x10 trips
+    expect_ar = 10 * 2 * 0.75 * nbytes
+    np.testing.assert_allclose(out["all-gather"], expect_ag, rtol=1e-6)
+    np.testing.assert_allclose(out["all-reduce"], expect_ar, rtol=1e-6)
+    np.testing.assert_allclose(out["total"], expect_ag + expect_ar, rtol=1e-6)
+
+
+def test_collective_parser_on_real_lowering():
+    """Parse a real sharded matmul's HLO (subprocess-free: 1 device mesh
+    trivially has no collectives; assert zero)."""
+    x = jnp.zeros((8, 8))
+    c = jax.jit(lambda a: a @ a).lower(x).compile()
+    out = hc.collective_bytes(c.as_text(), total_devices=1)
+    assert out["total"] == 0.0
+
+
+def test_shape_bytes_parsing():
+    assert hc._shape_bytes("f32[128,256]") == 128 * 256 * 4
+    assert hc._shape_bytes("bf16[2,3]") == 12
+    assert hc._shape_bytes("(f32[4], s8[8])") == 24
+    assert hc._shape_bytes("pred[]") == 1
+
+
+# -- data determinism ---------------------------------------------------------
+
+
+def test_lm_batches_deterministic_and_shardable():
+    cfg = lm_data.LmDataConfig(vocab=500, seq_len=16, global_batch=8, seed=3)
+    b1, b2 = lm_data.batch_at(cfg, 5), lm_data.batch_at(cfg, 5)
+    np.testing.assert_array_equal(np.asarray(b1["tokens"]), np.asarray(b2["tokens"]))
+    assert not np.array_equal(
+        np.asarray(lm_data.batch_at(cfg, 6)["tokens"]), np.asarray(b1["tokens"]))
+    # host shards tile the global batch exactly
+    parts = [lm_data.host_shard_at(cfg, 5, s, 4)["tokens"] for s in range(4)]
+    np.testing.assert_array_equal(
+        np.concatenate([np.asarray(p) for p in parts]), np.asarray(b1["tokens"]))
+    # labels are next-token shifted
+    full_cfg = lm_data.LmDataConfig(vocab=500, seq_len=16, global_batch=2, seed=0)
+    b = lm_data.batch_at(full_cfg, 0)
+    np.testing.assert_array_equal(
+        np.asarray(b["tokens"][:, 1:]), np.asarray(b["labels"][:, :-1]))
+
+
+def test_recsys_batches_in_range():
+    table = TableSpec(criteo_row_counts(10, 8192), 8)
+    cfg = rec_data.RecsysDataConfig(table=table, batch=64, n_dense=4, seed=1)
+    b = rec_data.batch_at(cfg, 7)
+    rows = np.asarray(table.row_counts)
+    assert (np.asarray(b["sparse"]) < rows[None, :, None]).all()
+    assert (np.asarray(b["sparse"]) >= 0).all()
+    assert set(np.unique(np.asarray(b["label"]))) <= {0.0, 1.0}
+    # Zipf skew: in the largest field the 10 hottest ids hold far more
+    # than their uniform share
+    s0 = np.asarray(b["sparse"])[:, 0]  # field 0 = largest id space
+    frac_small = (s0 < 10).mean()
+    assert frac_small > 20 * (10.0 / table.row_counts[0])
+
+
+def test_graph_sampler_correctness_and_padding():
+    g = graph_data.make_graph(graph_data.GraphConfig(
+        n_nodes=300, n_edges=1200, d_feat=4, n_classes=3))
+    ip, ind = np.asarray(g.indptr), np.asarray(g.indices)
+    seeds = graph_data.batch_seeds(jax.random.key(0), 300, 32)
+    nbr = graph_data.sample_neighbors(jax.random.key(1), g.indptr, g.indices, seeds, 7)
+    for i, s in enumerate(np.asarray(seeds)):
+        neigh = set(ind[ip[s]: ip[s + 1]])
+        for x in np.asarray(nbr)[i]:
+            if x >= 0:
+                assert x in neigh
+            else:
+                assert len(neigh) == 0  # -1 only for isolated nodes
+    # degree distribution is heavy-tailed (power-law generator)
+    deg = ip[1:] - ip[:-1]
+    assert deg.max() > 10 * max(1, int(np.median(deg)))

@@ -1,0 +1,131 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode on CPU).
+
+Every kernel sweeps shapes (unaligned sizes included — the pad paths) and
+dtypes, asserting allclose against the ref.py oracle per the brief.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import fakewords, lexical_lsh
+from repro.core.types import FakeWordsConfig, LexicalLshConfig
+from repro.kernels.cosine_score.kernel import cosine_scores
+from repro.kernels.cosine_score.ref import cosine_scores_ref
+from repro.kernels.fakewords_score.kernel import score_matmul
+from repro.kernels.fakewords_score import ops as fw_ops
+from repro.kernels.fakewords_score.ref import score_matmul_ref
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.lsh_match.kernel import lsh_match_scores
+from repro.kernels.lsh_match.ref import lsh_match_scores_ref
+
+RNG = np.random.default_rng(7)
+
+
+# -- fakewords_score ---------------------------------------------------------
+
+
+@pytest.mark.parametrize("b,n,t", [(4, 64, 32), (8, 300, 100), (3, 513, 257)])
+@pytest.mark.parametrize("dtype", ["int8", "bf16"])
+def test_score_matmul_shapes_dtypes(b, n, t, dtype):
+    if dtype == "int8":
+        q = jnp.asarray(RNG.integers(-50, 50, (b, t)), jnp.int8)
+        d = jnp.asarray(RNG.integers(-50, 50, (n, t)), jnp.int8)
+        out = score_matmul(q, d, out_dtype=jnp.int32, interpret=True)
+        ref = score_matmul_ref(q, d)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+    else:
+        q = jnp.asarray(RNG.normal(size=(b, t)), jnp.bfloat16)
+        d = jnp.asarray(RNG.normal(size=(n, t)), jnp.bfloat16)
+        out = score_matmul(q, d, interpret=True)
+        ref = score_matmul_ref(q, d)
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), np.asarray(ref, np.float32),
+            rtol=2e-2, atol=2e-2)
+
+
+def test_kernel_classic_scores_matches_core(small_corpus):
+    v = jnp.asarray(small_corpus[:256])
+    cfg = FakeWordsConfig(quantization=40)
+    idx = fakewords.build(v, cfg)
+    q_tf = fakewords.encode_queries(v[:4], cfg)
+    ref = fakewords.classic_scores(idx, q_tf)
+    out = fw_ops.classic_scores(idx, q_tf)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(ref), rtol=5e-2, atol=5e-1)
+
+
+def test_kernel_dot_scores_matches_core(small_corpus):
+    v = jnp.asarray(small_corpus[:256])
+    cfg = FakeWordsConfig(quantization=50, scoring="dot")
+    idx = fakewords.build(v, cfg)
+    q_tf = fakewords.encode_queries(v[:4], cfg)
+    ref = fakewords.dot_scores(idx, q_tf)
+    out = fw_ops.dot_scores(idx, q_tf)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+# -- cosine_score ------------------------------------------------------------
+
+
+@pytest.mark.parametrize("b,n,dim", [(4, 128, 64), (2, 300, 33), (5, 1000, 300)])
+def test_cosine_scores_vs_ref(b, n, dim):
+    q = jnp.asarray(RNG.normal(size=(b, dim)), jnp.float32)
+    docs = jnp.asarray(RNG.normal(size=(n, dim)), jnp.float32)
+    qn = q / jnp.linalg.norm(q, axis=-1, keepdims=True)
+    inv = 1.0 / jnp.linalg.norm(docs, axis=-1)
+    out = cosine_scores(qn, docs, inv, interpret=True)
+    ref = cosine_scores_ref(qn, docs, inv)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-4, atol=1e-4)
+
+
+# -- lsh_match ---------------------------------------------------------------
+
+
+@pytest.mark.parametrize("b,n,s", [(4, 100, 64), (2, 257, 300)])
+def test_lsh_match_vs_ref(b, n, s):
+    sig_d = jnp.asarray(RNG.integers(0, 1 << 31, (n, s)), jnp.uint32)
+    sig_q = sig_d[:b]
+    # plant some sentinels
+    sig_q = sig_q.at[:, ::7].set(jnp.uint32(0xFFFFFFFF))
+    out = lsh_match_scores(sig_q, sig_d, interpret=True)
+    ref = lsh_match_scores_ref(sig_q, sig_d)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_lsh_kernel_matches_core_scores(small_corpus):
+    v = jnp.asarray(small_corpus[:128])
+    cfg = LexicalLshConfig(buckets=64, hashes=2)
+    sig = lexical_lsh.encode(v, cfg)
+    ref = lexical_lsh.match_scores(sig[:4], sig)
+    out = lsh_match_scores(sig[:4], sig, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+# -- flash_attention ---------------------------------------------------------
+
+
+@pytest.mark.parametrize("b,hq,hkv,s,d", [
+    (1, 4, 4, 128, 64),   # MHA
+    (2, 4, 2, 256, 32),   # GQA group 2
+    (1, 8, 1, 130, 64),   # MQA, unaligned seq
+])
+def test_flash_attention_vs_ref(b, hq, hkv, s, d):
+    q = jnp.asarray(RNG.normal(size=(b, hq, s, d)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(b, hkv, s, d)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(b, hkv, s, d)), jnp.float32)
+    out = flash_attention(q, k, v, interpret=True)
+    ref = attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-3, atol=2e-3)
+
+
+def test_flash_attention_bf16(rng):
+    q = jnp.asarray(RNG.normal(size=(1, 4, 128, 64)), jnp.bfloat16)
+    k = jnp.asarray(RNG.normal(size=(1, 2, 128, 64)), jnp.bfloat16)
+    v = jnp.asarray(RNG.normal(size=(1, 2, 128, 64)), jnp.bfloat16)
+    out = flash_attention(q, k, v, interpret=True)
+    ref = attention_ref(q, k, v)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32),
+        rtol=3e-2, atol=3e-2)

@@ -1,0 +1,153 @@
+"""Per-assigned-architecture smoke tests (brief requirement).
+
+Each instantiates a REDUCED config of the same family — small layers/width,
+few experts, tiny tables, small graphs — and runs one forward/train step on
+CPU asserting output shapes + no NaNs.  The FULL configs are exercised only
+via the dry-run (ShapeDtypeStruct, no allocation).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.data import graph as graph_data
+from repro.models import gnn, recsys, transformer as tfm
+
+RNG = np.random.default_rng(3)
+
+
+def _shrink_lm(cfg: tfm.TransformerConfig) -> tfm.TransformerConfig:
+    moe = cfg.moe and dataclasses.replace(
+        cfg.moe, num_experts=4, d_ff=64, period=cfg.moe.period)
+    return dataclasses.replace(
+        cfg,
+        n_layers=2 * (cfg.moe.period if cfg.moe else 1),
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=max(1, 4 * cfg.n_kv_heads // cfg.n_heads),
+        head_dim=16,
+        d_ff=128,
+        vocab=256,
+        moe=moe,
+        param_dtype=jnp.float32,
+    )
+
+
+LM_ARCHS = [a for a in configs.ASSIGNED if configs.get(a).family == "lm"]
+REC_ARCHS = [a for a in configs.ASSIGNED if configs.get(a).family == "recsys"]
+
+
+@pytest.mark.parametrize("arch_id", LM_ARCHS)
+def test_lm_arch_smoke(arch_id):
+    spec = configs.get(arch_id)
+    cfg = _shrink_lm(spec.make_model(spec.cells[0]))
+    params = tfm.init_params(jax.random.key(0), cfg)
+    toks = jnp.asarray(RNG.integers(0, cfg.vocab, (2, 16)), jnp.int32)
+    # train step: loss + grads finite
+    loss, grads = jax.value_and_grad(tfm.loss_fn)(params, toks, toks, cfg)
+    assert jnp.isfinite(loss)
+    assert all(bool(jnp.all(jnp.isfinite(g))) for g in jax.tree.leaves(grads))
+    # serve: prefill + one decode step
+    cache, logits = tfm.prefill(params, toks, cfg)
+    assert logits.shape == (2, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    full = tfm.make_cache(cfg, 2, 32)
+    full = {
+        "k": full["k"].at[:, :, :16].set(cache["k"]),
+        "v": full["v"].at[:, :, :16].set(cache["v"]),
+        "length": jnp.int32(16),
+    }
+    nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+    c2, lg2 = tfm.decode_step(params, full, nxt, cfg)
+    assert lg2.shape == (2, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(lg2)))
+    assert int(c2["length"]) == 17
+
+
+def test_lm_param_count_budgets():
+    """Full configs land near their nameplate sizes."""
+    expect = {
+        "phi3-medium-14b": (14e9, None),
+        "phi3-mini-3.8b": (3.8e9, None),
+        "deepseek-coder-33b": (33e9, None),
+        "phi3.5-moe-42b-a6.6b": (42e9, 6.6e9),
+        "llama4-maverick-400b-a17b": (400e9, 17e9),
+    }
+    for arch_id, (want_total, want_active) in expect.items():
+        cfg = configs.get(arch_id).make_model(None)
+        total, active = cfg.param_count()
+        assert abs(total - want_total) / want_total < 0.15, (arch_id, total)
+        if want_active:
+            assert abs(active - want_active) / want_active < 0.25, (arch_id, active)
+
+
+def test_gnn_arch_smoke_all_cells():
+    spec = configs.get("graphsage-reddit")
+    for cell in spec.cells:
+        cfg_full = spec.make_model(cell)
+        cfg = dataclasses.replace(cfg_full, d_in=12, d_hidden=16, n_classes=5)
+        params = gnn.init_params(jax.random.key(0), cfg)
+        if cell.kind == "full_graph":
+            g = graph_data.make_graph(graph_data.GraphConfig(
+                n_nodes=60, n_edges=240, d_feat=12, n_classes=5))
+            src, dst = g.edge_list()
+            logits = gnn.forward_full(params, g.feats, src, dst, cfg)
+            assert logits.shape == (60, 5)
+            mask = jnp.ones((60,), jnp.float32)
+            loss, grads = jax.value_and_grad(gnn.loss_full)(
+                params, g.feats, src, dst, g.labels, mask, cfg)
+        elif cell.kind == "minibatch":
+            g = graph_data.make_graph(graph_data.GraphConfig(
+                n_nodes=100, n_edges=500, d_feat=12, n_classes=5))
+            seeds = graph_data.batch_seeds(jax.random.key(1), 100, 8)
+            n1, n2 = graph_data.sample_two_hop(
+                jax.random.key(2), g.indptr, g.indices, seeds, cfg.fanouts)
+            loss, grads = jax.value_and_grad(gnn.loss_sampled)(
+                params, g.feats, seeds, n1, n2, g.labels[seeds], cfg)
+        else:  # molecule
+            mb = graph_data.make_molecule_batch(jax.random.key(3), 4, 10, 20, 12, 5)
+            loss, grads = jax.value_and_grad(gnn.loss_batched)(
+                params, mb["feats"], mb["src"], mb["dst"], mb["labels"], cfg)
+        assert jnp.isfinite(loss), cell.name
+        assert all(bool(jnp.all(jnp.isfinite(g))) for g in jax.tree.leaves(grads))
+
+
+@pytest.mark.parametrize("arch_id", REC_ARCHS)
+def test_recsys_arch_smoke(arch_id):
+    spec = configs.get(arch_id)
+    full = spec.make_model(None)
+    small_table = recsys.TableSpec(
+        recsys.criteo_row_counts(full.n_fields, 4096), full.dim)
+    cfg = dataclasses.replace(full, table=small_table)
+    params = recsys.init_params(jax.random.key(0), cfg)
+    b = 8
+    rows = np.asarray(small_table.row_counts)
+    idx = jnp.asarray(
+        RNG.integers(0, rows[None, :, None], (b, cfg.n_fields, cfg.nnz)), jnp.int32)
+    dense = (jnp.asarray(RNG.normal(size=(b, cfg.n_dense)), jnp.float32)
+             if cfg.n_dense else None)
+    logit = recsys.forward(params, cfg, idx, dense)
+    assert logit.shape == (b,)
+    assert bool(jnp.all(jnp.isfinite(logit)))
+    loss, grads = jax.value_and_grad(recsys.bce_loss)(
+        params, cfg, idx, jnp.ones((b,)), dense)
+    assert jnp.isfinite(loss)
+    assert all(bool(jnp.all(jnp.isfinite(g))) for g in jax.tree.leaves(grads))
+    # retrieval path
+    u = recsys.user_tower(params, cfg, idx, dense)
+    cand = jnp.asarray(RNG.normal(size=(1000, cfg.dim)), jnp.float32)
+    s, ids = recsys.retrieval_topk(u, cand, k=10)
+    assert s.shape == (b, 10) and bool(jnp.all(ids >= 0))
+
+
+def test_registry_covers_assignment():
+    assert len(configs.ASSIGNED) == 10
+    n_cells = sum(len(configs.get(a).cells) for a in configs.ASSIGNED)
+    assert n_cells == 40  # the full dry-run matrix
+    for a in configs.ASSIGNED:
+        spec = configs.get(a)
+        assert spec.family in ("lm", "gnn", "recsys")
+        assert spec.make_model(spec.cells[0]) is not None

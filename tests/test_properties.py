@@ -1,0 +1,152 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bruteforce, eval as ev, fakewords
+from repro.models import recsys as rec
+from repro.models.recsys import TableSpec, criteo_row_counts
+
+SET = dict(max_examples=25, deadline=None)
+
+floats = st.floats(-1e3, 1e3, allow_nan=False, width=32)
+
+
+@settings(**SET)
+@given(
+    st.integers(2, 30), st.integers(2, 24),
+    st.integers(1, 127), st.integers(0, 2**31 - 1),
+)
+def test_fakewords_encode_invariants(n, m, q, seed):
+    rng = np.random.default_rng(seed)
+    v = bruteforce.l2_normalize(jnp.asarray(rng.normal(size=(n, m)).astype(np.float32)))
+    tf = fakewords.encode(v, q)
+    tf_np = np.asarray(tf, np.int32)
+    # 1) non-negative; 2) bounded by Q; 3) sign-split exclusivity
+    assert (tf_np >= 0).all()
+    assert (tf_np <= q).all()
+    assert not ((tf_np[:, :m] > 0) & (tf_np[:, m:] > 0)).any()
+
+
+@settings(**SET)
+@given(st.integers(4, 64), st.integers(2, 16), st.integers(0, 2**31 - 1))
+def test_l2_normalize_unit_and_idempotent(n, d, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32)) * 100
+    nx = bruteforce.l2_normalize(x)
+    norms = np.linalg.norm(np.asarray(nx), axis=-1)
+    np.testing.assert_allclose(norms, 1.0, atol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(bruteforce.l2_normalize(nx)), np.asarray(nx), atol=1e-6)
+
+
+@settings(**SET)
+@given(st.integers(16, 200), st.integers(1, 8), st.integers(0, 2**31 - 1))
+def test_tiled_topk_equals_exact(n, b, seed):
+    rng = np.random.default_rng(seed)
+    corpus = jnp.asarray(rng.normal(size=(n, 16)).astype(np.float32))
+    q = jnp.asarray(rng.normal(size=(b, 16)).astype(np.float32))
+    k = min(10, n)
+    s1, i1 = bruteforce.exact_topk(corpus, q, k)
+    s2, i2 = bruteforce.exact_topk_tiled(corpus, q, k, tile=32)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-4, atol=1e-5)
+    # ids may differ on exact ties; compare via scores of the ids
+    assert float(ev.overlap(i1, i2)) > 0.95
+
+
+@settings(**SET)
+@given(st.integers(1, 20), st.integers(1, 10))
+def test_recall_at_bounds(k, extra):
+    ids = jnp.arange(k)[None, :]
+    assert float(ev.recall_at(ids, ids)) == 1.0
+    disjoint = jnp.arange(k, 2 * k)[None, :]
+    assert float(ev.recall_at(ids, disjoint)) == 0.0
+
+
+@settings(**SET)
+@given(
+    st.integers(2, 8), st.integers(2, 6), st.integers(1, 4),
+    st.integers(0, 2**31 - 1),
+)
+def test_embedding_bag_dense_equals_ragged(b, f, nnz, seed):
+    rng = np.random.default_rng(seed)
+    table_spec = TableSpec(tuple(int(x) for x in rng.integers(4, 20, f)), 8)
+    table = jnp.asarray(rng.normal(size=(table_spec.total_rows, 8)).astype(np.float32))
+    local = np.stack(
+        [rng.integers(0, c, (b, nnz)) for c in table_spec.row_counts], axis=1
+    ).astype(np.int32)
+    gidx = table_spec.globalize(jnp.asarray(local))
+    dense = rec.embedding_bag_dense(table, gidx)
+    vals = gidx.reshape(-1)
+    bags = jnp.repeat(jnp.arange(b * f), nnz)
+    ragged = rec.embedding_bag_ragged(table, vals, bags, b * f).reshape(b, f, 8)
+    np.testing.assert_allclose(np.asarray(dense), np.asarray(ragged), rtol=1e-5, atol=1e-5)
+
+
+@settings(**SET)
+@given(st.integers(2, 10), st.integers(2, 8), st.integers(0, 2**31 - 1))
+def test_fm_sum_square_trick_equals_pairwise(b, f, seed):
+    rng = np.random.default_rng(seed)
+    emb = jnp.asarray(rng.normal(size=(b, f, 6)).astype(np.float32))
+    fast = rec.fm_interaction(emb)
+    e = np.asarray(emb, np.float64)
+    slow = np.zeros(b)
+    for i in range(f):
+        for j in range(i + 1, f):
+            slow += (e[:, i] * e[:, j]).sum(-1)
+    np.testing.assert_allclose(np.asarray(fast), slow, rtol=1e-4, atol=1e-4)
+
+
+@settings(**SET)
+@given(st.integers(2, 40), st.integers(1000, 10_000_000))
+def test_criteo_row_counts_invariants(f, total):
+    counts = criteo_row_counts(f, total)
+    assert len(counts) == f
+    assert all(c >= 4 for c in counts)
+    assert sum(counts) % 512 == 0  # mesh divisibility
+    assert counts == tuple(sorted(counts, reverse=True))  # power law sorted
+
+
+@settings(**SET)
+@given(st.integers(1, 8), st.integers(10, 60), st.integers(0, 2**31 - 1))
+def test_rerank_exact_returns_true_topk_of_candidates(b, d, seed):
+    rng = np.random.default_rng(seed)
+    vecs = bruteforce.l2_normalize(
+        jnp.asarray(rng.normal(size=(100, 8)).astype(np.float32)))
+    q = bruteforce.l2_normalize(jnp.asarray(rng.normal(size=(b, 8)).astype(np.float32)))
+    cand = jnp.asarray(rng.choice(100, size=(b, d), replace=True).astype(np.int32))
+    s, i = bruteforce.rerank_exact(vecs, q, cand, k=5, normalized=True)
+    # brute-force over the SAME candidate set
+    full = np.einsum("bd,bcd->bc", np.asarray(q), np.asarray(vecs)[np.asarray(cand)])
+    best = np.sort(full, axis=-1)[:, ::-1][:, :5]
+    np.testing.assert_allclose(np.sort(np.asarray(s))[:, ::-1], best, rtol=1e-4, atol=1e-5)
+
+
+@settings(**SET)
+@given(st.integers(0, 2**31 - 1))
+def test_moe_identical_experts_equal_dense_ffn(seed):
+    """With every expert holding the SAME weights, routing is irrelevant
+    (combine weights renormalize to 1): moe_ffn == the dense SwiGLU FFN.
+    Verifies dispatch/combine round-trip exactly."""
+    from repro.models import transformer as tfm
+    rng = np.random.default_rng(seed)
+    d, ff, e = 16, 24, 4
+    cfg = tfm.TransformerConfig(
+        n_layers=2, d_model=d, n_heads=2, n_kv_heads=2, d_ff=ff, vocab=32,
+        moe=tfm.MoEConfig(num_experts=e, top_k=2, d_ff=ff, period=1),
+        dtype=jnp.float32,
+    )
+    x = jnp.asarray(rng.normal(size=(2, 8, d)).astype(np.float32))
+    wg = jnp.asarray(rng.normal(size=(d, ff)).astype(np.float32))
+    wu = jnp.asarray(rng.normal(size=(d, ff)).astype(np.float32))
+    wd = jnp.asarray(rng.normal(size=(ff, d)).astype(np.float32))
+    layer = {
+        "router": jnp.asarray(rng.normal(size=(d, e)).astype(np.float32)),
+        "moe_gate": jnp.broadcast_to(wg, (e, d, ff)),
+        "moe_up": jnp.broadcast_to(wu, (e, d, ff)),
+        "moe_down": jnp.broadcast_to(wd, (e, ff, d)),
+    }
+    out = tfm.moe_ffn(x, layer, cfg, dropless=True)
+    dense = tfm.swiglu(x, {"w_gate": wg, "w_up": wu, "w_down": wd})
+    np.testing.assert_allclose(np.asarray(out), np.asarray(dense), rtol=1e-4, atol=1e-4)
