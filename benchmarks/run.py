@@ -3,7 +3,10 @@
 One section per paper table/figure + system ablations:
   table1     — paper Table 1 (R@(10,d) / latency / index size, both corpora)
   ablations  — df-pruning, rerank, blockmax, scoring mode
-  kernels    — scoring-path micro-bench (CPU wall-clock, relative)
+  kernels    — scoring-path micro-bench (CPU wall-clock, relative), plus the
+               fused-vs-unfused streaming top-k comparison: latency and
+               streamed bytes with and without the (B, N) score matrix
+               (docs/DESIGN.md §4)
 
 Roofline terms come from the dry-run artifacts (results/*.json via
 launch/roofline.py), not from this CPU — see EXPERIMENTS.md §Roofline.
@@ -45,10 +48,17 @@ def main() -> None:
     if args.only in (None, "kernels"):
         print()
         print("=" * 72)
-        print("== Kernel micro-bench (CPU relative)")
+        print("== Kernel micro-bench (CPU relative) + fused-vs-unfused top-k")
         print("=" * 72, flush=True)
         from benchmarks import kernel_bench
-        kernel_bench.main()
+        if args.fast:
+            _, summary = kernel_bench.main(n_docs=10_000, dim=128, batch=16)
+        else:
+            _, summary = kernel_bench.main()
+        for mode in ("classic", "dot"):
+            if not summary[mode]["ids_match"]:
+                failures.append(
+                    f"fused {mode} search ids diverge from unfused oracle")
 
     print(f"\ntotal bench time: {time.time() - t0:.0f}s")
     if failures:

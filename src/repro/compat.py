@@ -1,0 +1,56 @@
+"""JAX version-compat shims (non-Pallas; the Pallas ones live in
+``kernels/common.py``).
+
+The codebase is written against the current JAX API surface; this module
+backfills the handful of names that moved between the 0.4.x line the CI pins
+and newer releases:
+
+  * ``shard_map`` — ``jax.shard_map`` (new) vs
+    ``jax.experimental.shard_map.shard_map`` (0.4.x), where the replication
+    check kwarg is spelled ``check_vma`` vs ``check_rep``;
+  * ``set_mesh`` — ``jax.set_mesh(mesh)`` (new) vs entering the mesh's own
+    context manager (0.4.x).
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Any
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """Dispatch to whichever shard_map this JAX exposes."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=check_vma,
+        )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_rep=check_vma,
+    )
+
+
+def axis_size(axis_name) -> Any:
+    """``jax.lax.axis_size`` (new) with a ``psum(1, axis)`` fallback for
+    0.4.x (traced rather than static, which every call site tolerates)."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    import jax.numpy as jnp
+
+    return jax.lax.psum(jnp.int32(1), axis_name)
+
+
+@contextlib.contextmanager
+def set_mesh(mesh: Any):
+    """Context manager form of ``jax.set_mesh`` that also works on 0.4.x
+    (where entering the Mesh object itself sets the ambient mesh)."""
+    if hasattr(jax, "set_mesh"):
+        with jax.set_mesh(mesh):
+            yield mesh
+    else:
+        with mesh:
+            yield mesh

@@ -14,7 +14,7 @@ blocks, each block stores per-term tf upper bounds, and at query time we
 This turns the paper's "filter high-frequency terms" latency trick into a
 second, stronger roofline lever: the index-scan GEMM is memory-bound, and
 block pruning cuts its bytes by ~(1 - beta) at a small recall cost that the
-benchmark sweeps (see EXPERIMENTS.md §Perf).
+benchmark sweeps (see docs/DESIGN.md §6).
 """
 from __future__ import annotations
 
@@ -53,16 +53,23 @@ def build_blockmax(index: FakeWordsIndex, block_size: int = 256) -> BlockMaxInde
     return BlockMaxIndex(ub=ub, block_size=block_size)
 
 
-@functools.partial(jax.jit, static_argnames=("n_keep", "depth"))
+@functools.partial(jax.jit, static_argnames=("n_keep", "depth", "use_kernel"))
 def pruned_search(
     index: FakeWordsIndex,
     bm: BlockMaxIndex,
     q_tf: jax.Array,
     n_keep: int,
     depth: int,
+    use_kernel: Optional[bool] = None,
 ) -> Tuple[jax.Array, jax.Array]:
     """Two-stage blockmax search: upper-bound GEMM -> keep n_keep blocks ->
-    exact GEMM on the gathered rows.  Returns (scores, doc_ids) at depth."""
+    exact scoring on the gathered rows.  Returns (scores, doc_ids) at depth.
+
+    ``use_kernel`` routes stage 2 through the fused gathered-candidates
+    streaming top-k kernel (docs/DESIGN.md §4): the (B, n_keep*block_size)
+    stage-2 score matrix never materializes.  Default: kernel on TPU."""
+    from repro.kernels.fused_topk import ops as fused
+
     bsz = bm.block_size
     qv = q_tf.astype(jnp.bfloat16)  # (B, 2m)
     # Stage 1: optimistic block scores (tiny GEMM).
@@ -74,8 +81,12 @@ def pruned_search(
     # row ids: (B, n_keep, bsz)
     row_ids = keep_blocks[:, :, None] * bsz + jnp.arange(bsz)[None, None, :]
     row_ids = row_ids.reshape(q_tf.shape[0], -1)  # (B, n_keep*bsz)
-    valid = row_ids < index.num_docs
     rows = index.scored[jnp.minimum(row_ids, index.num_docs - 1)]  # (B,R,2m)
+    if fused.resolve_use_kernel(use_kernel):
+        return fused.fused_topk_gathered(
+            qv, rows, row_ids, depth, index.num_docs
+        )
+    valid = row_ids < index.num_docs
     scores = jnp.einsum(
         "bt,brt->br", qv, rows, preferred_element_type=jnp.float32
     )

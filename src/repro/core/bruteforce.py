@@ -24,16 +24,25 @@ def l2_normalize(x: jax.Array, eps: float = 1e-12, axis: int = -1) -> jax.Array:
     return x / jnp.maximum(n, eps)
 
 
-@functools.partial(jax.jit, static_argnames=("k", "normalized"))
+@functools.partial(jax.jit, static_argnames=("k", "normalized", "use_kernel"))
 def exact_topk(
     corpus: jax.Array,
     queries: jax.Array,
     k: int,
     normalized: bool = False,
+    use_kernel: Optional[bool] = None,
 ) -> Tuple[jax.Array, jax.Array]:
-    """Exact cosine top-k: returns (scores (B,k), ids (B,k))."""
+    """Exact cosine top-k: returns (scores (B,k), ids (B,k)).
+
+    ``use_kernel`` routes through the fused streaming score->top-k Pallas
+    kernel (docs/DESIGN.md §4): the corpus streams HBM->VMEM once and the
+    (B, N) score matrix never materializes.  Default: kernel on TPU."""
+    from repro.kernels.fused_topk import ops as fused
+
     c = corpus if normalized else l2_normalize(corpus)
     q = queries if normalized else l2_normalize(queries)
+    if fused.resolve_use_kernel(use_kernel):
+        return fused.cosine_topk(c, q, k)
     scores = q @ c.T  # (B, N)
     return jax.lax.top_k(scores, k)
 

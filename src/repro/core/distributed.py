@@ -1,4 +1,4 @@
-"""Pod-scale sharded ANN search (DESIGN.md §5).
+"""Pod-scale sharded ANN search (docs/DESIGN.md §5).
 
 Lucene/Elasticsearch scale by sharding the inverted index across nodes: every
 query fans out, each shard returns its local top-d, and a coordinator merges.
@@ -26,6 +26,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.core import bruteforce, fakewords
 from repro.core.types import FakeWordsConfig, FakeWordsIndex
 
@@ -34,7 +35,7 @@ def flat_axis_index(axes: Sequence[str]) -> jax.Array:
     """Row-major linear index of this shard over multiple mesh axes."""
     idx = jnp.int32(0)
     for name in axes:
-        idx = idx * jax.lax.axis_size(name) + jax.lax.axis_index(name)
+        idx = idx * compat.axis_size(name) + jax.lax.axis_index(name)
     return idx
 
 
@@ -94,7 +95,7 @@ def build_fakewords_sharded(
         scored=P(axes, None) if config.scoring == "classic" else None,
         vectors=P(axes, None) if keep_vectors else None,
     )
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         local_build, mesh=mesh, in_specs=P(axes, None), out_specs=out_specs
     )
     return fn(vectors)
@@ -143,6 +144,24 @@ def _local_topk_tiled(
     return best_s, best_i
 
 
+def _kernel_query_and_docs(index: FakeWordsIndex, q_tf, config: FakeWordsConfig):
+    """Per-scoring-mode (query tile, stored matrix) operands for the fused
+    streaming top-k kernel, keep-mask folded into the query."""
+    if config.scoring == "classic":
+        return fakewords.classic_query(index, q_tf, config.df_max_ratio), index.scored
+    if config.signed_store:
+        # index.tf holds the SIGNED (N, m) matrix; fold the sign-split keep
+        # mask down to m terms.
+        keep = fakewords.df_prune_mask(
+            index.df, index.num_docs, config.df_max_ratio)
+        m = index.tf.shape[1]
+        keep_m = keep[:m] & keep[m:] if keep.shape[0] == 2 * m else keep[:m]
+        qv = ((q_tf[:, :m] - q_tf[:, m:]) * keep_m).astype(jnp.int8)
+        return qv, index.tf
+    return fakewords.dot_query(
+        index, q_tf, config.df_max_ratio, dtype=jnp.int8), index.tf
+
+
 def make_sharded_search(
     mesh: Mesh,
     config: FakeWordsConfig,
@@ -153,54 +172,44 @@ def make_sharded_search(
     keep_vectors: bool = True,
     score_tile: int = 262_144,
     tile_unroll: bool = False,
+    use_kernel: Optional[bool] = None,
 ):
     """Returns a jit-able ``search(index, q_tf, queries) -> (scores, ids)``
     closed over the mesh.  ``index`` leaves must be sharded as produced by
-    :func:`build_fakewords_sharded`; queries are replicated.  Local shards
-    larger than ``score_tile`` docs stream tile-by-tile with a running
-    top-d merge instead of materializing (B, n_local) scores."""
+    :func:`build_fakewords_sharded`; queries are replicated.
+
+    The local match phase has three realizations: with ``use_kernel`` (the
+    default on TPU) every shard runs the fused streaming score->top-k Pallas
+    kernel (docs/DESIGN.md §4) — the index streams HBM->VMEM once and only
+    (B, d) survives; otherwise shards larger than ``score_tile`` docs stream
+    tile-by-tile with an XLA running top-d merge, and small shards fall back
+    to the dense GEMM + top_k reference."""
     axes = tuple(axes)
+    from repro.kernels.fused_topk import ops as fused
+
+    kernel_local = fused.resolve_use_kernel(use_kernel)
 
     def local_search(index: FakeWordsIndex, q_tf, queries):
         shard = flat_axis_index(axes)
         n_local = index.tf.shape[0]
         d_local = min(depth, n_local)
-        if n_local > 2 * score_tile:
+        if kernel_local:
+            qv, docs = _kernel_query_and_docs(index, q_tf, config)
+            loc_s, loc_i = fused.fused_topk(qv, docs, d_local)
+        elif n_local > 2 * score_tile:
+            qv, docs = _kernel_query_and_docs(index, q_tf, config)
             if config.scoring == "classic":
-                keep = fakewords.df_prune_mask(
-                    index.df, index.num_docs, config.df_max_ratio)
-                qv = (q_tf * keep).astype(jnp.bfloat16)
-
                 def tile_scores(start):
                     rows = jax.lax.dynamic_slice_in_dim(
-                        index.scored, start, score_tile, axis=0)
+                        docs, start, score_tile, axis=0)
                     return jnp.einsum("bt,nt->bn", qv, rows,
                                       preferred_element_type=jnp.float32)
-            elif config.signed_store:
-                # index.tf holds the SIGNED (N, m) matrix; q arrives as the
-                # (B, 2m) sign-split counts -> signed (B, m) query.
-                m = index.tf.shape[1]
-                keep2 = fakewords.df_prune_mask(
-                    index.df, index.num_docs, config.df_max_ratio)
-                keep = keep2[:m] & keep2[m:] if keep2.shape[0] == 2 * m else keep2[:m]
-                qv = (q_tf[:, :m] - q_tf[:, m:]).astype(jnp.int32) * keep
-
-                def tile_scores(start):
-                    rows = jax.lax.dynamic_slice_in_dim(
-                        index.tf, start, score_tile, axis=0)
-                    return jnp.einsum(
-                        "bt,nt->bn", qv, rows.astype(jnp.int32),
-                        preferred_element_type=jnp.int32)
             else:
-                keep = fakewords.df_prune_mask(
-                    index.df, index.num_docs, config.df_max_ratio)
-                m = index.num_terms // 2
-                u = (q_tf[:, :m] - q_tf[:, m:]).astype(jnp.int32)
-                qv = jnp.concatenate([u, -u], axis=-1) * keep
+                qv = qv.astype(jnp.int32)
 
                 def tile_scores(start):
                     rows = jax.lax.dynamic_slice_in_dim(
-                        index.tf, start, score_tile, axis=0)
+                        docs, start, score_tile, axis=0)
                     return jnp.einsum(
                         "bt,nt->bn", qv, rows.astype(jnp.int32),
                         preferred_element_type=jnp.int32)
@@ -240,7 +249,7 @@ def make_sharded_search(
     )
     # After the full all-gather + top_k the outputs are bitwise-replicated,
     # but the static VMA checker cannot prove it; disable the check.
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         local_search,
         mesh=mesh,
         in_specs=in_specs,

@@ -5,7 +5,7 @@ feature i's term tau_i appears round(Q * w_i) times.  Term frequency is then
 proportional to the feature value, so Lucene's tf-idf match score approximates
 the inner product (== cosine on unit vectors).
 
-TPU adaptation (DESIGN.md §3): negative features are handled by sign-splitting
+TPU adaptation (docs/DESIGN.md §3): negative features are handled by sign-splitting
 into 2m terms (Amato et al.'s CReLU-style trick); the posting lists become a
 dense (N, 2m) int8 term-frequency matrix and the inverted-index scoring loop
 becomes an int8 GEMM on the MXU.  Lucene semantics preserved:
@@ -107,6 +107,31 @@ def df_prune_mask(df: jax.Array, num_docs: int, df_max_ratio: float) -> jax.Arra
 # --------------------------------------------------------------------------
 
 
+def classic_query(
+    index: FakeWordsIndex, q_tf: jax.Array, df_max_ratio: float = 1.0
+) -> jax.Array:
+    """bf16 classic-mode query operand with the df-prune keep-mask folded in
+    (the single source of truth for every classic scoring path)."""
+    assert index.scored is not None, "index was built with scoring='dot'"
+    keep = df_prune_mask(index.df, index.num_docs, df_max_ratio)
+    return (q_tf * keep).astype(jnp.bfloat16)
+
+
+def dot_query(
+    index: FakeWordsIndex,
+    q_tf: jax.Array,
+    df_max_ratio: float = 1.0,
+    dtype=jnp.int32,
+) -> jax.Array:
+    """Dot-mode query operand: the [u; -u] sign-split lift (u = q+ - q-)
+    with the keep-mask folded in.  ``dtype`` is int32 for the XLA einsum,
+    int8 for the MXU integer kernel path."""
+    keep = df_prune_mask(index.df, index.num_docs, df_max_ratio)
+    m = index.num_terms // 2
+    u = (q_tf[:, :m] - q_tf[:, m:]).astype(jnp.int32)
+    return (jnp.concatenate([u, -u], axis=-1) * keep).astype(dtype)
+
+
 def classic_scores(
     index: FakeWordsIndex, q_tf: jax.Array, df_max_ratio: float = 1.0
 ) -> jax.Array:
@@ -114,9 +139,7 @@ def classic_scores(
 
     scored[d,t] already folds sqrt(tf_d)*idf^2*norm_d; the query side
     contributes its own tf (repeated query tokens sum in Lucene)."""
-    assert index.scored is not None, "index was built with scoring='dot'"
-    keep = df_prune_mask(index.df, index.num_docs, df_max_ratio)
-    qv = (q_tf * keep).astype(jnp.bfloat16)
+    qv = classic_query(index, q_tf, df_max_ratio)
     return jnp.einsum(
         "bt,nt->bn", qv, index.scored, preferred_element_type=jnp.float32
     )
@@ -131,10 +154,7 @@ def dot_scores(
     (d+ - d-) . u equals [d+; d-] . [u; -u], so scoring stays a single GEMM
     over the stored sign-split (N, 2m) matrix with the query lifted to
     [u; -u]."""
-    keep = df_prune_mask(index.df, index.num_docs, df_max_ratio)
-    m = index.num_terms // 2
-    u = (q_tf[:, :m] - q_tf[:, m:]).astype(jnp.int32)
-    qv = jnp.concatenate([u, -u], axis=-1) * keep
+    qv = dot_query(index, q_tf, df_max_ratio)
     return jnp.einsum(
         "bt,nt->bn",
         qv,
@@ -144,7 +164,10 @@ def dot_scores(
 
 
 @functools.partial(
-    jax.jit, static_argnames=("k", "depth", "scoring", "rerank", "df_max_ratio")
+    jax.jit,
+    static_argnames=(
+        "k", "depth", "scoring", "rerank", "df_max_ratio", "use_kernel"
+    ),
 )
 def search(
     index: FakeWordsIndex,
@@ -155,14 +178,27 @@ def search(
     scoring: str = "classic",
     rerank: bool = False,
     df_max_ratio: float = 1.0,
+    use_kernel: Optional[bool] = None,
 ) -> Tuple[jax.Array, jax.Array]:
     """Two-phase search: match depth-d candidates on the fake-words index,
-    optionally exact-rerank to k using the stored original vectors."""
-    if scoring == "classic":
-        scores = classic_scores(index, q_tf, df_max_ratio)
+    optionally exact-rerank to k using the stored original vectors.
+
+    ``use_kernel`` routes the match phase through the fused streaming
+    score->top-k Pallas kernel (docs/DESIGN.md §4), which never writes the
+    (B, N) score matrix to HBM.  Default: kernel on TPU, XLA elsewhere."""
+    from repro.kernels.fused_topk import ops as fused
+
+    if fused.resolve_use_kernel(use_kernel):
+        if scoring == "classic":
+            d_s, d_i = fused.classic_topk(index, q_tf, depth, df_max_ratio)
+        else:
+            d_s, d_i = fused.dot_topk(index, q_tf, depth, df_max_ratio)
     else:
-        scores = dot_scores(index, q_tf, df_max_ratio)
-    d_s, d_i = jax.lax.top_k(scores, depth)
+        if scoring == "classic":
+            scores = classic_scores(index, q_tf, df_max_ratio)
+        else:
+            scores = dot_scores(index, q_tf, df_max_ratio)
+        d_s, d_i = jax.lax.top_k(scores, depth)
     if not rerank:
         return d_s[:, :k], d_i[:, :k]
     assert index.vectors is not None and queries is not None

@@ -6,7 +6,7 @@ optionally aggregated into n-grams, then passed through MinHash (Lucene's
 MinHashFilter) into ``b`` buckets with ``h`` hash functions.  A vector is
 represented by its LSH signature tokens; matching counts signature collisions.
 
-TPU adaptation (DESIGN.md §3): token strings become 32-bit token ids (the
+TPU adaptation (docs/DESIGN.md §3): token strings become 32-bit token ids (the
 string is only ever a carrier for identity); a document's signature set is a
 dense (h*b,) uint32 row with a sentinel for empty buckets, and match scoring
 is an integer equality-popcount over signature slots - a VPU-friendly
@@ -126,7 +126,9 @@ def match_scores(
     return scores[:, :n]
 
 
-@functools.partial(jax.jit, static_argnames=("k", "depth", "rerank"))
+@functools.partial(
+    jax.jit, static_argnames=("k", "depth", "rerank", "use_kernel")
+)
 def search(
     index: LshIndex,
     sig_q: jax.Array,
@@ -134,9 +136,19 @@ def search(
     k: int = 10,
     depth: int = 100,
     rerank: bool = False,
+    use_kernel: Optional[bool] = None,
 ) -> Tuple[jax.Array, jax.Array]:
-    scores = match_scores(sig_q, index.sig).astype(jnp.float32)
-    d_s, d_i = jax.lax.top_k(scores, depth)
+    """Signature-collision search.  ``use_kernel`` streams the signature
+    matrix through the fused compare+reduce->top-k Pallas kernel
+    (docs/DESIGN.md §4) instead of materializing (B, N) collision counts.
+    Default: kernel on TPU, XLA elsewhere."""
+    from repro.kernels.fused_topk import ops as fused
+
+    if fused.resolve_use_kernel(use_kernel):
+        d_s, d_i = fused.lsh_topk(sig_q, index.sig, depth)
+    else:
+        scores = match_scores(sig_q, index.sig).astype(jnp.float32)
+        d_s, d_i = jax.lax.top_k(scores, depth)
     if not rerank:
         return d_s[:, :k], d_i[:, :k]
     assert index.vectors is not None and queries is not None

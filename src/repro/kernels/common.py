@@ -9,11 +9,26 @@ from __future__ import annotations
 import os
 
 import jax
+from jax.experimental.pallas import tpu as pltpu
 
 # CPU containers run every kernel in interpret mode; on a real TPU leave unset.
 INTERPRET = jax.default_backend() != "tpu" or bool(
     int(os.environ.get("REPRO_PALLAS_INTERPRET", "0"))
 )
+
+# --------------------------------------------------------------------------
+# Pallas TPU API version shim.  JAX renamed ``pltpu.TPUMemorySpace`` /
+# ``pltpu.TPUCompilerParams`` to ``MemorySpace`` / ``CompilerParams``; kernels
+# import the names from here so both JAX generations work (0.4.x pins the old
+# spelling).
+# --------------------------------------------------------------------------
+MemorySpace = getattr(pltpu, "MemorySpace", None) or pltpu.TPUMemorySpace
+CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
+# Default for the ``use_kernel`` routing flags on the search hot paths: the
+# fused Pallas path on real TPUs, the XLA reference path elsewhere (tests
+# opt in explicitly and run the kernels in interpret mode).
+USE_KERNEL_DEFAULT = jax.default_backend() == "tpu"
 
 # MXU/VPU-aligned default tiles.
 LANE = 128

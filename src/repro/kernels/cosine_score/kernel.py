@@ -65,8 +65,8 @@ def cosine_scores(
         ],
         out_specs=pl.BlockSpec((bq, bn), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((qp.shape[0], dp.shape[0]), jnp.float32),
-        scratch_shapes=[pltpu.MemorySpace.VMEM((bq, bn), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        scratch_shapes=[common.MemorySpace.VMEM((bq, bn), jnp.float32)],
+        compiler_params=common.CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -1,7 +1,7 @@
 """Pallas TPU kernel: fake-words index-scan GEMM.
 
 The inverted-index scoring loop of the paper's fake-words method, realized as
-a tiled GEMM over the stored term-frequency matrix (DESIGN.md §3):
+a tiled GEMM over the stored term-frequency matrix (docs/DESIGN.md §3):
 
   * classic mode - scores = q_tf @ scored.T where ``scored`` already folds
     sqrt(tf_d) * idf^2 * norm_d (bf16 operands, f32 accumulate on the MXU);
@@ -77,8 +77,8 @@ def score_matmul(
         ],
         out_specs=pl.BlockSpec((bq, bn), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((qp.shape[0], dp.shape[0]), out_dtype),
-        scratch_shapes=[pltpu.MemorySpace.VMEM((bq, bn), acc_dtype)],
-        compiler_params=pltpu.CompilerParams(
+        scratch_shapes=[common.MemorySpace.VMEM((bq, bn), acc_dtype)],
+        compiler_params=common.CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

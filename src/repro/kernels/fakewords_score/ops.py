@@ -13,8 +13,7 @@ def classic_scores(
     index: FakeWordsIndex, q_tf: jax.Array, df_max_ratio: float = 1.0
 ) -> jax.Array:
     """Kernel-backed drop-in for core.fakewords.classic_scores."""
-    keep = fakewords.df_prune_mask(index.df, index.num_docs, df_max_ratio)
-    qv = (q_tf * keep).astype(jnp.bfloat16)
+    qv = fakewords.classic_query(index, q_tf, df_max_ratio)
     return score_matmul(qv, index.scored)
 
 
@@ -22,8 +21,5 @@ def dot_scores(
     index: FakeWordsIndex, q_tf: jax.Array, df_max_ratio: float = 1.0
 ) -> jax.Array:
     """Kernel-backed drop-in for core.fakewords.dot_scores (int8 MXU path)."""
-    keep = fakewords.df_prune_mask(index.df, index.num_docs, df_max_ratio)
-    m = index.num_terms // 2
-    u = q_tf[:, :m] - q_tf[:, m:]
-    q_lift = (jnp.concatenate([u, -u], axis=-1) * keep).astype(jnp.int8)
+    q_lift = fakewords.dot_query(index, q_tf, df_max_ratio, dtype=jnp.int8)
     return score_matmul(q_lift, index.tf)

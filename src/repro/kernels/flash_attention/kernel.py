@@ -119,11 +119,11 @@ def flash_attention(
         out_specs=pl.BlockSpec((1, 1, bq, d), lambda b, h, i, j: (b, h, i, 0)),
         out_shape=jax.ShapeDtypeStruct(qp.shape, q.dtype),
         scratch_shapes=[
-            pltpu.MemorySpace.VMEM((bq, d), jnp.float32),
-            pltpu.MemorySpace.VMEM((bq, 1), jnp.float32),
-            pltpu.MemorySpace.VMEM((bq, 1), jnp.float32),
+            common.MemorySpace.VMEM((bq, d), jnp.float32),
+            common.MemorySpace.VMEM((bq, 1), jnp.float32),
+            common.MemorySpace.VMEM((bq, 1), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=common.CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -1,0 +1,5 @@
+"""Fused streaming score -> top-k Pallas kernel (docs/DESIGN.md §4)."""
+from repro.kernels.fused_topk.kernel import fused_topk, fused_topk_gathered
+from repro.kernels.fused_topk import ops, ref
+
+__all__ = ["fused_topk", "fused_topk_gathered", "ops", "ref"]

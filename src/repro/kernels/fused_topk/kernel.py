@@ -1,0 +1,328 @@
+"""Pallas TPU kernel: fused streaming score -> top-k (docs/DESIGN.md §4).
+
+Every search hot path used to materialize a dense (B, N) f32 score matrix in
+HBM and only then run ``jax.lax.top_k`` — at production corpus sizes the
+score-matrix write+read dominates HBM traffic, not the index scan.  This
+kernel applies the flash-attention online-reduction trick to retrieval: a
+tiled GEMM over doc blocks keeps a per-query running top-``depth``
+(scores + global doc ids) in VMEM scratch across the doc-tile grid axis, so
+the only HBM traffic is the index stream plus an O(B * depth) result.
+
+Score stages (selected by ``mode`` / operand dtypes):
+
+  * gemm  — scores = q @ docs.T.  bf16 operands with f32 accumulate covers
+    the classic-similarity path (q = tf_q * keep against the precomputed
+    ``scored`` matrix); int8 operands with int32 accumulate cover the dot
+    path (q lifted to [u; -u], the MXU's 4x-throughput integer pipe); f32
+    covers brute-force cosine.
+  * lsh   — scores = MinHash collision counts (equality + popcount-style
+    reduce on the VPU; sentinel-aware like ``lsh_match``).
+
+Grid = (query tiles, doc tiles, reduce tiles); the reduce (K) axis is the
+innermost "arbitrary" axis so the (bq, bn) accumulator carries across K
+steps, and the doc axis is also "arbitrary" so the running top-``depth``
+scratch carries across doc tiles.  After the last K step of each doc tile the
+tile's scores are merged into the running best by iterative max-extraction
+(exact, with ``jax.lax.top_k``'s lowest-index tie-break); a whole tile is
+skipped when its best score cannot beat any query's current depth-th best —
+the dense-GEMM analogue of WAND block skipping.  Padded / ragged N is masked
+to -inf inside the kernel, so callers can stream any corpus size.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.kernels import common
+
+# Sentinel id for empty / padded top-k slots (replaced by -1 on the host).
+BIG_ID = np.int32(2**30)
+LSH_SENTINEL = np.uint32(0xFFFFFFFF)
+
+_INT_DTYPES = (jnp.int8, jnp.int32, jnp.uint32)
+
+
+def _merge_topk(rs_ref, ri_ref, tile_s, tile_i, depth: int) -> None:
+    """Merge a (bq, bn) candidate tile into the running (bq, depth) best.
+
+    Exact iterative max-extraction over the concatenated candidates.  Ties
+    select the minimum id, which equals ``jax.lax.top_k``'s lowest-index
+    tie-break because running ids always come from earlier (smaller-id) doc
+    tiles.  Extracted entries are retired to (-inf, BIG_ID) so -inf padding
+    can never resurrect a stale id.
+    """
+    run_s = rs_ref[:, :depth]
+    run_i = ri_ref[:, :depth]
+    comb_s = jnp.concatenate([run_s, tile_s], axis=1)
+    comb_i = jnp.concatenate([run_i, tile_i], axis=1)
+    init = (
+        comb_s,
+        comb_i,
+        jnp.full_like(run_s, -jnp.inf),
+        jnp.full_like(run_i, BIG_ID),
+    )
+
+    def extract(d, carry):
+        cs, ci, ns, ni = carry
+        best = jnp.max(cs, axis=1, keepdims=True)  # (bq, 1)
+        sel = jnp.min(
+            jnp.where(cs == best, ci, BIG_ID), axis=1, keepdims=True
+        )  # (bq, 1) min id among argmaxes
+        col = jax.lax.broadcasted_iota(jnp.int32, ns.shape, 1) == d
+        ns = jnp.where(col, best, ns)
+        ni = jnp.where(col, sel, ni)
+        kill = (cs == best) & (ci == sel)
+        cs = jnp.where(kill, -jnp.inf, cs)
+        ci = jnp.where(kill, BIG_ID, ci)
+        return cs, ci, ns, ni
+
+    _, _, new_s, new_i = jax.lax.fori_loop(0, depth, extract, init)
+    rs_ref[:, :depth] = new_s
+    ri_ref[:, :depth] = new_i
+
+
+def _merge_if_improves(rs_ref, ri_ref, tile_s, tile_i, depth: int) -> None:
+    """WAND-style tile skip: merging is wasted work unless some query's tile
+    best strictly beats its current depth-th best (ties lose to the running
+    set's smaller ids, so ``>`` is exact)."""
+    improves = jnp.any(
+        jnp.max(tile_s, axis=1) > jnp.min(rs_ref[:, :depth], axis=1)
+    )
+
+    @pl.when(improves)
+    def _():
+        _merge_topk(rs_ref, ri_ref, tile_s, tile_i, depth)
+
+
+def _score_tile(q, d, mode: str, acc_dtype):
+    if mode == "lsh":
+        eq = (q[:, None, :] == d[None, :, :]) & (q[:, None, :] != LSH_SENTINEL)
+        return jnp.sum(eq.astype(jnp.int32), axis=-1)
+    return jnp.dot(q, d.T, preferred_element_type=acc_dtype)
+
+
+def _fused_topk_kernel(
+    q_ref, d_ref, s_ref, i_ref, acc_ref, rs_ref, ri_ref,
+    *, n_j: int, n_k: int, n_docs: int, bn: int, depth: int, mode: str,
+    acc_dtype,
+):
+    j = pl.program_id(1)
+    k = pl.program_id(2)
+
+    @pl.when(jnp.logical_and(j == 0, k == 0))
+    def _init_running():
+        rs_ref[...] = jnp.full_like(rs_ref, -jnp.inf)
+        ri_ref[...] = jnp.full_like(ri_ref, BIG_ID)
+
+    @pl.when(k == 0)
+    def _init_acc():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += _score_tile(q_ref[...], d_ref[...], mode, acc_dtype)
+
+    @pl.when(k == n_k - 1)
+    def _merge():
+        tile_s = acc_ref[...].astype(jnp.float32)
+        ids = j * bn + jax.lax.broadcasted_iota(jnp.int32, tile_s.shape, 1)
+        valid = ids < n_docs  # ragged N: padded docs can never rank
+        tile_s = jnp.where(valid, tile_s, -jnp.inf)
+        ids = jnp.where(valid, ids, BIG_ID)
+        _merge_if_improves(rs_ref, ri_ref, tile_s, ids, depth)
+
+    @pl.when(jnp.logical_and(j == n_j - 1, k == n_k - 1))
+    def _flush():
+        s_ref[...] = rs_ref[...]
+        i_ref[...] = ri_ref[...]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("depth", "mode", "bq", "bn", "bk", "interpret"),
+)
+def fused_topk(
+    q: jax.Array,  # (B, T)  bf16 / f32 (gemm), int8 (dot), uint32 (lsh)
+    docs: jax.Array,  # (N, T) same reduce-axis dtype family as q
+    depth: int,
+    mode: str = "gemm",
+    bq: int | None = None,
+    bn: int | None = None,
+    bk: int | None = None,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Streaming top-``depth`` of q @ docs.T (or LSH collision counts).
+
+    Returns (scores f32 (B, depth), ids int32 (B, depth)), sorted descending
+    with ``jax.lax.top_k`` tie semantics; id -1 marks empty (-inf) slots.
+    The (B, N) score matrix never exists in HBM.
+    """
+    if interpret is None:
+        interpret = common.INTERPRET
+    if mode == "lsh":
+        # The compare stage materializes a (bq, bn, bk) equality tensor in
+        # VMEM — size tiles like ``lsh_match`` (~4 MB), not like the GEMM.
+        bq, bn, bk = bq or 16, bn or 128, bk or 512
+    else:
+        bq, bn, bk = bq or 128, bn or 512, bk or 512
+    b, t = q.shape
+    n = docs.shape[0]
+    assert depth <= n, f"depth {depth} > corpus size {n}"
+    bq = min(bq, common.round_up(b, 8))
+    bn = min(bn, common.round_up(n, common.LANE))
+    bk = min(bk, common.round_up(t, common.LANE))
+    if mode == "lsh":
+        # Distinct fillers so padding never matches (query pad is masked).
+        qp = common.pad_dim(common.pad_dim(q, 0, bq), 1, bk, value=LSH_SENTINEL)
+        dp = common.pad_dim(
+            common.pad_dim(docs, 0, bn), 1, bk, value=np.uint32(LSH_SENTINEL - 1)
+        )
+        acc_dtype = jnp.int32
+    else:
+        qp = common.pad_dim(common.pad_dim(q, 0, bq), 1, bk)
+        dp = common.pad_dim(common.pad_dim(docs, 0, bn), 1, bk)
+        acc_dtype = jnp.int32 if q.dtype in _INT_DTYPES else jnp.float32
+    dpad = common.round_up(depth, common.LANE)
+    grid = (qp.shape[0] // bq, dp.shape[0] // bn, qp.shape[1] // bk)
+
+    scores, ids = pl.pallas_call(
+        functools.partial(
+            _fused_topk_kernel,
+            n_j=grid[1], n_k=grid[2], n_docs=n, bn=bn, depth=depth,
+            mode=mode, acc_dtype=acc_dtype,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bq, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bn, bk), lambda i, j, k: (j, k)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bq, dpad), lambda i, j, k: (i, 0)),
+            pl.BlockSpec((bq, dpad), lambda i, j, k: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((qp.shape[0], dpad), jnp.float32),
+            jax.ShapeDtypeStruct((qp.shape[0], dpad), jnp.int32),
+        ],
+        scratch_shapes=[
+            common.MemorySpace.VMEM((bq, bn), acc_dtype),
+            common.MemorySpace.VMEM((bq, dpad), jnp.float32),
+            common.MemorySpace.VMEM((bq, dpad), jnp.int32),
+        ],
+        compiler_params=common.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(qp, dp)
+    scores = scores[:b, :depth]
+    ids = ids[:b, :depth]
+    return scores, jnp.where(scores == -jnp.inf, -1, ids)
+
+
+def _fused_gathered_kernel(
+    q_ref, d_ref, rid_ref, s_ref, p_ref, acc_ref, rs_ref, ri_ref,
+    *, n_j: int, n_k: int, n_docs: int, bn: int, depth: int, acc_dtype,
+):
+    j = pl.program_id(1)
+    k = pl.program_id(2)
+
+    @pl.when(jnp.logical_and(j == 0, k == 0))
+    def _init_running():
+        rs_ref[...] = jnp.full_like(rs_ref, -jnp.inf)
+        ri_ref[...] = jnp.full_like(ri_ref, BIG_ID)
+
+    @pl.when(k == 0)
+    def _init_acc():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        q_ref[...], d_ref[0].T, preferred_element_type=acc_dtype
+    )
+
+    @pl.when(k == n_k - 1)
+    def _merge():
+        tile_s = acc_ref[...].astype(jnp.float32)  # (1, bn)
+        # Merge key = candidate POSITION (top_k tie semantics over the
+        # gathered order); the caller maps positions back to doc ids.
+        pos = j * bn + jax.lax.broadcasted_iota(jnp.int32, tile_s.shape, 1)
+        valid = rid_ref[...] < n_docs  # folds the blockmax padding mask
+        tile_s = jnp.where(valid, tile_s, -jnp.inf)
+        pos = jnp.where(valid, pos, BIG_ID)
+        _merge_if_improves(rs_ref, ri_ref, tile_s, pos, depth)
+
+    @pl.when(jnp.logical_and(j == n_j - 1, k == n_k - 1))
+    def _flush():
+        s_ref[...] = rs_ref[...]
+        p_ref[...] = ri_ref[...]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("depth", "n_docs", "bn", "bk", "interpret")
+)
+def fused_topk_gathered(
+    q: jax.Array,  # (B, T)
+    docs: jax.Array,  # (B, R, T) per-query gathered candidate rows
+    row_ids: jax.Array,  # (B, R) int32 global doc ids; >= n_docs = padding
+    depth: int,
+    n_docs: int,
+    bn: int = 512,
+    bk: int = 512,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Per-query streaming top-``depth`` over gathered candidate matrices
+    (blockmax stage 2: each query scores only its own kept blocks' rows).
+
+    Returns (scores f32 (B, depth), ids int32 (B, depth)); id -1 marks
+    padded / -inf slots.  The (B, R) stage-2 score matrix never exists in
+    HBM.
+    """
+    if interpret is None:
+        interpret = common.INTERPRET
+    b, r, t = docs.shape
+    assert depth <= r, f"depth {depth} > candidate count {r}"
+    bn = min(bn, common.round_up(r, common.LANE))
+    bk = min(bk, common.round_up(t, common.LANE))
+    qp = common.pad_dim(q, 1, bk)
+    dp = common.pad_dim(common.pad_dim(docs, 1, bn), 2, bk)
+    # Padding rows get an out-of-range id so the in-kernel mask drops them.
+    rp = common.pad_dim(row_ids.astype(jnp.int32), 1, bn, value=BIG_ID)
+    dpad = common.round_up(depth, common.LANE)
+    acc_dtype = jnp.int32 if q.dtype in _INT_DTYPES else jnp.float32
+    grid = (b, dp.shape[1] // bn, qp.shape[1] // bk)
+
+    scores, pos = pl.pallas_call(
+        functools.partial(
+            _fused_gathered_kernel,
+            n_j=grid[1], n_k=grid[2], n_docs=n_docs, bn=bn, depth=depth,
+            acc_dtype=acc_dtype,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((1, bn, bk), lambda i, j, k: (i, j, k)),
+            pl.BlockSpec((1, bn), lambda i, j, k: (i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, dpad), lambda i, j, k: (i, 0)),
+            pl.BlockSpec((1, dpad), lambda i, j, k: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, dpad), jnp.float32),
+            jax.ShapeDtypeStruct((b, dpad), jnp.int32),
+        ],
+        scratch_shapes=[
+            common.MemorySpace.VMEM((1, bn), acc_dtype),
+            common.MemorySpace.VMEM((1, dpad), jnp.float32),
+            common.MemorySpace.VMEM((1, dpad), jnp.int32),
+        ],
+        compiler_params=common.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(qp, dp, rp)
+    scores = scores[:, :depth]
+    pos = pos[:, :depth]
+    ids = jnp.take_along_axis(row_ids, jnp.minimum(pos, r - 1), axis=-1)
+    return scores, jnp.where(scores == -jnp.inf, -1, ids)

@@ -1,0 +1,72 @@
+"""Public wrappers routing the search hot paths onto the fused top-k kernel.
+
+Each wrapper prepares the query operand exactly like its ``core/`` reference
+path (df-prune keep-mask folded into the query tile, [u; -u] int8 lift for
+dot mode, unit-normalization for cosine) and then streams the stored index
+through :func:`repro.kernels.fused_topk.kernel.fused_topk` — the (B, N)
+score matrix never materializes.  ``repro.core`` imports these lazily to
+avoid an import cycle.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import common
+from repro.kernels.fused_topk.kernel import fused_topk, fused_topk_gathered
+
+__all__ = [
+    "resolve_use_kernel",
+    "classic_topk",
+    "dot_topk",
+    "cosine_topk",
+    "lsh_topk",
+    "fused_topk",
+    "fused_topk_gathered",
+]
+
+
+def resolve_use_kernel(use_kernel: Optional[bool]) -> bool:
+    """None -> fused Pallas path on TPU, XLA reference path elsewhere."""
+    return common.USE_KERNEL_DEFAULT if use_kernel is None else use_kernel
+
+
+def classic_topk(
+    index, q_tf: jax.Array, depth: int, df_max_ratio: float = 1.0,
+    interpret: bool | None = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Fused ClassicSimilarity top-depth over a FakeWordsIndex (bf16 GEMM
+    against the precomputed ``scored`` matrix, keep-mask folded into q)."""
+    from repro.core import fakewords
+
+    qv = fakewords.classic_query(index, q_tf, df_max_ratio)
+    return fused_topk(qv, index.scored, depth, interpret=interpret)
+
+
+def dot_topk(
+    index, q_tf: jax.Array, depth: int, df_max_ratio: float = 1.0,
+    interpret: bool | None = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Fused integer-dot top-depth (int8 MXU path, [u; -u] query lift)."""
+    from repro.core import fakewords
+
+    qv = fakewords.dot_query(index, q_tf, df_max_ratio, dtype=jnp.int8)
+    return fused_topk(qv, index.tf, depth, interpret=interpret)
+
+
+def cosine_topk(
+    corpus: jax.Array, queries: jax.Array, depth: int,
+    interpret: bool | None = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Fused exact-cosine top-depth (operands must be unit-normalized)."""
+    return fused_topk(queries, corpus, depth, interpret=interpret)
+
+
+def lsh_topk(
+    sig_q: jax.Array, sig_d: jax.Array, depth: int,
+    interpret: bool | None = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Fused MinHash collision-count top-depth (VPU compare+reduce stage)."""
+    return fused_topk(sig_q, sig_d, depth, mode="lsh", interpret=interpret)

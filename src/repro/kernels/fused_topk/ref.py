@@ -1,0 +1,97 @@
+"""Pure-XLA oracles for the fused streaming top-k kernel.
+
+``fused_topk_ref`` / ``gathered_topk_ref`` are the unfused einsum + top_k
+paths (the exact computation the kernel replaces — they DO materialize the
+(B, N) score matrix).  ``streaming_topk_ref`` is an XLA realization of the
+same online reduction (scan over doc tiles with a running merge); it is the
+timeable stand-in for the kernel on non-TPU backends.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+LSH_SENTINEL = np.uint32(0xFFFFFFFF)
+
+
+def scores_ref(q: jax.Array, docs: jax.Array, mode: str = "gemm") -> jax.Array:
+    """Dense (B, N) scores, f32 — the matrix the fused kernel never writes."""
+    if mode == "lsh":
+        eq = (q[:, None, :] == docs[None, :, :]) & (q[:, None, :] != LSH_SENTINEL)
+        return jnp.sum(eq, axis=-1, dtype=jnp.int32).astype(jnp.float32)
+    acc = jnp.int32 if q.dtype in (jnp.int8, jnp.int32) else jnp.float32
+    out = jnp.einsum("bt,nt->bn", q, docs, preferred_element_type=acc)
+    return out.astype(jnp.float32)
+
+
+def fused_topk_ref(
+    q: jax.Array, docs: jax.Array, depth: int, mode: str = "gemm"
+) -> Tuple[jax.Array, jax.Array]:
+    """Unfused reference: full score matrix + ``jax.lax.top_k``."""
+    return jax.lax.top_k(scores_ref(q, docs, mode), depth)
+
+
+def gathered_topk_ref(
+    q: jax.Array,
+    docs: jax.Array,
+    row_ids: jax.Array,
+    depth: int,
+    n_docs: int,
+) -> Tuple[jax.Array, jax.Array]:
+    """Unfused blockmax stage-2 reference (mirrors core.blockmax)."""
+    scores = jnp.einsum(
+        "bt,brt->br", q, docs, preferred_element_type=jnp.float32
+    ).astype(jnp.float32)
+    scores = jnp.where(row_ids < n_docs, scores, -jnp.inf)
+    d_s, pos = jax.lax.top_k(scores, depth)
+    d_i = jnp.take_along_axis(row_ids, pos, axis=-1)
+    return d_s, jnp.where(d_s > -jnp.inf, d_i, -1)
+
+
+@functools.partial(jax.jit, static_argnames=("depth", "tile", "mode"))
+def streaming_topk_ref(
+    q: jax.Array,
+    docs: jax.Array,
+    depth: int,
+    tile: int = 4096,
+    mode: str = "gemm",
+) -> Tuple[jax.Array, jax.Array]:
+    """XLA online-reduction equivalent: scan doc tiles, merge a running
+    top-``depth``.  Peak live scores are O(B * (tile + depth)), never (B, N)."""
+    n, t = docs.shape
+    b = q.shape[0]
+    pad = (-n) % tile
+    if pad:
+        fill = LSH_SENTINEL - 1 if mode == "lsh" else 0
+        docs = jnp.concatenate(
+            [docs, jnp.full((pad, t), fill, docs.dtype)], axis=0
+        )
+    tiles = docs.reshape(-1, tile, t)
+
+    init_s = jnp.full((b, depth), -jnp.inf, jnp.float32)
+    init_i = jnp.full((b, depth), -1, jnp.int32)
+
+    def body(carry, xs):
+        best_s, best_i = carry
+        t_idx, d_tile = xs
+        s = scores_ref(q, d_tile, mode)
+        ids = t_idx * tile + jnp.arange(tile, dtype=jnp.int32)[None, :]
+        valid = ids < n
+        s = jnp.where(valid, s, -jnp.inf)
+        loc_s, pos = jax.lax.top_k(s, min(depth, tile))
+        loc_i = jnp.take_along_axis(jnp.broadcast_to(ids, s.shape), pos, axis=-1)
+        all_s = jnp.concatenate([best_s, loc_s], axis=-1)
+        all_i = jnp.concatenate([best_i, loc_i], axis=-1)
+        top_s, top_pos = jax.lax.top_k(all_s, depth)
+        return (top_s, jnp.take_along_axis(all_i, top_pos, axis=-1)), None
+
+    (best_s, best_i), _ = jax.lax.scan(
+        body,
+        (init_s, init_i),
+        (jnp.arange(tiles.shape[0], dtype=jnp.int32), tiles),
+    )
+    return best_s, best_i

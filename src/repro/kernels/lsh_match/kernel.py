@@ -2,7 +2,7 @@
 
 scores[i,j] = #{s : sig_q[i,s] == sig_d[j,s] != SENTINEL} - the lexical-LSH
 match score.  Integer equality + popcount-style reduce: a VPU workload with
-no MXU use (DESIGN.md §8).  The signature axis is tiled through the grid so
+no MXU use (docs/DESIGN.md §8).  The signature axis is tiled through the grid so
 the (bq, bn, bs) broadcast-compare stays inside VMEM; partial counts
 accumulate in an int32 scratch across signature tiles.
 """
@@ -71,8 +71,8 @@ def lsh_match_scores(
         ],
         out_specs=pl.BlockSpec((bq, bn), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((qp.shape[0], dp.shape[0]), jnp.int32),
-        scratch_shapes=[pltpu.MemorySpace.VMEM((bq, bn), jnp.int32)],
-        compiler_params=pltpu.CompilerParams(
+        scratch_shapes=[common.MemorySpace.VMEM((bq, bn), jnp.int32)],
+        compiler_params=common.CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -30,6 +30,9 @@ class AnnServiceConfig:
     rerank: bool = True
     max_batch: int = 64       # micro-batch size (pad to this)
     max_wait_s: float = 0.002  # batching window in a real deployment
+    # Route the match phase through the fused streaming score->top-k Pallas
+    # kernel (docs/DESIGN.md §4).  None = kernel on TPU, XLA elsewhere.
+    use_kernel: Optional[bool] = None
 
 
 class AnnService:
@@ -51,6 +54,7 @@ class AnnService:
             self._search = distributed.make_sharded_search(
                 mesh, config, shard_axes,
                 k=service.k, depth=service.depth, rerank=service.rerank,
+                use_kernel=service.use_kernel,
             )
         else:
             self._search = None
@@ -83,6 +87,7 @@ class AnnService:
                     k=self.scfg.k, depth=self.scfg.depth,
                     scoring=self.config.scoring, rerank=self.scfg.rerank,
                     df_max_ratio=self.config.df_max_ratio,
+                    use_kernel=self.scfg.use_kernel,
                 )
             out_s.append(np.asarray(s))
             out_i.append(np.asarray(ids))

@@ -14,7 +14,7 @@ KV regions, the right first cut for TPU where contiguous DMA wins).
 
 Per-slot cache layout (L, B, T_max, Hkv, dh) matches models/transformer;
 under pjit the cache shards batch->'data', length->'model' (flash-decoding
-split-K; DESIGN.md §5).
+split-K; docs/DESIGN.md §5).
 """
 from __future__ import annotations
 
@@ -61,6 +61,7 @@ class DecodeEngine:
         self.cache["length"] = jnp.zeros((b,), jnp.int32)
         self.slot_req: List[Optional[Request]] = [None] * b
         self.queue: List[Request] = []
+        self._retired: List[Request] = []
         self.steps = 0
 
         self._decode = jax.jit(self._decode_fn)
@@ -191,7 +192,6 @@ class DecodeEngine:
                 )
                 req.out_tokens.append(int(first))
                 self.slot_req[slot] = req
-                self._last_tok = None  # force rebuild
 
     def step(self) -> int:
         """One engine tick; returns number of active slots."""
@@ -216,6 +216,7 @@ class DecodeEngine:
             total = len(r.prompt) + len(r.out_tokens)
             if done or total >= self.ecfg.max_len:
                 r.done = True
+                self._retired.append(r)
                 self.slot_req[i] = None  # retire; slot reusable
                 # zero the slot's length so a new request starts clean
                 self.cache["length"] = self.cache["length"].at[i].set(0)
@@ -223,7 +224,11 @@ class DecodeEngine:
         return int(active_mask.sum())
 
     def run(self, max_steps: int = 10_000) -> List[Request]:
+        """Drive the engine until the queue and slots drain (or max_steps);
+        returns the requests retired during this call."""
         done: List[Request] = []
         while (self.queue or any(self.slot_req)) and self.steps < max_steps:
             self.step()
+            done.extend(self._retired)
+            self._retired.clear()
         return done

@@ -22,6 +22,7 @@ def run_subprocess(body: str):
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+        from repro import compat
         """
     ) + textwrap.dedent(body)
     r = subprocess.run(
@@ -115,7 +116,7 @@ def test_sharded_lm_train_step_equals_single_device():
     p_sh = jax.tree.map(lambda x, s: jax.device_put(x, NamedSharding(mesh, s)),
                         params, specs, is_leaf=lambda x: hasattr(x, "shape"))
     t_sh = jax.device_put(toks, NamedSharding(mesh, P("data", None)))
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         out = jax.jit(lambda p, t: tfm.loss_fn(p, t, t, cfg_sh))(p_sh, t_sh)
     np.testing.assert_allclose(float(out), float(ref), rtol=2e-4)
     print("lm sharded loss ok", float(out), float(ref))
@@ -129,7 +130,7 @@ def test_compressed_allreduce_and_gpipe():
     g = jnp.arange(8 * 64, dtype=jnp.float32).reshape(8, 64) / 100.0
     def f(gs, r):
         return compression.compressed_psum(gs, r, "data")
-    out, new_r = jax.jit(jax.shard_map(
+    out, new_r = jax.jit(compat.shard_map(
         f, mesh=mesh, in_specs=(P("data"), P("data")),
         out_specs=(P(), P("data"))))({"w": g}, {"w": jnp.zeros((8, 64))})
     exact = jnp.mean(g, axis=0)

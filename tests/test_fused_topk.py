@@ -1,0 +1,175 @@
+"""Fused streaming score->top-k kernel: interpret-mode parity vs
+``jax.lax.top_k`` over the reference scores, plus regression tests that the
+``use_kernel`` routing in every search hot path matches the XLA path.
+
+Small ``bn``/``bk`` overrides force multiple doc/reduce tiles so the
+cross-tile running-merge (the online-reduction part) is actually exercised.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import blockmax, bruteforce, fakewords, lexical_lsh
+from repro.core.types import FakeWordsConfig, LexicalLshConfig
+from repro.kernels.fused_topk import ops as fused
+from repro.kernels.fused_topk import ref as fused_ref
+from repro.kernels.fused_topk.kernel import fused_topk, fused_topk_gathered
+
+RNG = np.random.default_rng(13)
+
+
+# -- raw kernel vs top_k-over-reference-scores -------------------------------
+
+
+@pytest.mark.parametrize(
+    "b,n,t,depth",
+    [
+        (4, 256, 64, 32),    # aligned
+        (3, 513, 257, 37),   # everything unaligned: pad paths + ragged N
+        (8, 300, 100, 100),  # depth == paper default
+    ],
+)
+@pytest.mark.parametrize("dtype", ["bf16", "int8", "f32"])
+def test_fused_topk_parity_modes_and_shapes(b, n, t, depth, dtype):
+    if dtype == "int8":
+        q = jnp.asarray(RNG.integers(-50, 50, (b, t)), jnp.int8)
+        d = jnp.asarray(RNG.integers(-50, 50, (n, t)), jnp.int8)
+    elif dtype == "bf16":
+        q = jnp.asarray(RNG.normal(size=(b, t)), jnp.bfloat16)
+        d = jnp.asarray(RNG.normal(size=(n, t)), jnp.bfloat16)
+    else:
+        q = jnp.asarray(RNG.normal(size=(b, t)), jnp.float32)
+        d = jnp.asarray(RNG.normal(size=(n, t)), jnp.float32)
+    # small tiles => several doc tiles and reduce tiles stream through VMEM
+    s, i = fused_topk(q, d, depth, bn=128, bk=128, interpret=True)
+    ref_s, ref_i = jax.lax.top_k(fused_ref.scores_ref(q, d), depth)
+    if dtype == "int8":  # integer scores: bitwise identical
+        np.testing.assert_array_equal(np.asarray(s), np.asarray(ref_s))
+        np.testing.assert_array_equal(np.asarray(i), np.asarray(ref_i))
+    else:
+        np.testing.assert_allclose(
+            np.asarray(s), np.asarray(ref_s), rtol=1e-5, atol=1e-5)
+        np.testing.assert_array_equal(np.asarray(i), np.asarray(ref_i))
+
+
+def test_fused_topk_lsh_mode_parity():
+    sig_d = jnp.asarray(RNG.integers(0, 7, (357, 96)), jnp.uint32)
+    sig_q = sig_d[:5].at[:, ::5].set(jnp.uint32(0xFFFFFFFF))  # sentinels
+    s, i = fused_topk(sig_q, sig_d, 40, mode="lsh", bn=128, bk=64,
+                      interpret=True)
+    ref_s, ref_i = jax.lax.top_k(
+        fused_ref.scores_ref(sig_q, sig_d, mode="lsh"), 40)
+    # collision counts tie constantly: exact lowest-index tie-break required
+    np.testing.assert_array_equal(np.asarray(s), np.asarray(ref_s))
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(ref_i))
+
+
+def test_fused_topk_tie_break_and_ragged_padding():
+    """Massive integer ties + ragged N: ids must follow top_k's lowest-index
+    tie order and padded docs must never surface."""
+    b, n, t = 3, 130, 16  # n pads up to 256 with bn=128 -> ~half the tile fake
+    q = jnp.asarray(RNG.integers(0, 2, (b, t)), jnp.int8)
+    d = jnp.asarray(RNG.integers(0, 2, (n, t)), jnp.int8)
+    s, i = fused_topk(q, d, n, bn=128, bk=128, interpret=True)
+    ref_s, ref_i = jax.lax.top_k(fused_ref.scores_ref(q, d), n)
+    np.testing.assert_array_equal(np.asarray(s), np.asarray(ref_s))
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(ref_i))
+    assert (np.asarray(i) < n).all()  # no padded id leaks
+
+
+def test_fused_topk_gathered_parity_and_padding():
+    """Blockmax stage-2 variant: per-query candidate sets, invalid rows
+    (row_id >= n_docs) masked to -inf and reported as id -1."""
+    b, r, t, n_docs = 4, 96, 33, 64
+    q = jnp.asarray(RNG.normal(size=(b, t)), jnp.float32)
+    rows = jnp.asarray(RNG.normal(size=(b, r, t)), jnp.float32)
+    # force many invalid candidates so -inf slots reach the output
+    row_ids = jnp.asarray(RNG.integers(0, 2 * n_docs, (b, r)), jnp.int32)
+    s, i = fused_topk_gathered(q, rows, row_ids, 60, n_docs, bn=64, bk=32,
+                               interpret=True)
+    ref_s, ref_i = fused_ref.gathered_topk_ref(q, rows, row_ids, 60, n_docs)
+    np.testing.assert_allclose(
+        np.asarray(s), np.asarray(ref_s), rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(ref_i))
+    assert (np.asarray(i)[np.asarray(s) == -np.inf] == -1).all()
+
+
+# -- index-level wrappers: df-prune mask folding -----------------------------
+
+
+@pytest.mark.parametrize("scoring", ["classic", "dot"])
+@pytest.mark.parametrize("df_max_ratio", [1.0, 0.3])
+def test_fused_wrappers_match_core_scores(small_corpus, scoring, df_max_ratio):
+    v = jnp.asarray(small_corpus[:384])
+    cfg = FakeWordsConfig(quantization=40, scoring=scoring)
+    idx = fakewords.build(v, cfg)
+    q_tf = fakewords.encode_queries(v[:4], cfg)
+    if scoring == "classic":
+        out_s, out_i = fused.classic_topk(
+            idx, q_tf, 50, df_max_ratio, interpret=True)
+        ref = fakewords.classic_scores(idx, q_tf, df_max_ratio)
+    else:
+        out_s, out_i = fused.dot_topk(
+            idx, q_tf, 50, df_max_ratio, interpret=True)
+        ref = fakewords.dot_scores(idx, q_tf, df_max_ratio)
+    ref_s, ref_i = jax.lax.top_k(ref, 50)
+    np.testing.assert_allclose(
+        np.asarray(out_s), np.asarray(ref_s), rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(out_i), np.asarray(ref_i))
+
+
+# -- hot-path routing regressions: use_kernel=True == use_kernel=False -------
+
+
+@pytest.mark.parametrize("scoring", ["classic", "dot"])
+def test_fakewords_search_kernel_routing_exact(small_corpus, scoring):
+    v = jnp.asarray(small_corpus[:512])
+    cfg = FakeWordsConfig(quantization=50, scoring=scoring)
+    idx = fakewords.build(v, cfg)
+    q_tf = fakewords.encode_queries(v[:8], cfg)
+    s_k, i_k = fakewords.search(
+        idx, q_tf, None, k=10, depth=64, scoring=scoring, use_kernel=True)
+    s_x, i_x = fakewords.search(
+        idx, q_tf, None, k=10, depth=64, scoring=scoring, use_kernel=False)
+    np.testing.assert_array_equal(np.asarray(i_k), np.asarray(i_x))
+    np.testing.assert_allclose(
+        np.asarray(s_k), np.asarray(s_x), rtol=1e-5, atol=1e-5)
+
+
+def test_lexical_lsh_search_kernel_routing_exact(small_corpus):
+    v = jnp.asarray(small_corpus[:256])
+    cfg = LexicalLshConfig(buckets=64, hashes=2)
+    idx = lexical_lsh.build(v, cfg)
+    sig_q = lexical_lsh.encode(
+        bruteforce.l2_normalize(v[:4]), cfg)
+    s_k, i_k = lexical_lsh.search(idx, sig_q, None, k=10, depth=30,
+                                  use_kernel=True)
+    s_x, i_x = lexical_lsh.search(idx, sig_q, None, k=10, depth=30,
+                                  use_kernel=False)
+    np.testing.assert_array_equal(np.asarray(i_k), np.asarray(i_x))
+    np.testing.assert_array_equal(np.asarray(s_k), np.asarray(s_x))
+
+
+def test_bruteforce_exact_topk_kernel_routing(small_corpus):
+    v = jnp.asarray(small_corpus[:512])
+    s_k, i_k = bruteforce.exact_topk(v, v[:6], 10, use_kernel=True)
+    s_x, i_x = bruteforce.exact_topk(v, v[:6], 10, use_kernel=False)
+    np.testing.assert_array_equal(np.asarray(i_k), np.asarray(i_x))
+    np.testing.assert_allclose(
+        np.asarray(s_k), np.asarray(s_x), rtol=1e-5, atol=1e-5)
+
+
+def test_blockmax_pruned_search_kernel_routing(small_corpus):
+    v = jnp.asarray(small_corpus[:512])
+    cfg = FakeWordsConfig(quantization=50)
+    idx = fakewords.build(v, cfg)
+    bm = blockmax.build_blockmax(idx, block_size=64)
+    q_tf = fakewords.encode_queries(v[:4], cfg)
+    s_k, i_k = blockmax.pruned_search(idx, bm, q_tf, n_keep=4, depth=50,
+                                      use_kernel=True)
+    s_x, i_x = blockmax.pruned_search(idx, bm, q_tf, n_keep=4, depth=50,
+                                      use_kernel=False)
+    np.testing.assert_array_equal(np.asarray(i_k), np.asarray(i_x))
+    np.testing.assert_allclose(
+        np.asarray(s_k), np.asarray(s_x), rtol=1e-5, atol=1e-5)
