@@ -28,6 +28,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro import compat
 from repro.core import bruteforce, fakewords
+from repro.core.blockmax import BlockMaxIndex
 from repro.core.types import FakeWordsConfig, FakeWordsIndex
 
 
@@ -156,7 +157,7 @@ def _kernel_query_and_docs(index: FakeWordsIndex, q_tf, config: FakeWordsConfig)
             index.df, index.num_docs, config.df_max_ratio)
         m = index.tf.shape[1]
         keep_m = keep[:m] & keep[m:] if keep.shape[0] == 2 * m else keep[:m]
-        qv = ((q_tf[:, :m] - q_tf[:, m:]) * keep_m).astype(jnp.int8)
+        qv = (fakewords.signed_query(q_tf) * keep_m).astype(jnp.int8)
         return qv, index.tf
     return fakewords.dot_query(
         index, q_tf, config.df_max_ratio, dtype=jnp.int8), index.tf
@@ -173,6 +174,7 @@ def make_sharded_search(
     score_tile: int = 262_144,
     tile_unroll: bool = False,
     use_kernel: Optional[bool] = None,
+    blockmax_keep: Optional[int] = None,
 ):
     """Returns a jit-able ``search(index, q_tf, queries) -> (scores, ids)``
     closed over the mesh.  ``index`` leaves must be sharded as produced by
@@ -183,20 +185,29 @@ def make_sharded_search(
     kernel (docs/DESIGN.md §4) — the index streams HBM->VMEM once and only
     (B, d) survives; otherwise shards larger than ``score_tile`` docs stream
     tile-by-tile with an XLA running top-d merge, and small shards fall back
-    to the dense GEMM + top_k reference."""
+    to the dense GEMM + top_k reference.
+
+    With ``blockmax_keep`` set, the returned callable becomes
+    ``search(index, bm, q_tf, queries)`` (``bm`` built by
+    ``blockmax.build_blockmax`` and placed by :func:`shard_blockmax`): each
+    shard runs the two-stage pruned match — bound pass over its local block
+    upper bounds, then exact scoring of the kept blocks through the fused
+    gathered streaming top-k kernel — so the pod also gets the ~(1 - beta)
+    scan-byte cut.  The df-prune mask is not applied on this path (like the
+    single-node ``pruned_search``)."""
     axes = tuple(axes)
+    from repro.core import blockmax as bmx
     from repro.kernels.fused_topk import ops as fused
 
     kernel_local = fused.resolve_use_kernel(use_kernel)
 
-    def local_search(index: FakeWordsIndex, q_tf, queries):
-        shard = flat_axis_index(axes)
+    def dense_match(index: FakeWordsIndex, q_tf):
         n_local = index.tf.shape[0]
         d_local = min(depth, n_local)
         if kernel_local:
             qv, docs = _kernel_query_and_docs(index, q_tf, config)
-            loc_s, loc_i = fused.fused_topk(qv, docs, d_local)
-        elif n_local > 2 * score_tile:
+            return fused.fused_topk(qv, docs, d_local)
+        if n_local > 2 * score_tile:
             qv, docs = _kernel_query_and_docs(index, q_tf, config)
             if config.scoring == "classic":
                 def tile_scores(start):
@@ -214,20 +225,28 @@ def make_sharded_search(
                         "bt,nt->bn", qv, rows.astype(jnp.int32),
                         preferred_element_type=jnp.int32)
 
-            loc_s, loc_i = _local_topk_tiled(
+            return _local_topk_tiled(
                 tile_scores, n_local, q_tf.shape[0], d_local, score_tile,
                 unroll=tile_unroll)
+        if config.scoring == "classic":
+            scores = fakewords.classic_scores(index, q_tf, config.df_max_ratio)
         else:
-            if config.scoring == "classic":
-                scores = fakewords.classic_scores(index, q_tf, config.df_max_ratio)
-            else:
-                scores = fakewords.dot_scores(index, q_tf, config.df_max_ratio)
-            loc_s, loc_i = jax.lax.top_k(scores, d_local)  # (B, d_local)
+            scores = fakewords.dot_scores(index, q_tf, config.df_max_ratio)
+        return jax.lax.top_k(scores, d_local)  # (B, d_local)
+
+    def merge_global(index: FakeWordsIndex, loc_s, loc_i, queries):
+        shard = flat_axis_index(axes)
+        n_local = index.tf.shape[0]
+        valid = loc_i >= 0
         if rerank:
             # Exact rerank against *local* originals: no cross-shard gather.
-            cand = index.vectors[loc_i]  # (B, d_local, dim)
+            # -1 padding slots would otherwise gather doc 0 and earn a real
+            # cosine score; mask them back to -inf.
+            cand = index.vectors[jnp.maximum(loc_i, 0)]  # (B, d_local, dim)
             loc_s = jnp.einsum("bd,bcd->bc", queries, cand)
-        glob_i = loc_i + shard * n_local
+            loc_s = jnp.where(valid, loc_s, -jnp.inf)
+        # Invalid slots keep id -1 (never ``-1 + shard * n_local``).
+        glob_i = jnp.where(valid, loc_i + shard * n_local, -1)
         # Tiny collective: d*(score,id) per shard.
         all_s = jax.lax.all_gather(loc_s, axes, axis=1, tiled=True)
         all_i = jax.lax.all_gather(glob_i, axes, axis=1, tiled=True)
@@ -235,28 +254,113 @@ def make_sharded_search(
         top_i = jnp.take_along_axis(all_i, pos, axis=-1)
         return top_s, top_i
 
-    in_specs = (
-        FakeWordsIndex(
-            tf=P(axes, None),
-            idf=P(),
-            norm=P(axes),
-            df=P(),
-            scored=P(axes, None) if config.scoring == "classic" else None,
-            vectors=P(axes, None) if keep_vectors else None,
-        ),
-        P(),  # q_tf replicated
-        P(),  # queries replicated
+    def local_search(index: FakeWordsIndex, q_tf, queries):
+        loc_s, loc_i = dense_match(index, q_tf)
+        return merge_global(index, loc_s, loc_i, queries)
+
+    def local_search_blockmax(index: FakeWordsIndex, bm, q_tf, queries):
+        n_keep = min(blockmax_keep, bm.num_blocks)
+        # Cap on gathered candidates, NOT n_local: a ragged shard whose kept
+        # blocks carry padded rows legitimately returns -1 slots when depth
+        # exceeds its valid candidate count (merge_global masks them).
+        d_local = min(depth, n_keep * bm.block_size)
+        loc_s, loc_i = bmx.pruned_topk(
+            index, bm, q_tf, n_keep, d_local, use_kernel=kernel_local)
+        return merge_global(index, loc_s, loc_i, queries)
+
+    index_spec = FakeWordsIndex(
+        tf=P(axes, None),
+        idf=P(),
+        norm=P(axes),
+        df=P(),
+        scored=P(axes, None) if config.scoring == "classic" else None,
+        vectors=P(axes, None) if keep_vectors else None,
     )
+    if blockmax_keep is not None:
+        # Prefix spec: BlockMaxIndex's one array leaf (ub) shards on the
+        # block dimension; its block_size/mode are static metadata.
+        in_specs = (index_spec, P(axes, None), P(), P())
+        body = local_search_blockmax
+    else:
+        in_specs = (index_spec, P(), P())
+        body = local_search
     # After the full all-gather + top_k the outputs are bitwise-replicated,
     # but the static VMA checker cannot prove it; disable the check.
     fn = compat.shard_map(
-        local_search,
+        body,
         mesh=mesh,
         in_specs=in_specs,
         out_specs=(P(), P()),
         check_vma=False,
     )
     return jax.jit(fn)
+
+
+def _index_pspec(index: FakeWordsIndex, axes: Sequence[str]) -> FakeWordsIndex:
+    """Doc-dimension sharding spec tree matching an index's present leaves."""
+    axes = tuple(axes)
+    return FakeWordsIndex(
+        tf=P(axes, None),
+        idf=P(),
+        norm=P(axes),
+        df=P(),
+        scored=P(axes, None) if index.scored is not None else None,
+        vectors=P(axes, None) if index.vectors is not None else None,
+    )
+
+
+def build_blockmax_sharded(
+    mesh: Mesh,
+    index: FakeWordsIndex,
+    axes: Sequence[str],
+    block_size: int = 256,
+    mode: Optional[str] = None,
+    signed_store: bool = False,
+) -> BlockMaxIndex:
+    """Per-shard block upper bounds over an already-sharded index.
+
+    Each shard blocks ITS OWN doc range (padding its last block locally), so
+    local block ids always line up with local doc rows and no global
+    ``n_local % block_size`` alignment is required — a shard whose doc count
+    is ragged against the block size simply carries out-of-range row ids in
+    its padded tail, which the pruned stage-2 masks to (-inf, -1)."""
+    from repro.core import blockmax as bmx
+
+    axes = tuple(axes)
+
+    def local_build(idx: FakeWordsIndex) -> BlockMaxIndex:
+        return bmx.build_blockmax(
+            idx, block_size, mode=mode, signed_store=signed_store
+        )
+
+    fn = compat.shard_map(
+        local_build,
+        mesh=mesh,
+        in_specs=(_index_pspec(index, axes),),
+        out_specs=P(axes, None),  # prefix: the one array leaf (ub)
+    )
+    return fn(index)
+
+
+def shard_blockmax(
+    mesh: Mesh, bm: BlockMaxIndex, axes: Sequence[str]
+) -> BlockMaxIndex:
+    """Place block upper bounds onto the mesh, block rows sharded like the
+    doc dimension.  Blocks must not straddle shards: the local doc count has
+    to be a multiple of ``block_size`` (then global block b lives exactly on
+    shard ``b // n_blocks_local`` and local block ids line up with local doc
+    rows)."""
+    axes = tuple(axes)
+    n_shards = flat_axis_size(mesh, axes)
+    assert bm.ub.shape[0] % n_shards == 0, (
+        f"{bm.ub.shape[0]} blocks not divisible by {n_shards} shards "
+        "(need n_local % block_size == 0)"
+    )
+    return BlockMaxIndex(
+        ub=jax.device_put(bm.ub, NamedSharding(mesh, P(axes, None))),
+        block_size=bm.block_size,
+        mode=bm.mode,
+    )
 
 
 def shard_index(mesh: Mesh, index: FakeWordsIndex, axes: Sequence[str]) -> FakeWordsIndex:

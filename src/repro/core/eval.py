@@ -8,12 +8,14 @@ import jax.numpy as jnp
 def recall_at(truth_ids: jax.Array, retrieved_ids: jax.Array) -> jax.Array:
     """R@(k,d): fraction of the true top-k (truth_ids: (B,k)) present among
     the retrieved top-d (retrieved_ids: (B,d)), averaged over queries.
-    Ground truth comes from exact brute force (paper §3); -1 ids are padding.
+    Ground truth comes from exact brute force (paper §3); -1 ids are padding
+    and are excluded from BOTH the hit count and the denominator (dividing
+    by the row width would understate recall on padded truth rows).
     """
-    hits = (truth_ids[:, :, None] == retrieved_ids[:, None, :]) & (
-        truth_ids[:, :, None] >= 0
-    )
-    per_query = jnp.sum(jnp.any(hits, axis=-1), axis=-1) / truth_ids.shape[1]
+    valid = truth_ids >= 0
+    hits = (truth_ids[:, :, None] == retrieved_ids[:, None, :]) & valid[:, :, None]
+    n_valid = jnp.maximum(jnp.sum(valid, axis=-1), 1)
+    per_query = jnp.sum(jnp.any(hits, axis=-1), axis=-1) / n_valid
     return jnp.mean(per_query)
 
 
@@ -23,6 +25,9 @@ def recall_curve(truth_ids: jax.Array, retrieved_ids: jax.Array, depths) -> dict
 
 
 def overlap(a_ids: jax.Array, b_ids: jax.Array) -> jax.Array:
-    """Mean fraction of shared ids between two (B,k) result sets."""
-    hits = (a_ids[:, :, None] == b_ids[:, None, :]) & (a_ids[:, :, None] >= 0)
-    return jnp.mean(jnp.sum(jnp.any(hits, axis=-1), axis=-1) / a_ids.shape[1])
+    """Mean fraction of shared ids between two (B,k) result sets; -1 padding
+    in ``a_ids`` is excluded from both numerator and denominator."""
+    valid = a_ids >= 0
+    hits = (a_ids[:, :, None] == b_ids[:, None, :]) & valid[:, :, None]
+    n_valid = jnp.maximum(jnp.sum(valid, axis=-1), 1)
+    return jnp.mean(jnp.sum(jnp.any(hits, axis=-1), axis=-1) / n_valid)

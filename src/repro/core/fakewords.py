@@ -117,6 +117,15 @@ def classic_query(
     return (q_tf * keep).astype(jnp.bfloat16)
 
 
+def signed_query(q_tf: jax.Array, dtype=jnp.int32) -> jax.Array:
+    """Signed quantized query u = q+ - q- (B, m) from the sign-split
+    (B, 2m) encoding.  This is the operand for scoring against a SIGNED
+    stored matrix, and ``[relu(u); relu(-u)]`` == the sign-split encoding
+    itself — which is why blockmax dot bounds stay one GEMM against q_tf."""
+    m = q_tf.shape[-1] // 2
+    return (q_tf[:, :m].astype(jnp.int32) - q_tf[:, m:].astype(jnp.int32)).astype(dtype)
+
+
 def dot_query(
     index: FakeWordsIndex,
     q_tf: jax.Array,
@@ -127,8 +136,7 @@ def dot_query(
     with the keep-mask folded in.  ``dtype`` is int32 for the XLA einsum,
     int8 for the MXU integer kernel path."""
     keep = df_prune_mask(index.df, index.num_docs, df_max_ratio)
-    m = index.num_terms // 2
-    u = (q_tf[:, :m] - q_tf[:, m:]).astype(jnp.int32)
+    u = signed_query(q_tf)
     return (jnp.concatenate([u, -u], axis=-1) * keep).astype(dtype)
 
 

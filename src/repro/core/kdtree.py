@@ -79,6 +79,8 @@ def build(
     keep_vectors: bool = True,
     normalized: bool = False,
 ) -> KdTreeIndex:
+    from repro.kernels.fused_topk import ops as fused
+
     v = vectors if normalized else bruteforce.l2_normalize(vectors)
     model, reduced = pca.fit_reduction(v, config.dims, config.reduction, config.ppa_remove)
     reduced = reduced.astype(jnp.float32)
@@ -92,6 +94,7 @@ def build(
         split_dim=split_dim,
         split_val=split_val,
         perm=perm,
+        lifted=fused.lift_l2(reduced),
         vectors=v if keep_vectors else None,
     )
 
@@ -207,12 +210,25 @@ def tree_search(
 # --------------------------------------------------------------------------
 
 
-@functools.partial(jax.jit, static_argnames=("k",))
+@functools.partial(jax.jit, static_argnames=("k", "use_kernel"))
 def scan_search(
-    index: KdTreeIndex, q_reduced: jax.Array, k: int
+    index: KdTreeIndex,
+    q_reduced: jax.Array,
+    k: int,
+    use_kernel: Optional[bool] = None,
 ) -> Tuple[jax.Array, jax.Array]:
     """Exact L2 NN in the reduced space as a streaming matmul:
-    ||q - d||^2 = ||q||^2 + ||d||^2 - 2 q.d  (||q||^2 is rank-constant)."""
+    ||q - d||^2 = ||q||^2 + ||d||^2 - 2 q.d  (||q||^2 is rank-constant).
+
+    ``use_kernel`` routes through the fused streaming score->top-k kernel
+    via the [2q; 1] x [d; -||d||^2] lift (docs/DESIGN.md §4): the (B, N)
+    negated-distance matrix never materializes.  Default: kernel on TPU."""
+    from repro.kernels.fused_topk import ops as fused
+
+    if fused.resolve_use_kernel(use_kernel):
+        lifted = index.lifted if index.lifted is not None else fused.lift_l2(
+            index.reduced)
+        return fused.scan_l2_topk(lifted, q_reduced, k)
     d_norm2 = jnp.sum(index.reduced**2, axis=-1)  # (N,)
     dots = q_reduced @ index.reduced.T  # (B, N)
     neg_d2 = 2.0 * dots - d_norm2[None, :]
@@ -227,12 +243,13 @@ def search(
     backend: str = "scan",
     rerank: bool = False,
     normalized: bool = False,
+    use_kernel: Optional[bool] = None,
 ) -> Tuple[jax.Array, jax.Array]:
     qr = reduce_queries(index, queries, normalized)
     if backend == "tree":
         d_s, d_i = tree_search(index, qr, depth)
     else:
-        d_s, d_i = scan_search(index, qr, depth)
+        d_s, d_i = scan_search(index, qr, depth, use_kernel=use_kernel)
     if not rerank:
         return d_s[:, :k], d_i[:, :k]
     assert index.vectors is not None

@@ -27,6 +27,7 @@ from repro.core.types import LexicalLshConfig, LshIndex
 
 _GOLDEN = np.uint32(0x9E3779B9)
 _SENTINEL = np.uint32(0xFFFFFFFF)
+SENTINEL = _SENTINEL  # public alias (blockmax bitmaps, kernels)
 
 
 def mix32(x: jax.Array) -> jax.Array:

@@ -200,6 +200,9 @@ class KdTreeIndex:
                to project queries.
     split_*:   array-encoded balanced k-d tree (backend="tree"); ``perm`` maps
                leaf slots back to original doc ids (-1 = padding).
+    lifted:    (N, dims+1) float32 ``[d; -||d||^2]`` scan operand precomputed
+               at build time so the fused-kernel scan path streams it
+               directly instead of re-materializing the lift per search.
     """
 
     reduced: jax.Array
@@ -207,6 +210,7 @@ class KdTreeIndex:
     split_dim: Optional[jax.Array] = None  # (n_internal,) int32
     split_val: Optional[jax.Array] = None  # (n_internal,) float32
     perm: Optional[jax.Array] = None  # (n_leaves, leaf_size) int32 doc ids
+    lifted: Optional[jax.Array] = None  # (N, dims+1) f32 scan-kernel operand
     vectors: Optional[jax.Array] = None
 
     @property

@@ -28,7 +28,11 @@ CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerPara
 # Default for the ``use_kernel`` routing flags on the search hot paths: the
 # fused Pallas path on real TPUs, the XLA reference path elsewhere (tests
 # opt in explicitly and run the kernels in interpret mode).
-USE_KERNEL_DEFAULT = jax.default_backend() == "tpu"
+# ``REPRO_USE_KERNEL=1`` forces the kernel path off-TPU too (paired with
+# interpret mode this lets CI exercise the Pallas kernel bodies on CPU).
+USE_KERNEL_DEFAULT = jax.default_backend() == "tpu" or bool(
+    int(os.environ.get("REPRO_USE_KERNEL", "0"))
+)
 
 # MXU/VPU-aligned default tiles.
 LANE = 128
@@ -39,6 +43,11 @@ SUBLANE_INT8 = 32
 
 def round_up(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m
+
+
+def next_pow2(x: int) -> int:
+    """Smallest power of two >= x (bitonic networks need pow2 lengths)."""
+    return 1 << max(0, (x - 1).bit_length())
 
 
 def pad_dim(x: jax.Array, axis: int, multiple: int, value=0) -> jax.Array:

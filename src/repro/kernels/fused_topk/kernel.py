@@ -14,7 +14,7 @@ Score stages (selected by ``mode`` / operand dtypes):
     the classic-similarity path (q = tf_q * keep against the precomputed
     ``scored`` matrix); int8 operands with int32 accumulate cover the dot
     path (q lifted to [u; -u], the MXU's 4x-throughput integer pipe); f32
-    covers brute-force cosine.
+    covers brute-force cosine and the kd-tree reduced-space L2 lift.
   * lsh   — scores = MinHash collision counts (equality + popcount-style
     reduce on the VPU; sentinel-aware like ``lsh_match``).
 
@@ -22,11 +22,24 @@ Grid = (query tiles, doc tiles, reduce tiles); the reduce (K) axis is the
 innermost "arbitrary" axis so the (bq, bn) accumulator carries across K
 steps, and the doc axis is also "arbitrary" so the running top-``depth``
 scratch carries across doc tiles.  After the last K step of each doc tile the
-tile's scores are merged into the running best by iterative max-extraction
-(exact, with ``jax.lax.top_k``'s lowest-index tie-break); a whole tile is
-skipped when its best score cannot beat any query's current depth-th best —
-the dense-GEMM analogue of WAND block skipping.  Padded / ragged N is masked
-to -inf inside the kernel, so callers can stream any corpus size.
+tile's scores are merged into the running best — a whole tile is skipped when
+its best score cannot beat any query's current depth-th best (the dense-GEMM
+analogue of WAND block skipping).  Two merge strategies (``merge``):
+
+  * "bitonic" (default) — bitonic per-tile pre-reduction: a vectorized
+    bitonic sort network (reshape-paired compare-exchanges, no gathers)
+    sorts the tile by (score desc, id asc), the top ``depth`` columns are
+    kept, and one bitonic merge stage folds them into the (sorted) running
+    best.  O(log^2 bn + log depth) vectorized steps per tile instead of
+    ``depth`` sequential max-extractions.
+  * "extract" — the original exact iterative max-extraction (kept for A/B
+    profiling; identical results).
+
+Both strategies order ties by the minimum id, which equals ``jax.lax.top_k``'s
+lowest-index tie-break because candidate ids are globally unique and id-sorted
+in the dense variant; the gathered variant merges on GLOBAL doc ids so its tie
+behavior matches the dense reference paths exactly.  Padded / ragged N is
+masked to -inf inside the kernel, so callers can stream any corpus size.
 """
 from __future__ import annotations
 
@@ -46,14 +59,102 @@ LSH_SENTINEL = np.uint32(0xFFFFFFFF)
 _INT_DTYPES = (jnp.int8, jnp.int32, jnp.uint32)
 
 
-def _merge_topk(rs_ref, ri_ref, tile_s, tile_i, depth: int) -> None:
+# --------------------------------------------------------------------------
+# Bitonic sorting network (vectorized, gather-free)
+# --------------------------------------------------------------------------
+
+
+def _cmp_exchange(s, i, j: int, k: int):
+    """One compare-exchange stage at stride ``j`` over lane axis 1.
+
+    Partner pairing is done by reshape (elements ``x`` and ``x + j`` pair up),
+    never by gather — TPU-friendly.  Direction follows the standard bitonic
+    network: descending where ``(index & k) == 0`` (``k == 0`` means a merge
+    stage: descending everywhere).  The comparator is the total order
+    (score desc, id asc), so equal scores order by minimum id.
+    """
+    bq, n = s.shape
+    s4 = s.reshape(bq, n // (2 * j), 2, j)
+    i4 = i.reshape(bq, n // (2 * j), 2, j)
+    sa, sb = s4[:, :, 0], s4[:, :, 1]
+    ia, ib = i4[:, :, 0], i4[:, :, 1]
+    a_first = (sa > sb) | ((sa == sb) & (ia < ib))  # a precedes b in DESC
+    if k:
+        idx = jax.lax.broadcasted_iota(jnp.int32, (1, n), 1)
+        desc = ((idx & k) == 0).reshape(1, n // (2 * j), 2, j)[:, :, 0]
+        keep = jnp.where(desc, a_first, ~a_first)
+    else:
+        keep = a_first
+    new_sa = jnp.where(keep, sa, sb)
+    new_sb = jnp.where(keep, sb, sa)
+    new_ia = jnp.where(keep, ia, ib)
+    new_ib = jnp.where(keep, ib, ia)
+    s = jnp.stack([new_sa, new_sb], axis=2).reshape(bq, n)
+    i = jnp.stack([new_ia, new_ib], axis=2).reshape(bq, n)
+    return s, i
+
+
+def _bitonic_sort_desc(s, i):
+    """Full bitonic sort of (bq, L) pairs by (score desc, id asc); L pow2."""
+    n = s.shape[1]
+    k = 2
+    while k <= n:
+        j = k // 2
+        while j >= 1:
+            s, i = _cmp_exchange(s, i, j, k if k < n else 0)
+            j //= 2
+        k *= 2
+    return s, i
+
+
+def _bitonic_merge_desc(s, i):
+    """Merge a (bq, L) bitonic sequence (desc run ++ asc tail) to sorted
+    descending; L pow2."""
+    j = s.shape[1] // 2
+    while j >= 1:
+        s, i = _cmp_exchange(s, i, j, 0)
+        j //= 2
+    return s, i
+
+
+def _merge_topk_bitonic(rs_ref, ri_ref, tile_s, tile_i) -> None:
+    """Bitonic per-tile pre-reduction merge.
+
+    Sort the candidate tile, keep its top ``dpad`` columns, then bitonic-merge
+    against the running best (kept sorted descending as an invariant — both
+    the init fill and this merge preserve it).  ``dpad`` (the running width)
+    is a power of two on this path.
+    """
+    bq, dpad = rs_ref.shape
+    pad_to = max(common.next_pow2(tile_s.shape[1]), dpad)
+    pad = pad_to - tile_s.shape[1]
+    if pad:
+        tile_s = jnp.concatenate(
+            [tile_s, jnp.full((bq, pad), -jnp.inf, tile_s.dtype)], axis=1
+        )
+        tile_i = jnp.concatenate(
+            [tile_i, jnp.full((bq, pad), BIG_ID, tile_i.dtype)], axis=1
+        )
+    tile_s, tile_i = _bitonic_sort_desc(tile_s, tile_i)
+    comb_s = jnp.concatenate([rs_ref[...], tile_s[:, dpad - 1 :: -1]], axis=1)
+    comb_i = jnp.concatenate([ri_ref[...], tile_i[:, dpad - 1 :: -1]], axis=1)
+    comb_s, comb_i = _bitonic_merge_desc(comb_s, comb_i)
+    rs_ref[...] = comb_s[:, :dpad]
+    ri_ref[...] = comb_i[:, :dpad]
+
+
+# --------------------------------------------------------------------------
+# Iterative max-extraction merge (legacy strategy, kept for A/B profiling)
+# --------------------------------------------------------------------------
+
+
+def _merge_topk_extract(rs_ref, ri_ref, tile_s, tile_i, depth: int) -> None:
     """Merge a (bq, bn) candidate tile into the running (bq, depth) best.
 
     Exact iterative max-extraction over the concatenated candidates.  Ties
     select the minimum id, which equals ``jax.lax.top_k``'s lowest-index
-    tie-break because running ids always come from earlier (smaller-id) doc
-    tiles.  Extracted entries are retired to (-inf, BIG_ID) so -inf padding
-    can never resurrect a stale id.
+    tie-break over id-ordered candidates.  Extracted entries are retired to
+    (-inf, BIG_ID) so -inf padding can never resurrect a stale id.
     """
     run_s = rs_ref[:, :depth]
     run_i = ri_ref[:, :depth]
@@ -85,17 +186,25 @@ def _merge_topk(rs_ref, ri_ref, tile_s, tile_i, depth: int) -> None:
     ri_ref[:, :depth] = new_i
 
 
-def _merge_if_improves(rs_ref, ri_ref, tile_s, tile_i, depth: int) -> None:
+def _merge_if_improves(
+    rs_ref, ri_ref, tile_s, tile_i, depth: int, merge: str, strict: bool
+) -> None:
     """WAND-style tile skip: merging is wasted work unless some query's tile
-    best strictly beats its current depth-th best (ties lose to the running
-    set's smaller ids, so ``>`` is exact)."""
-    improves = jnp.any(
-        jnp.max(tile_s, axis=1) > jnp.min(rs_ref[:, :depth], axis=1)
-    )
+    best can beat its current depth-th best.  ``strict`` (dense variant) is
+    exact because ids ascend across doc tiles, so ties lose to the running
+    set's smaller ids; the gathered variant merges on UNORDERED global doc
+    ids (blocks arrive in stage-1 bound order), where a tying tile may hold
+    the smaller — winning — id, so it must compare with ``>=``."""
+    thresh = jnp.min(rs_ref[:, :depth], axis=1)
+    best = jnp.max(tile_s, axis=1)
+    improves = jnp.any(best > thresh if strict else best >= thresh)
 
     @pl.when(improves)
     def _():
-        _merge_topk(rs_ref, ri_ref, tile_s, tile_i, depth)
+        if merge == "bitonic":
+            _merge_topk_bitonic(rs_ref, ri_ref, tile_s, tile_i)
+        else:
+            _merge_topk_extract(rs_ref, ri_ref, tile_s, tile_i, depth)
 
 
 def _score_tile(q, d, mode: str, acc_dtype):
@@ -108,7 +217,7 @@ def _score_tile(q, d, mode: str, acc_dtype):
 def _fused_topk_kernel(
     q_ref, d_ref, s_ref, i_ref, acc_ref, rs_ref, ri_ref,
     *, n_j: int, n_k: int, n_docs: int, bn: int, depth: int, mode: str,
-    acc_dtype,
+    merge: str, acc_dtype,
 ):
     j = pl.program_id(1)
     k = pl.program_id(2)
@@ -131,7 +240,8 @@ def _fused_topk_kernel(
         valid = ids < n_docs  # ragged N: padded docs can never rank
         tile_s = jnp.where(valid, tile_s, -jnp.inf)
         ids = jnp.where(valid, ids, BIG_ID)
-        _merge_if_improves(rs_ref, ri_ref, tile_s, ids, depth)
+        _merge_if_improves(rs_ref, ri_ref, tile_s, ids, depth, merge,
+                           strict=True)
 
     @pl.when(jnp.logical_and(j == n_j - 1, k == n_k - 1))
     def _flush():
@@ -139,15 +249,23 @@ def _fused_topk_kernel(
         i_ref[...] = ri_ref[...]
 
 
+def _depth_pad(depth: int, merge: str) -> int:
+    """Running-best lane width: LANE-aligned, and a power of two on the
+    bitonic path (the merge network needs pow2 sequence lengths)."""
+    dpad = common.round_up(depth, common.LANE)
+    return common.next_pow2(dpad) if merge == "bitonic" else dpad
+
+
 @functools.partial(
     jax.jit,
-    static_argnames=("depth", "mode", "bq", "bn", "bk", "interpret"),
+    static_argnames=("depth", "mode", "merge", "bq", "bn", "bk", "interpret"),
 )
 def fused_topk(
     q: jax.Array,  # (B, T)  bf16 / f32 (gemm), int8 (dot), uint32 (lsh)
     docs: jax.Array,  # (N, T) same reduce-axis dtype family as q
     depth: int,
     mode: str = "gemm",
+    merge: str = "bitonic",
     bq: int | None = None,
     bn: int | None = None,
     bk: int | None = None,
@@ -184,14 +302,14 @@ def fused_topk(
         qp = common.pad_dim(common.pad_dim(q, 0, bq), 1, bk)
         dp = common.pad_dim(common.pad_dim(docs, 0, bn), 1, bk)
         acc_dtype = jnp.int32 if q.dtype in _INT_DTYPES else jnp.float32
-    dpad = common.round_up(depth, common.LANE)
+    dpad = _depth_pad(depth, merge)
     grid = (qp.shape[0] // bq, dp.shape[0] // bn, qp.shape[1] // bk)
 
     scores, ids = pl.pallas_call(
         functools.partial(
             _fused_topk_kernel,
             n_j=grid[1], n_k=grid[2], n_docs=n, bn=bn, depth=depth,
-            mode=mode, acc_dtype=acc_dtype,
+            mode=mode, merge=merge, acc_dtype=acc_dtype,
         ),
         grid=grid,
         in_specs=[
@@ -222,8 +340,9 @@ def fused_topk(
 
 
 def _fused_gathered_kernel(
-    q_ref, d_ref, rid_ref, s_ref, p_ref, acc_ref, rs_ref, ri_ref,
-    *, n_j: int, n_k: int, n_docs: int, bn: int, depth: int, acc_dtype,
+    q_ref, d_ref, rid_ref, s_ref, i_ref, acc_ref, rs_ref, ri_ref,
+    *, n_j: int, n_k: int, n_docs: int, depth: int, mode: str, merge: str,
+    acc_dtype,
 ):
     j = pl.program_id(1)
     k = pl.program_id(2)
@@ -237,29 +356,30 @@ def _fused_gathered_kernel(
     def _init_acc():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    acc_ref[...] += jnp.dot(
-        q_ref[...], d_ref[0].T, preferred_element_type=acc_dtype
-    )
+    acc_ref[...] += _score_tile(q_ref[...], d_ref[0], mode, acc_dtype)
 
     @pl.when(k == n_k - 1)
     def _merge():
         tile_s = acc_ref[...].astype(jnp.float32)  # (1, bn)
-        # Merge key = candidate POSITION (top_k tie semantics over the
-        # gathered order); the caller maps positions back to doc ids.
-        pos = j * bn + jax.lax.broadcasted_iota(jnp.int32, tile_s.shape, 1)
-        valid = rid_ref[...] < n_docs  # folds the blockmax padding mask
+        # Merge key = GLOBAL doc id: ties then resolve exactly like the dense
+        # reference paths (lowest doc id), independent of the block-gather
+        # order blockmax stage 1 produced.
+        ids = rid_ref[...]
+        valid = ids < n_docs  # folds the blockmax padding mask
         tile_s = jnp.where(valid, tile_s, -jnp.inf)
-        pos = jnp.where(valid, pos, BIG_ID)
-        _merge_if_improves(rs_ref, ri_ref, tile_s, pos, depth)
+        ids = jnp.where(valid, ids, BIG_ID)
+        _merge_if_improves(rs_ref, ri_ref, tile_s, ids, depth, merge,
+                           strict=False)
 
     @pl.when(jnp.logical_and(j == n_j - 1, k == n_k - 1))
     def _flush():
         s_ref[...] = rs_ref[...]
-        p_ref[...] = ri_ref[...]
+        i_ref[...] = ri_ref[...]
 
 
 @functools.partial(
-    jax.jit, static_argnames=("depth", "n_docs", "bn", "bk", "interpret")
+    jax.jit,
+    static_argnames=("depth", "n_docs", "mode", "merge", "bn", "bk", "interpret"),
 )
 def fused_topk_gathered(
     q: jax.Array,  # (B, T)
@@ -267,6 +387,8 @@ def fused_topk_gathered(
     row_ids: jax.Array,  # (B, R) int32 global doc ids; >= n_docs = padding
     depth: int,
     n_docs: int,
+    mode: str = "gemm",
+    merge: str = "bitonic",
     bn: int = 512,
     bk: int = 512,
     interpret: bool | None = None,
@@ -274,9 +396,12 @@ def fused_topk_gathered(
     """Per-query streaming top-``depth`` over gathered candidate matrices
     (blockmax stage 2: each query scores only its own kept blocks' rows).
 
+    ``mode`` selects the score stage exactly like :func:`fused_topk`: "gemm"
+    (bf16/f32/int8 operands) or "lsh" (uint32 signature collision counts).
     Returns (scores f32 (B, depth), ids int32 (B, depth)); id -1 marks
-    padded / -inf slots.  The (B, R) stage-2 score matrix never exists in
-    HBM.
+    padded / -inf slots.  Ties break on the lowest GLOBAL doc id, matching
+    the dense reference paths.  The (B, R) stage-2 score matrix never exists
+    in HBM.
     """
     if interpret is None:
         interpret = common.INTERPRET
@@ -284,19 +409,26 @@ def fused_topk_gathered(
     assert depth <= r, f"depth {depth} > candidate count {r}"
     bn = min(bn, common.round_up(r, common.LANE))
     bk = min(bk, common.round_up(t, common.LANE))
-    qp = common.pad_dim(q, 1, bk)
-    dp = common.pad_dim(common.pad_dim(docs, 1, bn), 2, bk)
+    if mode == "lsh":
+        qp = common.pad_dim(q, 1, bk, value=LSH_SENTINEL)
+        dp = common.pad_dim(
+            common.pad_dim(docs, 1, bn), 2, bk, value=np.uint32(LSH_SENTINEL - 1)
+        )
+        acc_dtype = jnp.int32
+    else:
+        qp = common.pad_dim(q, 1, bk)
+        dp = common.pad_dim(common.pad_dim(docs, 1, bn), 2, bk)
+        acc_dtype = jnp.int32 if q.dtype in _INT_DTYPES else jnp.float32
     # Padding rows get an out-of-range id so the in-kernel mask drops them.
     rp = common.pad_dim(row_ids.astype(jnp.int32), 1, bn, value=BIG_ID)
-    dpad = common.round_up(depth, common.LANE)
-    acc_dtype = jnp.int32 if q.dtype in _INT_DTYPES else jnp.float32
+    dpad = _depth_pad(depth, merge)
     grid = (b, dp.shape[1] // bn, qp.shape[1] // bk)
 
-    scores, pos = pl.pallas_call(
+    scores, ids = pl.pallas_call(
         functools.partial(
             _fused_gathered_kernel,
-            n_j=grid[1], n_k=grid[2], n_docs=n_docs, bn=bn, depth=depth,
-            acc_dtype=acc_dtype,
+            n_j=grid[1], n_k=grid[2], n_docs=n_docs, depth=depth,
+            mode=mode, merge=merge, acc_dtype=acc_dtype,
         ),
         grid=grid,
         in_specs=[
@@ -323,6 +455,5 @@ def fused_topk_gathered(
         interpret=interpret,
     )(qp, dp, rp)
     scores = scores[:, :depth]
-    pos = pos[:, :depth]
-    ids = jnp.take_along_axis(row_ids, jnp.minimum(pos, r - 1), axis=-1)
+    ids = ids[:, :depth]
     return scores, jnp.where(scores == -jnp.inf, -1, ids)

@@ -23,6 +23,7 @@ __all__ = [
     "dot_topk",
     "cosine_topk",
     "lsh_topk",
+    "scan_l2_topk",
     "fused_topk",
     "fused_topk_gathered",
 ]
@@ -70,3 +71,28 @@ def lsh_topk(
 ) -> Tuple[jax.Array, jax.Array]:
     """Fused MinHash collision-count top-depth (VPU compare+reduce stage)."""
     return fused_topk(sig_q, sig_d, depth, mode="lsh", interpret=interpret)
+
+
+def lift_l2(points: jax.Array) -> jax.Array:
+    """``[d; -||d||^2]`` doc-side lift for :func:`scan_l2_topk`.  Precompute
+    at index build time — lifting per search would re-materialize a full
+    index copy on a path whose point is cutting HBM traffic."""
+    d2 = jnp.sum(points * points, axis=-1)  # (N,)
+    return jnp.concatenate([points, -d2[:, None]], axis=-1)
+
+
+def scan_l2_topk(
+    lifted: jax.Array, q_reduced: jax.Array, depth: int,
+    interpret: bool | None = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Fused exact reduced-space L2 top-depth (kd-tree scan backend).
+
+    -||q - d||^2 + ||q||^2 = 2 q.d - ||d||^2 is a plain GEMM after the lift
+    q' = [2q; 1], d' = [d; -||d||^2] (``lifted``, from :func:`lift_l2`), so
+    the negated-squared-distance scores stream through the fused kernel and
+    the (B, N) matrix never hits HBM."""
+    qa = jnp.concatenate(
+        [2.0 * q_reduced, jnp.ones((q_reduced.shape[0], 1), q_reduced.dtype)],
+        axis=-1,
+    )
+    return fused_topk(qa, lifted, depth, interpret=interpret)

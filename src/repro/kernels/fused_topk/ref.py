@@ -35,21 +35,45 @@ def fused_topk_ref(
     return jax.lax.top_k(scores_ref(q, docs, mode), depth)
 
 
+def gathered_scores_ref(
+    q: jax.Array, docs: jax.Array, mode: str = "gemm"
+) -> jax.Array:
+    """Dense (B, R) scores over per-query gathered candidate rows."""
+    if mode == "lsh":
+        eq = (q[:, None, :] == docs) & (q[:, None, :] != LSH_SENTINEL)
+        return jnp.sum(eq, axis=-1, dtype=jnp.int32).astype(jnp.float32)
+    acc = jnp.int32 if q.dtype in (jnp.int8, jnp.int32) else jnp.float32
+    out = jnp.einsum("bt,brt->br", q, docs, preferred_element_type=acc)
+    return out.astype(jnp.float32)
+
+
+def topk_by_id_ref(
+    scores: jax.Array, ids: jax.Array, depth: int
+) -> Tuple[jax.Array, jax.Array]:
+    """Top-``depth`` by (score desc, id asc) — the gathered kernel's tie
+    order, equal to ``lax.top_k`` over id-ordered dense candidates."""
+    _, d_i, d_s = jax.lax.sort(
+        (-scores, ids.astype(jnp.int32), scores), dimension=-1, num_keys=2
+    )
+    d_s, d_i = d_s[:, :depth], d_i[:, :depth]
+    return d_s, jnp.where(d_s > -jnp.inf, d_i, -1)
+
+
 def gathered_topk_ref(
     q: jax.Array,
     docs: jax.Array,
     row_ids: jax.Array,
     depth: int,
     n_docs: int,
+    mode: str = "gemm",
 ) -> Tuple[jax.Array, jax.Array]:
-    """Unfused blockmax stage-2 reference (mirrors core.blockmax)."""
-    scores = jnp.einsum(
-        "bt,brt->br", q, docs, preferred_element_type=jnp.float32
-    ).astype(jnp.float32)
-    scores = jnp.where(row_ids < n_docs, scores, -jnp.inf)
-    d_s, pos = jax.lax.top_k(scores, depth)
-    d_i = jnp.take_along_axis(row_ids, pos, axis=-1)
-    return d_s, jnp.where(d_s > -jnp.inf, d_i, -1)
+    """Unfused blockmax stage-2 reference (mirrors core.blockmax).  Ties
+    break on the lowest GLOBAL doc id (not gathered position), matching the
+    dense reference paths."""
+    valid = row_ids < n_docs
+    scores = jnp.where(valid, gathered_scores_ref(q, docs, mode), -jnp.inf)
+    ids = jnp.where(valid, row_ids, np.int32(2**30))
+    return topk_by_id_ref(scores, ids, depth)
 
 
 @functools.partial(jax.jit, static_argnames=("depth", "tile", "mode"))

@@ -19,7 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh
 
-from repro.core import bruteforce, distributed, fakewords
+from repro.core import blockmax, bruteforce, distributed, fakewords
 from repro.core.types import FakeWordsConfig, FakeWordsIndex
 
 
@@ -33,6 +33,11 @@ class AnnServiceConfig:
     # Route the match phase through the fused streaming score->top-k Pallas
     # kernel (docs/DESIGN.md §4).  None = kernel on TPU, XLA elsewhere.
     use_kernel: Optional[bool] = None
+    # Two-stage blockmax pruning (docs/DESIGN.md §6): keep this many blocks
+    # per query (per shard when sharded) in the match phase.  None disables.
+    # Cuts streamed index bytes ~(1 - kept/total) at a small recall cost.
+    blockmax_keep: Optional[int] = None
+    blockmax_block_size: int = 256
 
 
 class AnnService:
@@ -50,11 +55,24 @@ class AnnService:
         self.config = config
         self.scfg = service
         self.mesh = mesh
+        self._bm = None
+        if service.blockmax_keep is not None:
+            if mesh is not None:
+                self._bm = distributed.build_blockmax_sharded(
+                    mesh, index, shard_axes, service.blockmax_block_size,
+                    signed_store=config.signed_store,
+                )
+            else:
+                self._bm = blockmax.build_blockmax(
+                    index, service.blockmax_block_size,
+                    signed_store=config.signed_store,
+                )
         if mesh is not None:
             self._search = distributed.make_sharded_search(
                 mesh, config, shard_axes,
                 k=service.k, depth=service.depth, rerank=service.rerank,
                 use_kernel=service.use_kernel,
+                blockmax_keep=service.blockmax_keep,
             )
         else:
             self._search = None
@@ -80,7 +98,23 @@ class AnnService:
             chunk = jnp.asarray(queries[i : i + mb])
             q_tf, q = self._encode(chunk)
             if self._search is not None:
-                s, ids = self._search(self.index, q_tf, q)
+                if self._bm is not None:
+                    s, ids = self._search(self.index, self._bm, q_tf, q)
+                else:
+                    s, ids = self._search(self.index, q_tf, q)
+            elif self._bm is not None:
+                d_s, d_i = blockmax.pruned_search(
+                    self.index, self._bm, q_tf,
+                    n_keep=self.scfg.blockmax_keep, depth=self.scfg.depth,
+                    use_kernel=self.scfg.use_kernel,
+                )
+                if self.scfg.rerank:
+                    s, ids = bruteforce.rerank_exact(
+                        self.index.vectors, q, d_i, self.scfg.k,
+                        normalized=True,
+                    )
+                else:
+                    s, ids = d_s[:, : self.scfg.k], d_i[:, : self.scfg.k]
             else:
                 s, ids = fakewords.search(
                     self.index, q_tf, q,

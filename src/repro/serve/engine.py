@@ -224,11 +224,18 @@ class DecodeEngine:
         return int(active_mask.sum())
 
     def run(self, max_steps: int = 10_000) -> List[Request]:
-        """Drive the engine until the queue and slots drain (or max_steps);
-        returns the requests retired during this call."""
-        done: List[Request] = []
-        while (self.queue or any(self.slot_req)) and self.steps < max_steps:
+        """Drive the engine until the queue and slots drain (or max_steps
+        ticks taken WITHIN this call — ``self.steps`` is cumulative across
+        calls, so bounding on it made a second run() return immediately);
+        returns the requests retired since the last run(), including any
+        retired by direct step() calls in between (drained here so they are
+        neither leaked nor double-returned)."""
+        done: List[Request] = list(self._retired)
+        self._retired.clear()
+        taken = 0
+        while (self.queue or any(self.slot_req)) and taken < max_steps:
             self.step()
+            taken += 1
             done.extend(self._retired)
             self._retired.clear()
         return done

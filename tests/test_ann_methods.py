@@ -55,6 +55,27 @@ def test_lsh_recall_between_kdtree_and_fakewords(small_corpus):
     assert r["kd"] < 0.5  # recall collapse (paper: <= 0.03 at 300d->8d)
 
 
+# -- eval metrics ------------------------------------------------------------
+
+
+def test_recall_at_ignores_truth_padding():
+    """Regression: -1 padding in truth rows must shrink the denominator,
+    not count as misses (it understated recall before)."""
+    truth = jnp.asarray([[0, 1, -1, -1], [2, 3, 4, 5]])
+    retrieved = jnp.asarray([[0, 1, 7, 9], [2, 3, 4, 5]])
+    # query 0: both valid truths retrieved -> 1.0 (was 0.5); query 1: 1.0
+    assert float(ev.recall_at(truth, retrieved)) == 1.0
+    partial = jnp.asarray([[0, 8, -1, -1], [2, 3, 9, 9]])
+    got = float(ev.recall_at(truth, partial))
+    np.testing.assert_allclose(got, (0.5 + 0.5) / 2)
+
+
+def test_overlap_ignores_padding():
+    a = jnp.asarray([[0, 1, -1, -1]])
+    b = jnp.asarray([[1, 0, 5, 6]])
+    assert float(ev.overlap(a, b)) == 1.0  # both valid ids shared
+
+
 # -- PCA / PPA ---------------------------------------------------------------
 
 
@@ -142,3 +163,90 @@ def test_blockmax_pruned_keeps_recall(small_corpus):
     # graceful monotone degradation; half the blocks keep most recall
     assert recalls[0] >= recalls[1] - 0.02 >= recalls[2] - 0.04
     assert recalls[2] > 0.3
+
+
+def test_blockmax_dot_bound_admissible(small_corpus):
+    """The [max(s); max(-s)] dot bound must dominate every in-block score
+    (signed per-term values make a single max inadmissible; the sign-split
+    query lift restores a one-GEMM bound)."""
+    v = jnp.asarray(small_corpus[:512])
+    cfg = FakeWordsConfig(quantization=40, scoring="dot")
+    idx = fakewords.build(v, cfg)
+    bm = blockmax.build_blockmax(idx, block_size=64)
+    q_tf = fakewords.encode_queries(v[:8], cfg)
+    exact = np.asarray(fakewords.dot_scores(idx, q_tf))  # (B, N)
+    bounds = np.asarray(blockmax.block_bounds(bm, q_tf))  # (B, n_blocks)
+    for b in range(bounds.shape[1]):
+        blk = exact[:, b * 64 : (b + 1) * 64]
+        assert (bounds[:, b] >= blk.max(-1)).all()
+
+
+def test_blockmax_lsh_bound_admissible(small_corpus):
+    """Presence-bitmap bounds must dominate in-block collision counts
+    (membership is a superset test: hash collisions only loosen it)."""
+    v = jnp.asarray(small_corpus[:512])
+    cfg = LexicalLshConfig(buckets=64, hashes=2)
+    idx = lexical_lsh.build(v, cfg)
+    bm = blockmax.build_blockmax(idx, block_size=64)
+    sig_q = lexical_lsh.encode(bruteforce.l2_normalize(v[:8]), cfg)
+    exact = np.asarray(lexical_lsh.match_scores(sig_q, idx.sig))
+    bounds = np.asarray(blockmax.block_bounds(bm, sig_q))
+    for b in range(bounds.shape[1]):
+        blk = exact[:, b * 64 : (b + 1) * 64]
+        assert (bounds[:, b] >= blk.max(-1)).all()
+
+
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_blockmax_dot_beta1_exact_id_parity(small_corpus, use_kernel):
+    """At beta=1.0 (all blocks kept) the pruned dot/int8 path must return
+    IDENTICAL ids and scores to the dense reference path — integer scores,
+    lowest-doc-id tie-break on both sides."""
+    v = jnp.asarray(small_corpus[:512])
+    cfg = FakeWordsConfig(quantization=50, scoring="dot")
+    idx = fakewords.build(v, cfg)
+    bm = blockmax.build_blockmax(idx, block_size=64)
+    q_tf = fakewords.encode_queries(v[:8], cfg)
+    s_ref, i_ref = fakewords.search(
+        idx, q_tf, None, k=50, depth=50, scoring="dot", use_kernel=False)
+    s_p, i_p = blockmax.pruned_search(
+        idx, bm, q_tf, n_keep=bm.num_blocks, depth=50, use_kernel=use_kernel)
+    np.testing.assert_array_equal(np.asarray(i_p), np.asarray(i_ref))
+    np.testing.assert_array_equal(np.asarray(s_p), np.asarray(s_ref))
+
+
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_blockmax_lsh_beta1_exact_id_parity(small_corpus, use_kernel):
+    """At beta=1.0 the pruned LSH path must return IDENTICAL ids to the
+    dense collision-count reference (constant integer ties make this the
+    strictest tie-order check)."""
+    v = jnp.asarray(small_corpus[:512])
+    cfg = LexicalLshConfig(buckets=64, hashes=2)
+    idx = lexical_lsh.build(v, cfg)
+    bm = blockmax.build_blockmax(idx, block_size=64)
+    sig_q = lexical_lsh.encode(bruteforce.l2_normalize(v[:8]), cfg)
+    s_ref, i_ref = lexical_lsh.search(
+        idx, sig_q, None, k=40, depth=40, use_kernel=False)
+    s_p, i_p = blockmax.pruned_search(
+        idx, bm, sig_q, n_keep=bm.num_blocks, depth=40, use_kernel=use_kernel)
+    np.testing.assert_array_equal(np.asarray(i_p[:, :40]), np.asarray(i_ref))
+    np.testing.assert_array_equal(np.asarray(s_p[:, :40]), np.asarray(s_ref))
+
+
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_blockmax_clamps_n_keep_and_depth(small_corpus, use_kernel):
+    """Regression: n_keep > n_blocks crashed lax.top_k and
+    depth > n_keep*block_size crashed the gathered top-k; both now clamp,
+    padding the output back to the requested depth with (-inf, -1)."""
+    v = jnp.asarray(small_corpus[:70])  # 2 blocks of 64, second one ragged
+    cfg = FakeWordsConfig(quantization=40)
+    idx = fakewords.build(v, cfg)
+    bm = blockmax.build_blockmax(idx, block_size=64)
+    assert bm.num_blocks == 2
+    q_tf = fakewords.encode_queries(v[:3], cfg)
+    s, i = blockmax.pruned_search(
+        idx, bm, q_tf, n_keep=10, depth=200, use_kernel=use_kernel)
+    assert s.shape == (3, 200) and i.shape == (3, 200)
+    ii, ss = np.asarray(i), np.asarray(s)
+    assert ((ii >= -1) & (ii < 70)).all()  # no padded/fake doc ids
+    assert (ii[:, :70] >= 0).all()         # every real doc is returned
+    assert (ii[:, 70:] == -1).all() and (ss[:, 70:] == -np.inf).all()

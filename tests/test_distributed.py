@@ -59,6 +59,52 @@ def test_sharded_fakewords_search_equals_single_device():
     """)
 
 
+def test_sharded_blockmax_search_and_rerank_padding_mask():
+    run_subprocess("""
+    from repro.core import blockmax, bruteforce, distributed, fakewords
+    from repro.core import eval as ev
+    from repro.core.types import FakeWordsConfig
+    rng = np.random.default_rng(0)
+    vecs = rng.normal(size=(1024, 32)).astype(np.float32)
+    q = rng.normal(size=(1, 32)).astype(np.float32)
+    # plant shard-local doc 0 == the query on EVERY shard: with the old
+    # unmasked rerank, -1 padding slots gathered local doc 0 and returned
+    # perfect cosine scores under fake ids (-1 + shard * n_local)
+    for sh in range(8):
+        vecs[sh * 128] = q[0]
+    vecs = jnp.asarray(vecs)
+    cfg = FakeWordsConfig(quantization=50)
+    mesh = jax.make_mesh((8,), ("data",))
+    idx_sh = distributed.build_fakewords_sharded(mesh, vecs, cfg, ("data",))
+    # ragged per-shard blocks: 128 docs/shard, block 48 -> 3 blocks, 16 pad
+    bm_sh = distributed.build_blockmax_sharded(mesh, idx_sh, ("data",), block_size=48)
+    assert bm_sh.ub.shape[0] == 24 and bm_sh.mode == "classic"
+    qn = bruteforce.l2_normalize(jnp.asarray(q))
+    q_tf = fakewords.encode_queries(qn, cfg)
+    # depth > n_local AND all blocks kept: every shard deterministically
+    # returns 16 padded (-1) slots into the rerank + merge
+    search = distributed.make_sharded_search(
+        mesh, cfg, ("data",), k=20, depth=200, rerank=True, blockmax_keep=3)
+    s, i = search(idx_sh, bm_sh, q_tf, qn)
+    ii, ss = np.asarray(i)[0], np.asarray(s)[0]
+    assert ((ii >= -1) & (ii < 1024)).all()
+    # exactly the 8 planted docs earn ~1.0; fake ids 127, 255, ... must not
+    planted = set(range(0, 1024, 128))
+    assert set(ii[ss > 0.999].tolist()) == planted, ii[ss > 0.999]
+    # every returned score must be the true cosine of its claimed doc id
+    vn = np.asarray(bruteforce.l2_normalize(vecs)); qv = np.asarray(qn)[0]
+    for idd, sc in zip(ii, ss):
+        if idd >= 0:
+            np.testing.assert_allclose(sc, qv @ vn[idd], rtol=1e-4, atol=1e-5)
+    # keep-all blockmax matches the dense sharded search results
+    idx = fakewords.build(vecs, cfg)
+    s1, i1 = fakewords.search(idx, q_tf, qn, k=20, depth=200, rerank=True)
+    ov = float(ev.overlap(i1, jnp.asarray(ii[None, :])))
+    assert ov > 0.9, ov
+    print("sharded blockmax ok", ov)
+    """)
+
+
 def test_sharded_gnn_full_graph_equals_single_device():
     run_subprocess("""
     from repro.models import gnn

@@ -10,8 +10,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import blockmax, bruteforce, fakewords, lexical_lsh
-from repro.core.types import FakeWordsConfig, LexicalLshConfig
+from repro.core import blockmax, bruteforce, fakewords, kdtree, lexical_lsh
+from repro.core.types import FakeWordsConfig, KdTreeConfig, LexicalLshConfig
 from repro.kernels.fused_topk import ops as fused
 from repro.kernels.fused_topk import ref as fused_ref
 from repro.kernels.fused_topk.kernel import fused_topk, fused_topk_gathered
@@ -31,7 +31,8 @@ RNG = np.random.default_rng(13)
     ],
 )
 @pytest.mark.parametrize("dtype", ["bf16", "int8", "f32"])
-def test_fused_topk_parity_modes_and_shapes(b, n, t, depth, dtype):
+@pytest.mark.parametrize("merge", ["bitonic", "extract"])
+def test_fused_topk_parity_modes_and_shapes(b, n, t, depth, dtype, merge):
     if dtype == "int8":
         q = jnp.asarray(RNG.integers(-50, 50, (b, t)), jnp.int8)
         d = jnp.asarray(RNG.integers(-50, 50, (n, t)), jnp.int8)
@@ -42,7 +43,7 @@ def test_fused_topk_parity_modes_and_shapes(b, n, t, depth, dtype):
         q = jnp.asarray(RNG.normal(size=(b, t)), jnp.float32)
         d = jnp.asarray(RNG.normal(size=(n, t)), jnp.float32)
     # small tiles => several doc tiles and reduce tiles stream through VMEM
-    s, i = fused_topk(q, d, depth, bn=128, bk=128, interpret=True)
+    s, i = fused_topk(q, d, depth, bn=128, bk=128, merge=merge, interpret=True)
     ref_s, ref_i = jax.lax.top_k(fused_ref.scores_ref(q, d), depth)
     if dtype == "int8":  # integer scores: bitwise identical
         np.testing.assert_array_equal(np.asarray(s), np.asarray(ref_s))
@@ -65,20 +66,22 @@ def test_fused_topk_lsh_mode_parity():
     np.testing.assert_array_equal(np.asarray(i), np.asarray(ref_i))
 
 
-def test_fused_topk_tie_break_and_ragged_padding():
+@pytest.mark.parametrize("merge", ["bitonic", "extract"])
+def test_fused_topk_tie_break_and_ragged_padding(merge):
     """Massive integer ties + ragged N: ids must follow top_k's lowest-index
     tie order and padded docs must never surface."""
     b, n, t = 3, 130, 16  # n pads up to 256 with bn=128 -> ~half the tile fake
     q = jnp.asarray(RNG.integers(0, 2, (b, t)), jnp.int8)
     d = jnp.asarray(RNG.integers(0, 2, (n, t)), jnp.int8)
-    s, i = fused_topk(q, d, n, bn=128, bk=128, interpret=True)
+    s, i = fused_topk(q, d, n, bn=128, bk=128, merge=merge, interpret=True)
     ref_s, ref_i = jax.lax.top_k(fused_ref.scores_ref(q, d), n)
     np.testing.assert_array_equal(np.asarray(s), np.asarray(ref_s))
     np.testing.assert_array_equal(np.asarray(i), np.asarray(ref_i))
     assert (np.asarray(i) < n).all()  # no padded id leaks
 
 
-def test_fused_topk_gathered_parity_and_padding():
+@pytest.mark.parametrize("merge", ["bitonic", "extract"])
+def test_fused_topk_gathered_parity_and_padding(merge):
     """Blockmax stage-2 variant: per-query candidate sets, invalid rows
     (row_id >= n_docs) masked to -inf and reported as id -1."""
     b, r, t, n_docs = 4, 96, 33, 64
@@ -87,12 +90,61 @@ def test_fused_topk_gathered_parity_and_padding():
     # force many invalid candidates so -inf slots reach the output
     row_ids = jnp.asarray(RNG.integers(0, 2 * n_docs, (b, r)), jnp.int32)
     s, i = fused_topk_gathered(q, rows, row_ids, 60, n_docs, bn=64, bk=32,
-                               interpret=True)
+                               merge=merge, interpret=True)
     ref_s, ref_i = fused_ref.gathered_topk_ref(q, rows, row_ids, 60, n_docs)
     np.testing.assert_allclose(
         np.asarray(s), np.asarray(ref_s), rtol=1e-5, atol=1e-5)
     np.testing.assert_array_equal(np.asarray(i), np.asarray(ref_i))
     assert (np.asarray(i)[np.asarray(s) == -np.inf] == -1).all()
+
+
+@pytest.mark.parametrize("merge", ["bitonic", "extract"])
+def test_fused_topk_gathered_tied_tiles_keep_smaller_ids(merge):
+    """Regression: gathered row ids are NOT ordered across doc tiles (blocks
+    arrive in stage-1 bound order), so a later tile whose best score only
+    TIES the running depth-th best may hold the smaller — winning — ids;
+    the WAND tile skip must not drop it (>= for the gathered variant)."""
+    b, r, t, n_docs = 1, 256, 16, 2048
+    q = jnp.ones((b, t), jnp.int8)
+    rows = jnp.ones((b, r, t), jnp.int8)  # every candidate scores exactly t
+    # first tile (bn=128): ids 1000..1127; second tile: ids 0..127
+    row_ids = jnp.concatenate(
+        [jnp.arange(1000, 1128), jnp.arange(0, 128)])[None, :].astype(jnp.int32)
+    s, i = fused_topk_gathered(q, rows, row_ids, 128, n_docs, bn=128, bk=128,
+                               merge=merge, interpret=True)
+    ref_s, ref_i = fused_ref.gathered_topk_ref(q, rows, row_ids, 128, n_docs)
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(ref_i))
+    np.testing.assert_array_equal(np.asarray(i)[0], np.arange(128))
+
+
+def test_fused_topk_gathered_int8_mode():
+    """int8 gathered operands take the int32-accumulate path bit-exactly
+    (blockmax stage 2 for the dot/int8 scoring mode)."""
+    b, r, t, n_docs = 3, 96, 40, 80
+    q = jnp.asarray(RNG.integers(-50, 50, (b, t)), jnp.int8)
+    rows = jnp.asarray(RNG.integers(-50, 50, (b, r, t)), jnp.int8)
+    row_ids = jnp.asarray(RNG.integers(0, 2 * n_docs, (b, r)), jnp.int32)
+    s, i = fused_topk_gathered(q, rows, row_ids, 50, n_docs, bn=64, bk=32,
+                               interpret=True)
+    ref_s, ref_i = fused_ref.gathered_topk_ref(q, rows, row_ids, 50, n_docs)
+    np.testing.assert_array_equal(np.asarray(s), np.asarray(ref_s))
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(ref_i))
+
+
+def test_fused_topk_gathered_lsh_mode():
+    """uint32 signature rows in lsh mode: sentinel-aware collision counts
+    with constant integer ties (exact lowest-doc-id tie order required)."""
+    b, r, t, n_docs = 3, 96, 48, 80
+    q = jnp.asarray(RNG.integers(0, 6, (b, t)), jnp.uint32)
+    q = q.at[:, ::7].set(jnp.uint32(0xFFFFFFFF))  # query sentinels masked
+    rows = jnp.asarray(RNG.integers(0, 6, (b, r, t)), jnp.uint32)
+    row_ids = jnp.asarray(RNG.integers(0, 2 * n_docs, (b, r)), jnp.int32)
+    s, i = fused_topk_gathered(q, rows, row_ids, 50, n_docs, mode="lsh",
+                               bn=64, bk=32, interpret=True)
+    ref_s, ref_i = fused_ref.gathered_topk_ref(
+        q, rows, row_ids, 50, n_docs, mode="lsh")
+    np.testing.assert_array_equal(np.asarray(s), np.asarray(ref_s))
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(ref_i))
 
 
 # -- index-level wrappers: df-prune mask folding -----------------------------
@@ -170,6 +222,54 @@ def test_blockmax_pruned_search_kernel_routing(small_corpus):
                                       use_kernel=True)
     s_x, i_x = blockmax.pruned_search(idx, bm, q_tf, n_keep=4, depth=50,
                                       use_kernel=False)
+    np.testing.assert_array_equal(np.asarray(i_k), np.asarray(i_x))
+    np.testing.assert_allclose(
+        np.asarray(s_k), np.asarray(s_x), rtol=1e-5, atol=1e-5)
+
+
+def test_blockmax_pruned_search_dot_kernel_routing(small_corpus):
+    """Generalized blockmax: int8-dot stage 2 through the gathered kernel
+    must bit-match the XLA gathered reference."""
+    v = jnp.asarray(small_corpus[:512])
+    cfg = FakeWordsConfig(quantization=50, scoring="dot")
+    idx = fakewords.build(v, cfg)
+    bm = blockmax.build_blockmax(idx, block_size=64)
+    assert bm.mode == "dot"
+    q_tf = fakewords.encode_queries(v[:4], cfg)
+    s_k, i_k = blockmax.pruned_search(idx, bm, q_tf, n_keep=4, depth=50,
+                                      use_kernel=True)
+    s_x, i_x = blockmax.pruned_search(idx, bm, q_tf, n_keep=4, depth=50,
+                                      use_kernel=False)
+    np.testing.assert_array_equal(np.asarray(i_k), np.asarray(i_x))
+    np.testing.assert_array_equal(np.asarray(s_k), np.asarray(s_x))
+
+
+def test_blockmax_pruned_search_lsh_kernel_routing(small_corpus):
+    """Generalized blockmax: LSH collision-count stage 2 through the
+    gathered kernel must bit-match the XLA gathered reference."""
+    v = jnp.asarray(small_corpus[:512])
+    cfg = LexicalLshConfig(buckets=64, hashes=2)
+    idx = lexical_lsh.build(v, cfg)
+    bm = blockmax.build_blockmax(idx, block_size=64)
+    assert bm.mode == "lsh"
+    sig_q = lexical_lsh.encode(bruteforce.l2_normalize(v[:4]), cfg)
+    s_k, i_k = blockmax.pruned_search(idx, bm, sig_q, n_keep=4, depth=50,
+                                      use_kernel=True)
+    s_x, i_x = blockmax.pruned_search(idx, bm, sig_q, n_keep=4, depth=50,
+                                      use_kernel=False)
+    np.testing.assert_array_equal(np.asarray(i_k), np.asarray(i_x))
+    np.testing.assert_array_equal(np.asarray(s_k), np.asarray(s_x))
+
+
+def test_kdtree_scan_search_kernel_routing(small_corpus):
+    """kd-tree scan backend through the fused kernel ([2q; 1] lift): same
+    neighbors and negated squared distances as the XLA scan, with no (B, N)
+    matrix on the kernel path."""
+    v = jnp.asarray(small_corpus[:512])
+    idx = kdtree.build(v, KdTreeConfig(dims=8, backend="scan"))
+    qr = kdtree.reduce_queries(idx, v[:6])
+    s_k, i_k = kdtree.scan_search(idx, qr, 10, use_kernel=True)
+    s_x, i_x = kdtree.scan_search(idx, qr, 10, use_kernel=False)
     np.testing.assert_array_equal(np.asarray(i_k), np.asarray(i_x))
     np.testing.assert_allclose(
         np.asarray(s_k), np.asarray(s_x), rtol=1e-5, atol=1e-5)

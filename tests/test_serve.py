@@ -68,6 +68,38 @@ def test_engine_isolation_between_concurrent_requests():
     assert r_alone.out_tokens == r_shared.out_tokens
 
 
+def test_engine_second_run_and_direct_step_drain():
+    """Regression: run() compared the CUMULATIVE step counter against
+    max_steps, so a second run() with work queued returned immediately; and
+    requests retired via direct step() calls leaked (or double-returned) on
+    the next run()."""
+    cfg, params = _tiny()
+    eng = DecodeEngine(params, cfg, EngineConfig(batch_slots=2, max_len=64, eos_id=0))
+    r1 = Request(uid=0, prompt=RNG.integers(2, 64, 4).astype(np.int32),
+                 max_new_tokens=3)
+    eng.submit(r1)
+    done1 = eng.run(max_steps=10)
+    assert r1 in done1 and r1.done
+    # retire a request via direct step() calls: run() must hand it back
+    # exactly once, not leak it
+    r2 = Request(uid=1, prompt=RNG.integers(2, 64, 4).astype(np.int32),
+                 max_new_tokens=2)
+    eng.submit(r2)
+    while not r2.done:
+        eng.step()
+    done2 = eng.run(max_steps=10)
+    assert done2 == [r2]
+    # later run with the CUMULATIVE counter far past max_steps: must still
+    # make progress (the bound applies to steps taken within the call)
+    eng.steps = 10_000  # long-lived engine
+    r3 = Request(uid=2, prompt=RNG.integers(2, 64, 4).astype(np.int32),
+                 max_new_tokens=3)
+    eng.submit(r3)
+    done3 = eng.run(max_steps=10)
+    assert r3 in done3 and r3.done
+    assert eng.run(max_steps=10) == []  # drained: nothing to return
+
+
 def test_ann_service_recall_and_batching(small_corpus):
     v = jnp.asarray(small_corpus)
     cfg = FakeWordsConfig(quantization=50)
@@ -79,3 +111,26 @@ def test_ann_service_recall_and_batching(small_corpus):
     gt_s, gt_i = bruteforce.exact_topk(v, jnp.asarray(qs), 10)
     assert float(ev.recall_at(jnp.asarray(np.asarray(gt_i)), jnp.asarray(ids))) > 0.85
     assert svc.stats()["queries"] == 40
+
+
+def test_ann_service_blockmax_pruned(small_corpus):
+    """Blockmax-pruned serving: keeping half the blocks preserves most
+    recall; keeping all blocks matches the unpruned service results."""
+    v = jnp.asarray(small_corpus)
+    cfg = FakeWordsConfig(quantization=50)
+    idx = fakewords.build(v, cfg)
+    qs = small_corpus[:24]
+    gt_s, gt_i = bruteforce.exact_topk(v, jnp.asarray(qs), 10)
+    n_blocks = -(-v.shape[0] // 256)
+    svc_all = AnnService(idx, cfg, AnnServiceConfig(
+        k=10, depth=100, rerank=True, max_batch=16, blockmax_keep=n_blocks))
+    _, ids_all = svc_all.search_batch(qs)
+    svc_half = AnnService(idx, cfg, AnnServiceConfig(
+        k=10, depth=100, rerank=True, max_batch=16,
+        blockmax_keep=max(1, n_blocks // 2)))
+    _, ids_half = svc_half.search_batch(qs)
+    r_all = float(ev.recall_at(jnp.asarray(np.asarray(gt_i)), jnp.asarray(ids_all)))
+    r_half = float(ev.recall_at(jnp.asarray(np.asarray(gt_i)), jnp.asarray(ids_half)))
+    assert r_all > 0.85
+    assert r_half > 0.3  # graceful degradation at beta=0.5
+    assert r_all >= r_half
