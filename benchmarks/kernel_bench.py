@@ -20,7 +20,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import blockmax, bruteforce, fakewords, lexical_lsh
-from repro.core.types import FakeWordsConfig, LexicalLshConfig
+from repro.core.index import AnnIndex
+from repro.core.types import (
+    BruteForceConfig,
+    FakeWordsConfig,
+    KdTreeConfig,
+    LexicalLshConfig,
+)
 from repro.kernels import common
 from repro.kernels.fused_topk import ops as fused_ops
 from repro.kernels.fused_topk import ref as fused_ref
@@ -184,6 +190,38 @@ def pruned_vs_full(
     return rows, summary
 
 
+def pipeline_latency(
+    n_docs: int, dim: int, batch: int, depth: int = 100, k: int = 10
+) -> List[Dict]:
+    """End-to-end latency rows for every encoding through the shared staged
+    SearchPipeline (AnnIndex.search: encode -> match -> exact rerank) — the
+    same code path the serving layer runs.  Off-TPU the match stage times
+    the XLA reference; on TPU the fused Pallas kernel."""
+    rng = np.random.default_rng(0)
+    vecs = jnp.asarray(rng.normal(size=(n_docs, dim)).astype(np.float32))
+    queries = vecs[:batch]
+    uk = None if jax.default_backend() == "tpu" else False
+    rows: List[Dict] = []
+    for cfg in (
+        FakeWordsConfig(quantization=50),
+        FakeWordsConfig(quantization=50, scoring="dot"),
+        LexicalLshConfig(buckets=300, hashes=1),
+        KdTreeConfig(dims=8, backend="scan"),
+        BruteForceConfig(),
+    ):
+        ann = AnnIndex.build(vecs, cfg, use_kernel=uk)
+        tag = ann.method
+        if isinstance(cfg, FakeWordsConfig):
+            tag = f"{ann.method}/{cfg.scoring}"
+        dt = _time(lambda a=ann, q=queries: a.search(q, k=k, depth=depth, rerank=True))
+        rows.append({
+            "kernel": f"pipeline({tag}) encode+match+rerank",
+            "us_per_call": dt * 1e6,
+            "index_mb": ann.nbytes() / 1e6,
+        })
+    return rows
+
+
 def run(n_docs: int = 50_000, dim: int = 300, batch: int = 64) -> List[Dict]:
     rng = np.random.default_rng(0)
     vecs = jnp.asarray(rng.normal(size=(n_docs, dim)).astype(np.float32))
@@ -240,6 +278,8 @@ def _print_rows(rows: List[Dict]) -> None:
 def main(n_docs: int = 50_000, dim: int = 300, batch: int = 64):
     rows = run(n_docs, dim, batch)
     _print_rows(rows)
+    pl_rows = pipeline_latency(n_docs, dim, batch)
+    _print_rows(pl_rows)
     f_rows, summary = fused_vs_unfused(n_docs, dim, batch)
     _print_rows(f_rows)
     for scoring in ("classic", "dot"):
@@ -262,7 +302,7 @@ def main(n_docs: int = 50_000, dim: int = 300, batch: int = 64):
             f"({s['byte_cut']:.1f}x byte cut; wall-clock {s['speedup']:.2f}x"
             f"{' on-TPU' if p_summary['on_tpu'] else ' via XLA ref'})"
         )
-    return rows + f_rows + p_rows, {**summary, "blockmax": p_summary}
+    return rows + pl_rows + f_rows + p_rows, {**summary, "blockmax": p_summary}
 
 
 if __name__ == "__main__":

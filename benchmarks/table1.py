@@ -2,7 +2,7 @@
 three methods on word2vec-like and GloVe-like corpora.
 
 No internet in this container, so corpora are synthesized with matched
-statistics (data/embeddings.py; DESIGN.md §7).  The validated claims are the
+statistics (data/embeddings.py; DESIGN.md §6).  The validated claims are the
 paper's RELATIVE orderings and trends, which are distribution-robust:
 
   * fake words  > lexical LSH >> k-d tree on recall;

@@ -1,25 +1,38 @@
-"""Quickstart: ANN search on dense vectors with the fake-words index.
+"""Quickstart: ANN search on dense vectors through the staged pipeline API.
 
     PYTHONPATH=src python examples/quickstart.py
 
-Builds all three paper encodings over a synthetic word2vec-like corpus,
-searches, and prints R@(10,d) against the exact brute-force oracle —
-a miniature of paper Table 1 through the public API.
+Builds all three paper encodings (plus the exact brute-force oracle) over a
+synthetic word2vec-like corpus via the one entry point — ``AnnIndex`` —
+searches each through the shared ``SearchPipeline`` (encode -> match ->
+exact rerank), prints R@(10,d) against the oracle (a miniature of paper
+Table 1), and round-trips one index through ``save``/``load`` (the
+ship-to-serving-process path).
 """
 import dataclasses
+import os
+import tempfile
 
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import bruteforce, eval as ev
 from repro.core.index import AnnIndex
-from repro.core.types import FakeWordsConfig, KdTreeConfig, LexicalLshConfig
+from repro.core.types import (
+    BruteForceConfig,
+    FakeWordsConfig,
+    KdTreeConfig,
+    LexicalLshConfig,
+    SearchParams,
+)
 from repro.data import embeddings
 
 
 def main():
-    print("== corpus: 20k synthetic word2vec-like vectors (300-d)")
+    n_docs = int(os.environ.get("QUICKSTART_DOCS", 20_000))
+    print(f"== corpus: {n_docs} synthetic word2vec-like vectors (300-d)")
     corpus_np = embeddings.make_corpus(
-        dataclasses.replace(embeddings.WORD2VEC_LIKE, n_vectors=20_000))
+        dataclasses.replace(embeddings.WORD2VEC_LIKE, n_vectors=n_docs))
     corpus = jnp.asarray(corpus_np)
     queries_np, _ = embeddings.make_queries(corpus_np, 64)
     queries = jnp.asarray(queries_np)
@@ -29,16 +42,29 @@ def main():
         FakeWordsConfig(quantization=50),                 # best (paper)
         LexicalLshConfig(buckets=300, hashes=1),          # middle
         KdTreeConfig(dims=8, reduction="pca"),            # fast, collapsed
+        BruteForceConfig(),                               # the oracle itself
     ]:
         idx = AnnIndex.build(corpus, cfg)
-        _, ids = idx.search(queries, k=100, depth=100)
+        _, ids = idx.search(queries, params=SearchParams(k=100, depth=100))
         r10 = float(ev.recall_at(gt, ids[:, :10]))
         r100 = float(ev.recall_at(gt, ids))
         # two-phase: depth-100 match + exact rerank (the refinement step)
-        _, ids_rr = idx.search(queries, k=10, depth=100, rerank=True)
+        _, ids_rr = idx.search(
+            queries, params=SearchParams(k=10, depth=100, rerank=True))
         r_rr = float(ev.recall_at(gt, ids_rr))
         print(f"{idx.method:12s} R@(10,10)={r10:.3f} R@(10,100)={r100:.3f} "
               f"rerank@100->10={r_rr:.3f} index={idx.nbytes()/1e6:.0f}MB")
+
+    # Persistence: a built index ships to a serving process as npz + JSON.
+    idx = AnnIndex.build(corpus, FakeWordsConfig(quantization=50))
+    s0, i0 = idx.search(queries, k=10, depth=100, rerank=True)
+    with tempfile.TemporaryDirectory() as tmp:
+        path = os.path.join(tmp, "fakewords.ann")
+        idx.save(path)
+        loaded = AnnIndex.load(path)
+        s1, i1 = loaded.search(queries, k=10, depth=100, rerank=True)
+    assert (np.asarray(i0) == np.asarray(i1)).all()
+    print("save/load round trip: search output identical bit-for-bit")
 
 
 if __name__ == "__main__":

@@ -1,7 +1,9 @@
 """Core ANN library: the paper's contribution as composable JAX modules."""
 from repro.core.types import (  # noqa: F401
+    BruteForceConfig,
     FakeWordsConfig,
     FakeWordsIndex,
+    FlatIndex,
     KdTreeConfig,
     KdTreeIndex,
     LexicalLshConfig,
@@ -9,3 +11,4 @@ from repro.core.types import (  # noqa: F401
     SearchParams,
 )
 from repro.core.index import AnnIndex  # noqa: F401
+from repro.core.pipeline import SearchPipeline  # noqa: F401

@@ -243,5 +243,8 @@ def pruned_search(
     streaming top-k kernel (docs/DESIGN.md §4): the (B, n_keep*block_size)
     stage-2 score matrix never materializes.  Default: kernel on TPU.
     Ties break on the lowest doc id on both paths, so at beta=1.0 the ids
-    equal the dense reference paths exactly."""
+    equal the dense reference paths exactly.
+
+    (:class:`repro.core.pipeline.BlockMaxMatcher` is the same two-stage
+    match as a pipeline stage; this wrapper is the jitted standalone form.)"""
     return pruned_topk(index, bm, q_tf, n_keep, depth, use_kernel)

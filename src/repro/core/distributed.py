@@ -14,12 +14,17 @@ We reproduce that architecture with ``shard_map`` over the full device mesh:
   4. one all-gather of (score, global_id) pairs - d*(4+4) bytes per shard,
      negligible next to the index scan - and a replicated global top-k.
 
+The per-shard match phase runs the SAME stage objects as single-device
+search (:mod:`repro.core.pipeline`): ``make_sharded_search`` builds the
+method's matcher from its config and calls it on each shard's local index
+slice, so every encoding — fake words, lexical LSH, k-d scan, brute force —
+gets the fan-out/merge architecture from one code path.
+
 Build is also distributed: document-frequency statistics are ``psum``-ed so
 idf matches a single-node build exactly.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional, Sequence, Tuple
 
 import jax
@@ -27,9 +32,19 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro import compat
-from repro.core import bruteforce, fakewords
+from repro.core import bruteforce, fakewords, pca
+from repro.core import pipeline as pl
 from repro.core.blockmax import BlockMaxIndex
-from repro.core.types import FakeWordsConfig, FakeWordsIndex
+from repro.core.types import (
+    BruteForceConfig,
+    FakeWordsConfig,
+    FakeWordsIndex,
+    FlatIndex,
+    KdTreeConfig,
+    KdTreeIndex,
+    LexicalLshConfig,
+    LshIndex,
+)
 
 
 def flat_axis_index(axes: Sequence[str]) -> jax.Array:
@@ -45,6 +60,110 @@ def flat_axis_size(mesh: Mesh, axes: Sequence[str]) -> int:
     for name in axes:
         size *= mesh.shape[name]
     return size
+
+
+# --------------------------------------------------------------------------
+# Sharding specs (document dimension) for every index type
+# --------------------------------------------------------------------------
+
+
+def _replicated_tree(model):
+    """P() for every leaf of a nested reduction-model pytree."""
+    return jax.tree_util.tree_map(lambda _: P(), model)
+
+
+def _pspec_tree(
+    kind: str,
+    axes: Sequence[str],
+    scored: bool = False,
+    vectors: bool = True,
+    reduction_spec=None,
+    lifted: bool = True,
+):
+    """The one place the per-type doc-dimension spec trees are written;
+    :func:`index_pspec` / :func:`config_pspec` just derive the presence
+    flags (from an instance or a config) and delegate here."""
+    axes = tuple(axes)
+    doc = P(axes, None)
+    vec = doc if vectors else None
+    if kind == "fake-words":
+        return FakeWordsIndex(
+            tf=doc, idf=P(), norm=P(axes), df=P(),
+            scored=doc if scored else None, vectors=vec,
+        )
+    if kind == "lexical-lsh":
+        return LshIndex(sig=doc, vectors=vec)
+    if kind == "kd-tree":
+        return KdTreeIndex(
+            reduced=doc, reduction=reduction_spec,
+            lifted=doc if lifted else None, vectors=vec,
+        )
+    if kind == "bruteforce":
+        return FlatIndex(vectors=doc)
+    raise ValueError(f"unknown index kind {kind!r}")
+
+
+_TREE_BACKEND_MSG = (
+    "kd-tree 'tree' backend cannot shard on documents; use backend='scan' "
+    "(identical results, docs/DESIGN.md §3)"
+)
+
+
+def index_pspec(index, axes: Sequence[str]):
+    """Doc-dimension sharding spec tree matching an index's present leaves.
+    Works for every index type the pipeline serves."""
+    if isinstance(index, FakeWordsIndex):
+        return _pspec_tree(
+            "fake-words", axes,
+            scored=index.scored is not None,
+            vectors=index.vectors is not None,
+        )
+    if isinstance(index, LshIndex):
+        return _pspec_tree(
+            "lexical-lsh", axes, vectors=index.vectors is not None
+        )
+    if isinstance(index, KdTreeIndex):
+        if index.split_dim is not None:
+            raise ValueError(_TREE_BACKEND_MSG)
+        return _pspec_tree(
+            "kd-tree", axes,
+            vectors=index.vectors is not None,
+            reduction_spec=_replicated_tree(index.reduction),
+            lifted=index.lifted is not None,
+        )
+    if isinstance(index, FlatIndex):
+        return _pspec_tree("bruteforce", axes)
+    raise TypeError(f"unknown index {type(index)}")
+
+
+def config_pspec(config, axes: Sequence[str], keep_vectors: bool = True):
+    """Spec tree from a method config (when no index instance is at hand —
+    e.g. dryrun cells that eval_shape through the sharded search)."""
+    if isinstance(config, FakeWordsConfig):
+        return _pspec_tree(
+            "fake-words", axes,
+            scored=config.scoring == "classic", vectors=keep_vectors,
+        )
+    if isinstance(config, LexicalLshConfig):
+        return _pspec_tree("lexical-lsh", axes, vectors=keep_vectors)
+    if isinstance(config, KdTreeConfig):
+        if config.backend == "tree":
+            raise ValueError(_TREE_BACKEND_MSG)
+        red = (
+            pca.PcaModel(mean=P(), components=P())
+            if config.reduction == "pca"
+            else pca.PpaPcaPpaModel(
+                ppa1=pca.PpaModel(mean=P(), top=P()),
+                pca=pca.PcaModel(mean=P(), components=P()),
+                ppa2=pca.PpaModel(mean=P(), top=P()),
+            )
+        )
+        return _pspec_tree(
+            "kd-tree", axes, vectors=keep_vectors, reduction_spec=red
+        )
+    if isinstance(config, BruteForceConfig):
+        return _pspec_tree("bruteforce", axes)
+    raise TypeError(f"unknown config {type(config)}")
 
 
 # --------------------------------------------------------------------------
@@ -88,14 +207,7 @@ def build_fakewords_sharded(
             vectors=v if keep_vectors else None,
         )
 
-    out_specs = FakeWordsIndex(
-        tf=P(axes, None),
-        idf=P(),
-        norm=P(axes),
-        df=P(),
-        scored=P(axes, None) if config.scoring == "classic" else None,
-        vectors=P(axes, None) if keep_vectors else None,
-    )
+    out_specs = config_pspec(config, axes, keep_vectors)
     fn = compat.shard_map(
         local_build, mesh=mesh, in_specs=P(axes, None), out_specs=out_specs
     )
@@ -107,65 +219,9 @@ def build_fakewords_sharded(
 # --------------------------------------------------------------------------
 
 
-def _local_topk_tiled(
-    score_tile_fn, n_local: int, batch: int, depth: int, tile: int,
-    unroll: bool = False,
-) -> Tuple[jax.Array, jax.Array]:
-    """Streaming local top-d: score ``tile`` docs at a time and merge into a
-    running (B, depth) best set.  The (B, n_local) score matrix never
-    materializes in HBM — the index scan streams at full bandwidth (§Perf
-    iteration C2: cuts the cell's HBM traffic ~2.7x at web1b scale).
-
-    score_tile_fn(start) -> (B, tile) scores for docs [start, start+tile).
-    """
-    n_tiles = -(-n_local // tile)
-    d = min(depth, tile)
-    init_s = jnp.full((batch, depth), -jnp.inf, jnp.float32)
-    init_i = jnp.full((batch, depth), -1, jnp.int32)
-
-    def body(carry, t_idx):
-        best_s, best_i = carry
-        start = t_idx * tile
-        s = score_tile_fn(start).astype(jnp.float32)  # (B, tile)
-        ids = start + jnp.arange(tile, dtype=jnp.int32)[None, :]
-        valid = ids < n_local
-        s = jnp.where(valid, s, -jnp.inf)
-        loc_s, pos = jax.lax.top_k(s, d)
-        loc_i = jnp.take_along_axis(jnp.broadcast_to(ids, s.shape), pos, axis=-1)
-        all_s = jnp.concatenate([best_s, loc_s], axis=-1)
-        all_i = jnp.concatenate([best_i, loc_i], axis=-1)
-        top_s, top_pos = jax.lax.top_k(all_s, depth)
-        return (top_s, jnp.take_along_axis(all_i, top_pos, axis=-1)), None
-
-    (best_s, best_i), _ = jax.lax.scan(
-        body, (init_s, init_i), jnp.arange(n_tiles, dtype=jnp.int32),
-        unroll=unroll,  # analysis mode: HLO cost analysis counts a while
-        #                 body once; roofline lowers the unrolled loop
-    )
-    return best_s, best_i
-
-
-def _kernel_query_and_docs(index: FakeWordsIndex, q_tf, config: FakeWordsConfig):
-    """Per-scoring-mode (query tile, stored matrix) operands for the fused
-    streaming top-k kernel, keep-mask folded into the query."""
-    if config.scoring == "classic":
-        return fakewords.classic_query(index, q_tf, config.df_max_ratio), index.scored
-    if config.signed_store:
-        # index.tf holds the SIGNED (N, m) matrix; fold the sign-split keep
-        # mask down to m terms.
-        keep = fakewords.df_prune_mask(
-            index.df, index.num_docs, config.df_max_ratio)
-        m = index.tf.shape[1]
-        keep_m = keep[:m] & keep[m:] if keep.shape[0] == 2 * m else keep[:m]
-        qv = (fakewords.signed_query(q_tf) * keep_m).astype(jnp.int8)
-        return qv, index.tf
-    return fakewords.dot_query(
-        index, q_tf, config.df_max_ratio, dtype=jnp.int8), index.tf
-
-
 def make_sharded_search(
     mesh: Mesh,
-    config: FakeWordsConfig,
+    config,
     axes: Sequence[str],
     k: int = 10,
     depth: int = 100,
@@ -176,67 +232,38 @@ def make_sharded_search(
     use_kernel: Optional[bool] = None,
     blockmax_keep: Optional[int] = None,
 ):
-    """Returns a jit-able ``search(index, q_tf, queries) -> (scores, ids)``
-    closed over the mesh.  ``index`` leaves must be sharded as produced by
-    :func:`build_fakewords_sharded`; queries are replicated.
+    """Returns a jit-able ``search(index, q_rep, queries) -> (scores, ids)``
+    closed over the mesh, for ANY method config (fake words / lexical LSH /
+    kd-scan / brute force).  ``index`` leaves must be doc-sharded (see
+    :func:`shard_index` / :func:`build_fakewords_sharded`); ``q_rep`` is the
+    method's replicated query representation (encode outside the mesh with
+    ``AnnIndex.encode_queries`` or the pipeline's encoder).
 
-    The local match phase has three realizations: with ``use_kernel`` (the
-    default on TPU) every shard runs the fused streaming score->top-k Pallas
-    kernel (docs/DESIGN.md §4) — the index streams HBM->VMEM once and only
-    (B, d) survives; otherwise shards larger than ``score_tile`` docs stream
-    tile-by-tile with an XLA running top-d merge, and small shards fall back
-    to the dense GEMM + top_k reference.
+    The local match phase IS the method's pipeline matcher stage
+    (:func:`repro.core.pipeline.make_matcher`) running on each shard's local
+    slice: with ``use_kernel`` (the default on TPU) that's the fused
+    streaming score->top-k Pallas kernel (docs/DESIGN.md §4); otherwise the
+    XLA realization, which for fake-words shards larger than ``score_tile``
+    docs streams tile-by-tile with a running top-d merge.
 
-    With ``blockmax_keep`` set, the returned callable becomes
-    ``search(index, bm, q_tf, queries)`` (``bm`` built by
+    With ``blockmax_keep`` set (fake-words / LSH), the returned callable
+    becomes ``search(index, bm, q_rep, queries)`` (``bm`` built by
     ``blockmax.build_blockmax`` and placed by :func:`shard_blockmax`): each
-    shard runs the two-stage pruned match — bound pass over its local block
-    upper bounds, then exact scoring of the kept blocks through the fused
-    gathered streaming top-k kernel — so the pod also gets the ~(1 - beta)
-    scan-byte cut.  The df-prune mask is not applied on this path (like the
-    single-node ``pruned_search``)."""
+    shard runs the two-stage pruned match through the
+    :class:`repro.core.pipeline.BlockMaxMatcher` stage — bound pass over its
+    local block upper bounds, then exact scoring of the kept blocks through
+    the fused gathered streaming top-k kernel — so the pod also gets the
+    ~(1 - beta) scan-byte cut.  The df-prune mask is not applied on this
+    path (like the single-node ``pruned_search``)."""
     axes = tuple(axes)
-    from repro.core import blockmax as bmx
     from repro.kernels.fused_topk import ops as fused
 
     kernel_local = fused.resolve_use_kernel(use_kernel)
+    matcher = pl.make_matcher(config, score_tile=score_tile, tile_unroll=tile_unroll)
 
-    def dense_match(index: FakeWordsIndex, q_tf):
-        n_local = index.tf.shape[0]
-        d_local = min(depth, n_local)
-        if kernel_local:
-            qv, docs = _kernel_query_and_docs(index, q_tf, config)
-            return fused.fused_topk(qv, docs, d_local)
-        if n_local > 2 * score_tile:
-            qv, docs = _kernel_query_and_docs(index, q_tf, config)
-            if config.scoring == "classic":
-                def tile_scores(start):
-                    rows = jax.lax.dynamic_slice_in_dim(
-                        docs, start, score_tile, axis=0)
-                    return jnp.einsum("bt,nt->bn", qv, rows,
-                                      preferred_element_type=jnp.float32)
-            else:
-                qv = qv.astype(jnp.int32)
-
-                def tile_scores(start):
-                    rows = jax.lax.dynamic_slice_in_dim(
-                        docs, start, score_tile, axis=0)
-                    return jnp.einsum(
-                        "bt,nt->bn", qv, rows.astype(jnp.int32),
-                        preferred_element_type=jnp.int32)
-
-            return _local_topk_tiled(
-                tile_scores, n_local, q_tf.shape[0], d_local, score_tile,
-                unroll=tile_unroll)
-        if config.scoring == "classic":
-            scores = fakewords.classic_scores(index, q_tf, config.df_max_ratio)
-        else:
-            scores = fakewords.dot_scores(index, q_tf, config.df_max_ratio)
-        return jax.lax.top_k(scores, d_local)  # (B, d_local)
-
-    def merge_global(index: FakeWordsIndex, loc_s, loc_i, queries):
+    def merge_global(index, loc_s, loc_i, queries):
         shard = flat_axis_index(axes)
-        n_local = index.tf.shape[0]
+        n_local = index.num_docs
         valid = loc_i >= 0
         if rerank:
             # Exact rerank against *local* originals: no cross-shard gather.
@@ -254,28 +281,22 @@ def make_sharded_search(
         top_i = jnp.take_along_axis(all_i, pos, axis=-1)
         return top_s, top_i
 
-    def local_search(index: FakeWordsIndex, q_tf, queries):
-        loc_s, loc_i = dense_match(index, q_tf)
+    def local_search(index, q_rep, queries):
+        loc_s, loc_i = matcher(index, q_rep, depth, use_kernel=kernel_local)
         return merge_global(index, loc_s, loc_i, queries)
 
-    def local_search_blockmax(index: FakeWordsIndex, bm, q_tf, queries):
+    def local_search_blockmax(index, bm, q_rep, queries):
         n_keep = min(blockmax_keep, bm.num_blocks)
         # Cap on gathered candidates, NOT n_local: a ragged shard whose kept
         # blocks carry padded rows legitimately returns -1 slots when depth
         # exceeds its valid candidate count (merge_global masks them).
         d_local = min(depth, n_keep * bm.block_size)
-        loc_s, loc_i = bmx.pruned_topk(
-            index, bm, q_tf, n_keep, d_local, use_kernel=kernel_local)
+        loc_s, loc_i = pl.BlockMaxMatcher(n_keep=n_keep)(
+            index, q_rep, d_local, bm=bm, use_kernel=kernel_local
+        )
         return merge_global(index, loc_s, loc_i, queries)
 
-    index_spec = FakeWordsIndex(
-        tf=P(axes, None),
-        idf=P(),
-        norm=P(axes),
-        df=P(),
-        scored=P(axes, None) if config.scoring == "classic" else None,
-        vectors=P(axes, None) if keep_vectors else None,
-    )
+    index_spec = config_pspec(config, axes, keep_vectors)
     if blockmax_keep is not None:
         # Prefix spec: BlockMaxIndex's one array leaf (ub) shards on the
         # block dimension; its block_size/mode are static metadata.
@@ -296,28 +317,16 @@ def make_sharded_search(
     return jax.jit(fn)
 
 
-def _index_pspec(index: FakeWordsIndex, axes: Sequence[str]) -> FakeWordsIndex:
-    """Doc-dimension sharding spec tree matching an index's present leaves."""
-    axes = tuple(axes)
-    return FakeWordsIndex(
-        tf=P(axes, None),
-        idf=P(),
-        norm=P(axes),
-        df=P(),
-        scored=P(axes, None) if index.scored is not None else None,
-        vectors=P(axes, None) if index.vectors is not None else None,
-    )
-
-
 def build_blockmax_sharded(
     mesh: Mesh,
-    index: FakeWordsIndex,
+    index,
     axes: Sequence[str],
     block_size: int = 256,
     mode: Optional[str] = None,
     signed_store: bool = False,
 ) -> BlockMaxIndex:
-    """Per-shard block upper bounds over an already-sharded index.
+    """Per-shard block upper bounds over an already-sharded index
+    (fake-words or LSH).
 
     Each shard blocks ITS OWN doc range (padding its last block locally), so
     local block ids always line up with local doc rows and no global
@@ -328,7 +337,7 @@ def build_blockmax_sharded(
 
     axes = tuple(axes)
 
-    def local_build(idx: FakeWordsIndex) -> BlockMaxIndex:
+    def local_build(idx) -> BlockMaxIndex:
         return bmx.build_blockmax(
             idx, block_size, mode=mode, signed_store=signed_store
         )
@@ -336,7 +345,7 @@ def build_blockmax_sharded(
     fn = compat.shard_map(
         local_build,
         mesh=mesh,
-        in_specs=(_index_pspec(index, axes),),
+        in_specs=(index_pspec(index, axes),),
         out_specs=P(axes, None),  # prefix: the one array leaf (ub)
     )
     return fn(index)
@@ -363,18 +372,13 @@ def shard_blockmax(
     )
 
 
-def shard_index(mesh: Mesh, index: FakeWordsIndex, axes: Sequence[str]) -> FakeWordsIndex:
-    """Place a host-built index onto the mesh with doc-dimension sharding."""
-    axes = tuple(axes)
-
-    def put(x, spec):
-        return jax.device_put(x, NamedSharding(mesh, spec)) if x is not None else None
-
-    return FakeWordsIndex(
-        tf=put(index.tf, P(axes, None)),
-        idf=put(index.idf, P()),
-        norm=put(index.norm, P(axes)),
-        df=put(index.df, P()),
-        scored=put(index.scored, P(axes, None)),
-        vectors=put(index.vectors, P(axes, None)),
+def shard_index(mesh: Mesh, index, axes: Sequence[str]):
+    """Place a host-built index (any type) onto the mesh with doc-dimension
+    sharding; replicated stats / reduction models stay replicated."""
+    specs = index_pspec(index, tuple(axes))
+    return jax.tree_util.tree_map(
+        lambda s, x: jax.device_put(x, NamedSharding(mesh, s)),
+        specs,
+        index,
+        is_leaf=lambda x: isinstance(x, P),
     )

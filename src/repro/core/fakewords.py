@@ -18,7 +18,6 @@ becomes an int8 GEMM on the MXU.  Lucene semantics preserved:
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional, Tuple
 
 import jax
@@ -171,12 +170,6 @@ def dot_scores(
     ).astype(jnp.float32)
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=(
-        "k", "depth", "scoring", "rerank", "df_max_ratio", "use_kernel"
-    ),
-)
 def search(
     index: FakeWordsIndex,
     q_tf: jax.Array,
@@ -191,23 +184,14 @@ def search(
     """Two-phase search: match depth-d candidates on the fake-words index,
     optionally exact-rerank to k using the stored original vectors.
 
+    Thin wrapper over the shared staged pipeline
+    (:class:`repro.core.pipeline.FakeWordsMatcher` + exact rerank);
     ``use_kernel`` routes the match phase through the fused streaming
     score->top-k Pallas kernel (docs/DESIGN.md §4), which never writes the
     (B, N) score matrix to HBM.  Default: kernel on TPU, XLA elsewhere."""
-    from repro.kernels.fused_topk import ops as fused
+    from repro.core import pipeline as pl
 
-    if fused.resolve_use_kernel(use_kernel):
-        if scoring == "classic":
-            d_s, d_i = fused.classic_topk(index, q_tf, depth, df_max_ratio)
-        else:
-            d_s, d_i = fused.dot_topk(index, q_tf, depth, df_max_ratio)
-    else:
-        if scoring == "classic":
-            scores = classic_scores(index, q_tf, df_max_ratio)
-        else:
-            scores = dot_scores(index, q_tf, df_max_ratio)
-        d_s, d_i = jax.lax.top_k(scores, depth)
-    if not rerank:
-        return d_s[:, :k], d_i[:, :k]
-    assert index.vectors is not None and queries is not None
-    return bruteforce.rerank_exact(index.vectors, queries, d_i, k, normalized=True)
+    matcher = pl.FakeWordsMatcher(scoring=scoring, df_max_ratio=df_max_ratio)
+    return pl.match_rerank(
+        matcher, index, q_tf, queries, k, depth, rerank, use_kernel=use_kernel
+    )

@@ -1,42 +1,106 @@
-"""AnnIndex facade: one entry point over the three paper encodings.
+"""AnnIndex facade: the single entry point over every encoding.
 
     idx = AnnIndex.build(vectors, FakeWordsConfig(quantization=50))
     scores, ids = idx.search(queries, k=10, depth=100, rerank=True)
 
+An AnnIndex owns a staged :class:`repro.core.pipeline.SearchPipeline`
+(query encoder -> matcher [-> blockmax prune] -> exact reranker), so every
+method — fake words, lexical LSH, k-d tree, brute force — is a stage
+configuration, not a bespoke ``search()``.  The serving layer
+(``serve/ann_service.py``) and the pod path (``core/distributed.py``) run
+the same stage objects.
+
 All state lives in pytree index containers, so an AnnIndex can be sharded
 (``jax.device_put`` with a NamedSharding) and searched under ``jit`` /
 ``shard_map`` - see ``core/distributed.py`` for the pod-scale path.
+
+Persistence: :meth:`AnnIndex.save` / :meth:`AnnIndex.load` round-trip any
+index type (all array leaves as npz + the method config as JSON), so an
+index built offline ships to a serving process bit-for-bit.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple, Union
+import json
+import os
+from typing import Dict, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.core import bruteforce, fakewords, kdtree, lexical_lsh
+from repro.core import bruteforce, fakewords, kdtree, lexical_lsh, pca
+from repro.core import pipeline as pl
+from repro.core.blockmax import BlockMaxIndex, build_blockmax
 from repro.core.types import (
+    BruteForceConfig,
     FakeWordsConfig,
     FakeWordsIndex,
+    FlatIndex,
     KdTreeConfig,
     KdTreeIndex,
     LexicalLshConfig,
     LshIndex,
+    SearchParams,
 )
 
-AnyConfig = Union[FakeWordsConfig, LexicalLshConfig, KdTreeConfig]
-AnyIndex = Union[FakeWordsIndex, LshIndex, KdTreeIndex]
+AnyConfig = Union[FakeWordsConfig, LexicalLshConfig, KdTreeConfig, BruteForceConfig]
+AnyIndex = Union[FakeWordsIndex, LshIndex, KdTreeIndex, FlatIndex]
+
+_METHOD_BY_INDEX = {
+    FakeWordsIndex: "fake-words",
+    LshIndex: "lexical-lsh",
+    KdTreeIndex: "kd-tree",
+    FlatIndex: "bruteforce",
+}
+_CONFIG_BY_METHOD = {
+    "fake-words": FakeWordsConfig,
+    "lexical-lsh": LexicalLshConfig,
+    "kd-tree": KdTreeConfig,
+    "bruteforce": BruteForceConfig,
+}
 
 
 @dataclasses.dataclass
 class AnnIndex:
+    """One retrieval architecture for every encoding.
+
+    ``use_kernel`` / ``blockmax_keep`` / ``blockmax_block_size`` are the
+    uniform serving knobs: kernel routing (None = Pallas on TPU, XLA
+    elsewhere) and two-stage blockmax pruning (docs/DESIGN.md §6; fake-words
+    and LSH indexes only).  Per-call ``SearchParams`` select (k, depth,
+    rerank).
+    """
+
     config: AnyConfig
     index: AnyIndex
+    use_kernel: Optional[bool] = None
+    blockmax_keep: Optional[int] = None
+    blockmax_block_size: int = 256
+    bm: Optional[BlockMaxIndex] = None
+
+    def __post_init__(self):
+        self.pipeline: pl.SearchPipeline = pl.build_pipeline(self.config)
+        if self.blockmax_keep is not None and self.bm is None:
+            if not isinstance(self.index, (FakeWordsIndex, LshIndex)):
+                raise ValueError(
+                    f"blockmax pruning is not supported for {self.method}"
+                )
+            self.bm = build_blockmax(
+                self.index,
+                self.blockmax_block_size,
+                signed_store=getattr(self.config, "signed_store", False),
+            )
 
     @classmethod
     def build(
-        cls, vectors: jax.Array, config: AnyConfig, keep_vectors: bool = True
+        cls,
+        vectors: jax.Array,
+        config: AnyConfig,
+        keep_vectors: bool = True,
+        use_kernel: Optional[bool] = None,
+        blockmax_keep: Optional[int] = None,
+        blockmax_block_size: int = 256,
     ) -> "AnnIndex":
         vectors = bruteforce.l2_normalize(jnp.asarray(vectors))
         if isinstance(config, FakeWordsConfig):
@@ -45,30 +109,45 @@ class AnnIndex:
             idx = lexical_lsh.build(vectors, config, keep_vectors, normalized=True)
         elif isinstance(config, KdTreeConfig):
             idx = kdtree.build(vectors, config, keep_vectors, normalized=True)
+        elif isinstance(config, BruteForceConfig):
+            idx = FlatIndex(vectors=vectors)
         else:
             raise TypeError(f"unknown config {type(config)}")
-        return cls(config=config, index=idx)
+        return cls(
+            config=config,
+            index=idx,
+            use_kernel=use_kernel,
+            blockmax_keep=blockmax_keep,
+            blockmax_block_size=blockmax_block_size,
+        )
 
     @property
     def method(self) -> str:
-        return {
-            FakeWordsIndex: "fake-words",
-            LshIndex: "lexical-lsh",
-            KdTreeIndex: "kd-tree",
-        }[type(self.index)]
+        return _METHOD_BY_INDEX[type(self.index)]
 
     def nbytes(self) -> int:
         return self.index.nbytes()
 
+    @property
+    def num_docs(self) -> int:
+        return self.index.num_docs
+
     def encode_queries(self, queries: jax.Array) -> jax.Array:
         """Method-specific query representation (tf row / signature /
-        reduced point)."""
-        q = bruteforce.l2_normalize(jnp.asarray(queries))
-        if isinstance(self.config, FakeWordsConfig):
-            return fakewords.encode_queries(q, self.config, normalized=True)
-        if isinstance(self.config, LexicalLshConfig):
-            return lexical_lsh.encode(q, self.config)
-        return kdtree.reduce_queries(self.index, q, normalized=True)
+        reduced point / identity)."""
+        return self.pipeline.encode(self.index, queries)
+
+    def matcher_for(self, bm=None, keep: Optional[int] = None):
+        """The effective match stage: blockmax pruning when a block-bound
+        structure and keep count are given, else the method's dense matcher.
+        The single source of truth for pruning-stage selection (the serving
+        layer calls this with its own overrides)."""
+        if bm is not None and keep is not None:
+            return pl.BlockMaxMatcher(n_keep=min(keep, bm.num_blocks))
+        return self.pipeline.matcher
+
+    def _matcher(self):
+        return self.matcher_for(self.bm, self.blockmax_keep)
 
     def search(
         self,
@@ -76,31 +155,158 @@ class AnnIndex:
         k: int = 10,
         depth: int = 100,
         rerank: bool = False,
+        params: Optional[SearchParams] = None,
+        use_kernel: Optional[bool] = None,
     ) -> Tuple[jax.Array, jax.Array]:
-        queries = bruteforce.l2_normalize(jnp.asarray(queries))
-        if isinstance(self.config, FakeWordsConfig):
-            q_tf = fakewords.encode_queries(queries, self.config, normalized=True)
-            return fakewords.search(
-                self.index,
-                q_tf,
-                queries,
-                k=k,
-                depth=depth,
-                scoring=self.config.scoring,
-                rerank=rerank,
-                df_max_ratio=self.config.df_max_ratio,
-            )
-        if isinstance(self.config, LexicalLshConfig):
-            sig_q = lexical_lsh.encode(queries, self.config)
-            return lexical_lsh.search(
-                self.index, sig_q, queries, k=k, depth=depth, rerank=rerank
-            )
-        return kdtree.search(
-            self.index,
-            queries,
-            k=k,
-            depth=depth,
-            backend=self.config.backend,
-            rerank=rerank,
-            normalized=True,
+        """Staged search: encode -> match [-> prune] -> optional rerank.
+        ``params`` takes precedence WHOLESALE over the ``k``/``depth``/
+        ``rerank`` kwargs (pass one style or the other, not both);
+        ``use_kernel`` overrides the index-level kernel routing for this
+        call."""
+        p = params if params is not None else SearchParams(k=k, depth=depth, rerank=rerank)
+        uk = self.use_kernel if use_kernel is None else use_kernel
+        pipe = dataclasses.replace(self.pipeline, matcher=self._matcher())
+        return pipe.search(self.index, queries, p, bm=self.bm, use_kernel=uk)
+
+    # ----------------------------------------------------------------------
+    # Persistence: npz (all array leaves) + JSON (config + serving knobs)
+    # ----------------------------------------------------------------------
+
+    def save(self, path: str) -> None:
+        """Write the index to ``path/`` (``config.json`` + ``index.npz``).
+        Covers every index pytree, including the k-d tree's fitted reduction
+        model; the blockmax structure is rebuilt deterministically on load."""
+        os.makedirs(path, exist_ok=True)
+        arrays = _named_arrays(self.index)
+        packed: Dict[str, np.ndarray] = {}
+        dtypes: Dict[str, str] = {}
+        for name, arr in arrays.items():
+            a, dtype_name = _to_numpy(arr)
+            packed[name] = a
+            dtypes[name] = dtype_name
+        meta = {
+            "format_version": 1,
+            "method": self.method,
+            "config": _config_to_json(self.config),
+            "dtypes": dtypes,
+            "use_kernel": self.use_kernel,
+            "blockmax_keep": self.blockmax_keep,
+            "blockmax_block_size": self.blockmax_block_size,
+        }
+        with open(os.path.join(path, "config.json"), "w") as f:
+            json.dump(meta, f, indent=2)
+        np.savez_compressed(os.path.join(path, "index.npz"), **packed)
+
+    @classmethod
+    def load(cls, path: str, **overrides) -> "AnnIndex":
+        """Reconstruct a saved index.  ``overrides`` replace the persisted
+        serving knobs (``use_kernel``, ``blockmax_keep``,
+        ``blockmax_block_size``)."""
+        with open(os.path.join(path, "config.json")) as f:
+            meta = json.load(f)
+        config = _config_from_json(meta["method"], meta["config"])
+        with np.load(os.path.join(path, "index.npz")) as z:
+            arrays = {
+                name: _from_numpy(z[name], meta["dtypes"][name]) for name in z.files
+            }
+        index = _rebuild_index(meta["method"], config, arrays)
+        knobs = {
+            "use_kernel": meta.get("use_kernel"),
+            "blockmax_keep": meta.get("blockmax_keep"),
+            "blockmax_block_size": meta.get("blockmax_block_size", 256),
+        }
+        knobs.update(overrides)
+        return cls(config=config, index=index, **knobs)
+
+
+# --------------------------------------------------------------------------
+# (De)serialization helpers
+# --------------------------------------------------------------------------
+
+
+def _named_arrays(obj, prefix: str = "") -> Dict[str, jax.Array]:
+    """Dotted-name -> array map over a (possibly nested) index dataclass;
+    None leaves are skipped and restored as absent fields."""
+    out: Dict[str, jax.Array] = {}
+    for f in dataclasses.fields(obj):
+        v = getattr(obj, f.name)
+        if v is None or f.metadata.get("static"):
+            continue
+        name = f"{prefix}{f.name}"
+        if dataclasses.is_dataclass(v) and not isinstance(v, (jax.Array, np.ndarray)):
+            out.update(_named_arrays(v, name + "."))
+        else:
+            out[name] = v
+    return out
+
+
+def _to_numpy(arr) -> Tuple[np.ndarray, str]:
+    """npz-safe realization: bfloat16 (no native numpy dtype) round-trips
+    through a uint16 view; everything else saves as-is."""
+    a = np.asarray(arr)
+    if a.dtype.name == "bfloat16":
+        return a.view(np.uint16), "bfloat16"
+    return a, a.dtype.name
+
+
+def _from_numpy(a: np.ndarray, dtype_name: str) -> jax.Array:
+    if dtype_name == "bfloat16":
+        return jnp.asarray(a).view(jnp.bfloat16)
+    return jnp.asarray(a)
+
+
+def _config_to_json(config: AnyConfig) -> dict:
+    d = dataclasses.asdict(config)
+    if isinstance(config, FakeWordsConfig):
+        d["store_dtype"] = np.dtype(config.store_dtype).name
+    return d
+
+
+def _config_from_json(method: str, d: dict) -> AnyConfig:
+    cls = _CONFIG_BY_METHOD[method]
+    if cls is FakeWordsConfig and "store_dtype" in d:
+        d = dict(d, store_dtype=np.dtype(d["store_dtype"]))
+    return cls(**d)
+
+
+def _rebuild_reduction(config: KdTreeConfig, arrays: Dict[str, jax.Array]):
+    if config.reduction == "pca":
+        return pca.PcaModel(
+            mean=arrays["reduction.mean"],
+            components=arrays["reduction.components"],
         )
+    return pca.PpaPcaPpaModel(
+        ppa1=pca.PpaModel(
+            mean=arrays["reduction.ppa1.mean"], top=arrays["reduction.ppa1.top"]
+        ),
+        pca=pca.PcaModel(
+            mean=arrays["reduction.pca.mean"],
+            components=arrays["reduction.pca.components"],
+        ),
+        ppa2=pca.PpaModel(
+            mean=arrays["reduction.ppa2.mean"], top=arrays["reduction.ppa2.top"]
+        ),
+    )
+
+
+def _rebuild_index(
+    method: str, config: AnyConfig, arrays: Dict[str, jax.Array]
+) -> AnyIndex:
+    g = arrays.get
+    if method == "fake-words":
+        return FakeWordsIndex(
+            tf=arrays["tf"], idf=arrays["idf"], norm=arrays["norm"],
+            df=arrays["df"], scored=g("scored"), vectors=g("vectors"),
+        )
+    if method == "lexical-lsh":
+        return LshIndex(sig=arrays["sig"], vectors=g("vectors"))
+    if method == "kd-tree":
+        return KdTreeIndex(
+            reduced=arrays["reduced"],
+            reduction=_rebuild_reduction(config, arrays),
+            split_dim=g("split_dim"), split_val=g("split_val"), perm=g("perm"),
+            lifted=g("lifted"), vectors=g("vectors"),
+        )
+    if method == "bruteforce":
+        return FlatIndex(vectors=arrays["vectors"])
+    raise ValueError(f"unknown method {method!r}")

@@ -220,19 +220,13 @@ def scan_search(
     """Exact L2 NN in the reduced space as a streaming matmul:
     ||q - d||^2 = ||q||^2 + ||d||^2 - 2 q.d  (||q||^2 is rank-constant).
 
+    Thin wrapper over :class:`repro.core.pipeline.KdScanMatcher`.
     ``use_kernel`` routes through the fused streaming score->top-k kernel
     via the [2q; 1] x [d; -||d||^2] lift (docs/DESIGN.md §4): the (B, N)
     negated-distance matrix never materializes.  Default: kernel on TPU."""
-    from repro.kernels.fused_topk import ops as fused
+    from repro.core import pipeline as pl
 
-    if fused.resolve_use_kernel(use_kernel):
-        lifted = index.lifted if index.lifted is not None else fused.lift_l2(
-            index.reduced)
-        return fused.scan_l2_topk(lifted, q_reduced, k)
-    d_norm2 = jnp.sum(index.reduced**2, axis=-1)  # (N,)
-    dots = q_reduced @ index.reduced.T  # (B, N)
-    neg_d2 = 2.0 * dots - d_norm2[None, :]
-    return jax.lax.top_k(neg_d2, k)
+    return pl.KdScanMatcher()(index, q_reduced, k, use_kernel=use_kernel)
 
 
 def search(
@@ -245,12 +239,11 @@ def search(
     normalized: bool = False,
     use_kernel: Optional[bool] = None,
 ) -> Tuple[jax.Array, jax.Array]:
-    qr = reduce_queries(index, queries, normalized)
-    if backend == "tree":
-        d_s, d_i = tree_search(index, qr, depth)
-    else:
-        d_s, d_i = scan_search(index, qr, depth, use_kernel=use_kernel)
-    if not rerank:
-        return d_s[:, :k], d_i[:, :k]
-    assert index.vectors is not None
-    return bruteforce.rerank_exact(index.vectors, queries, d_i, k, normalized=normalized)
+    from repro.core import pipeline as pl
+
+    q = queries if normalized else bruteforce.l2_normalize(queries)
+    qr = reduce_queries(index, q, normalized=True)
+    matcher = pl.KdTreeMatcher() if backend == "tree" else pl.KdScanMatcher()
+    return pl.match_rerank(
+        matcher, index, qr, q, k, depth, rerank, use_kernel=use_kernel
+    )

@@ -15,7 +15,6 @@ here).
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional, Tuple
 
 import jax
@@ -127,9 +126,6 @@ def match_scores(
     return scores[:, :n]
 
 
-@functools.partial(
-    jax.jit, static_argnames=("k", "depth", "rerank", "use_kernel")
-)
 def search(
     index: LshIndex,
     sig_q: jax.Array,
@@ -139,18 +135,14 @@ def search(
     rerank: bool = False,
     use_kernel: Optional[bool] = None,
 ) -> Tuple[jax.Array, jax.Array]:
-    """Signature-collision search.  ``use_kernel`` streams the signature
-    matrix through the fused compare+reduce->top-k Pallas kernel
-    (docs/DESIGN.md §4) instead of materializing (B, N) collision counts.
-    Default: kernel on TPU, XLA elsewhere."""
-    from repro.kernels.fused_topk import ops as fused
+    """Signature-collision search — a thin wrapper over the shared staged
+    pipeline (:class:`repro.core.pipeline.LshMatcher` + exact rerank).
+    ``use_kernel`` streams the signature matrix through the fused
+    compare+reduce->top-k Pallas kernel (docs/DESIGN.md §4) instead of
+    materializing (B, N) collision counts.  Default: kernel on TPU."""
+    from repro.core import pipeline as pl
 
-    if fused.resolve_use_kernel(use_kernel):
-        d_s, d_i = fused.lsh_topk(sig_q, index.sig, depth)
-    else:
-        scores = match_scores(sig_q, index.sig).astype(jnp.float32)
-        d_s, d_i = jax.lax.top_k(scores, depth)
-    if not rerank:
-        return d_s[:, :k], d_i[:, :k]
-    assert index.vectors is not None and queries is not None
-    return bruteforce.rerank_exact(index.vectors, queries, d_i, k, normalized=True)
+    return pl.match_rerank(
+        pl.LshMatcher(), index, sig_q, queries, k, depth, rerank,
+        use_kernel=use_kernel,
+    )

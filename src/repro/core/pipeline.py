@@ -1,0 +1,470 @@
+"""Staged retrieval pipeline: one search architecture for every encoding.
+
+The paper's three Lucene encodings (fake words, lexical LSH, k-d trees) and
+the brute-force oracle all share one logical flow:
+
+    encode query  ->  match candidates  ->  [optional blockmax prune]
+                  ->  optional exact rerank
+
+This module makes that flow structural.  A :class:`SearchPipeline` composes
+three pluggable stages, each a frozen (hashable, jit-static) dataclass:
+
+  * **QueryEncoder** — ``encoder(index, q_norm) -> q_rep``: the method's
+    query representation (tf row / MinHash signature / reduced point /
+    identity for brute force).  Takes the index so reductions fitted at
+    build time (k-d tree PCA) travel with the index pytree.
+  * **Matcher** — ``matcher(index, q_rep, depth, *, bm=None, use_kernel=None)
+    -> (scores (B, d), ids (B, d))``: the approximate match phase.  Every
+    matcher has two realizations selected by ``use_kernel`` (default: the
+    fused streaming score->top-k Pallas kernel on TPU, the XLA reference
+    elsewhere — docs/DESIGN.md §4).  :class:`BlockMaxMatcher` is the pruning
+    stage: it consumes a ``BlockMaxIndex`` (``bm``) and routes the kept
+    blocks through the fused gathered kernel (docs/DESIGN.md §6).
+  * **Reranker** — ``reranker(index, queries, cand_ids, k)``: exact cosine
+    over the stored original vectors (the refinement the paper describes).
+
+Because stages take the index pytree as an explicit argument, the *same*
+stage objects run single-device under ``jit`` and per-shard under
+``shard_map`` (core/distributed.py), and a new encoding is a ~50-line
+encoder+matcher pair, not a new module.  ``repro.core.index.AnnIndex`` builds
+and owns a pipeline; the per-method ``search()`` functions are thin wrappers
+over these stages.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bruteforce
+from repro.core.types import (
+    BruteForceConfig,
+    FakeWordsConfig,
+    FlatIndex,
+    KdTreeConfig,
+    LexicalLshConfig,
+    SearchParams,
+)
+
+AnyConfig = Union[FakeWordsConfig, LexicalLshConfig, KdTreeConfig, BruteForceConfig]
+
+
+# --------------------------------------------------------------------------
+# Query encoders
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TfRowEncoder:
+    """Fake-words: sign-split quantized term-frequency row (B, 2m) int32."""
+
+    config: FakeWordsConfig
+
+    def __call__(self, index, q_norm: jax.Array) -> jax.Array:
+        from repro.core import fakewords
+
+        return fakewords.encode_queries(q_norm, self.config, normalized=True)
+
+
+@dataclasses.dataclass(frozen=True)
+class MinHashEncoder:
+    """Lexical LSH: MinHash signature (B, h*b) uint32."""
+
+    config: LexicalLshConfig
+
+    def __call__(self, index, q_norm: jax.Array) -> jax.Array:
+        from repro.core import lexical_lsh
+
+        return lexical_lsh.encode(q_norm, self.config)
+
+
+@dataclasses.dataclass(frozen=True)
+class ReducedPointEncoder:
+    """k-d tree: project through the reduction fitted at build time."""
+
+    def __call__(self, index, q_norm: jax.Array) -> jax.Array:
+        from repro.core import kdtree
+
+        return kdtree.reduce_queries(index, q_norm, normalized=True)
+
+
+@dataclasses.dataclass(frozen=True)
+class IdentityEncoder:
+    """Brute force: the unit-normalized query itself."""
+
+    def __call__(self, index, q_norm: jax.Array) -> jax.Array:
+        return q_norm
+
+
+# --------------------------------------------------------------------------
+# Matchers
+# --------------------------------------------------------------------------
+
+
+def _use_kernel(use_kernel: Optional[bool]) -> bool:
+    from repro.kernels.fused_topk import ops as fused
+
+    return fused.resolve_use_kernel(use_kernel)
+
+
+def _streaming_topk_tiled(
+    score_tile_fn, n_local: int, batch: int, depth: int, tile: int,
+    unroll: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """Streaming top-d over document tiles with a running merge: the
+    (B, n_local) score matrix never materializes in HBM (§Perf C2).  The XLA
+    realization of the fused kernel's memory behavior, used for shards too
+    large for a dense GEMM when the Pallas kernel is off.
+
+    score_tile_fn(start) -> (B, tile) scores for docs [start, start+tile).
+    Ties break on the lowest doc id: earlier tiles enter the merge first and
+    ``lax.top_k`` prefers the earlier position on equal scores.
+    """
+    n_tiles = -(-n_local // tile)
+    d = min(depth, tile)
+    init_s = jnp.full((batch, depth), -jnp.inf, jnp.float32)
+    init_i = jnp.full((batch, depth), -1, jnp.int32)
+
+    def body(carry, t_idx):
+        best_s, best_i = carry
+        start = t_idx * tile
+        s = score_tile_fn(start).astype(jnp.float32)  # (B, tile)
+        ids = start + jnp.arange(tile, dtype=jnp.int32)[None, :]
+        valid = ids < n_local
+        s = jnp.where(valid, s, -jnp.inf)
+        loc_s, pos = jax.lax.top_k(s, d)
+        loc_i = jnp.take_along_axis(jnp.broadcast_to(ids, s.shape), pos, axis=-1)
+        all_s = jnp.concatenate([best_s, loc_s], axis=-1)
+        all_i = jnp.concatenate([best_i, loc_i], axis=-1)
+        top_s, top_pos = jax.lax.top_k(all_s, depth)
+        return (top_s, jnp.take_along_axis(all_i, top_pos, axis=-1)), None
+
+    (best_s, best_i), _ = jax.lax.scan(
+        body, (init_s, init_i), jnp.arange(n_tiles, dtype=jnp.int32),
+        unroll=unroll,  # analysis mode: HLO cost analysis counts a while
+        #                 body once; roofline lowers the unrolled loop
+    )
+    return best_s, best_i
+
+
+@dataclasses.dataclass(frozen=True)
+class FakeWordsMatcher:
+    """Classic (tf-idf) or dot (quantized integer) scoring over the stored
+    term-frequency matrix; df-prune keep-mask folded into the query operand.
+
+    ``score_tile`` (when set) bounds the XLA fallback's working set: shards
+    larger than ``2 * score_tile`` docs stream tile-by-tile with a running
+    top-d merge instead of materializing the dense (B, N) score matrix.
+    """
+
+    scoring: str = "classic"
+    df_max_ratio: float = 1.0
+    signed_store: bool = False
+    score_tile: Optional[int] = None
+    tile_unroll: bool = False
+
+    def operands(self, index, q_tf: jax.Array, dtype) -> Tuple[jax.Array, jax.Array]:
+        """(query operand, stored matrix) for this scoring mode; ``dtype``
+        is the dot-mode query dtype (int8 for the MXU kernel, int32 for the
+        XLA einsum)."""
+        from repro.core import fakewords
+
+        if self.scoring == "classic":
+            return fakewords.classic_query(index, q_tf, self.df_max_ratio), index.scored
+        if self.signed_store:
+            # index.tf holds the SIGNED (N, m) matrix; fold the sign-split
+            # keep mask down to m terms.
+            keep = fakewords.df_prune_mask(
+                index.df, index.num_docs, self.df_max_ratio)
+            m = index.tf.shape[1]
+            keep_m = keep[:m] & keep[m:] if keep.shape[0] == 2 * m else keep[:m]
+            qv = (fakewords.signed_query(q_tf) * keep_m).astype(dtype)
+            return qv, index.tf
+        return (
+            fakewords.dot_query(index, q_tf, self.df_max_ratio, dtype=dtype),
+            index.tf,
+        )
+
+    def _dense_scores(self, qv: jax.Array, docs: jax.Array) -> jax.Array:
+        if self.scoring == "classic":
+            return jnp.einsum(
+                "bt,nt->bn", qv, docs, preferred_element_type=jnp.float32
+            )
+        return jnp.einsum(
+            "bt,nt->bn", qv, docs.astype(jnp.int32),
+            preferred_element_type=jnp.int32,
+        ).astype(jnp.float32)
+
+    def __call__(
+        self, index, q_tf: jax.Array, depth: int,
+        bm=None, use_kernel: Optional[bool] = None,
+    ) -> Tuple[jax.Array, jax.Array]:
+        from repro.kernels.fused_topk import ops as fused
+
+        d = min(depth, index.num_docs)
+        if _use_kernel(use_kernel):
+            qv, docs = self.operands(index, q_tf, dtype=jnp.int8)
+            return fused.fused_topk(qv, docs, d)
+        qv, docs = self.operands(index, q_tf, dtype=jnp.int32)
+        if self.score_tile is not None and index.num_docs > 2 * self.score_tile:
+            def tile_scores(start):
+                rows = jax.lax.dynamic_slice_in_dim(
+                    docs, start, self.score_tile, axis=0)
+                return self._dense_scores(qv, rows)
+
+            return _streaming_topk_tiled(
+                tile_scores, index.num_docs, q_tf.shape[0], d,
+                self.score_tile, unroll=self.tile_unroll,
+            )
+        return jax.lax.top_k(self._dense_scores(qv, docs), d)
+
+
+@dataclasses.dataclass(frozen=True)
+class LshMatcher:
+    """MinHash signature-collision counting (integer compare+reduce)."""
+
+    def __call__(
+        self, index, sig_q: jax.Array, depth: int,
+        bm=None, use_kernel: Optional[bool] = None,
+    ) -> Tuple[jax.Array, jax.Array]:
+        from repro.core import lexical_lsh
+        from repro.kernels.fused_topk import ops as fused
+
+        d = min(depth, index.num_docs)
+        if _use_kernel(use_kernel):
+            return fused.lsh_topk(sig_q, index.sig, d)
+        scores = lexical_lsh.match_scores(sig_q, index.sig).astype(jnp.float32)
+        return jax.lax.top_k(scores, d)
+
+
+@dataclasses.dataclass(frozen=True)
+class KdScanMatcher:
+    """Exact L2 NN in the reduced space as a streaming matmul (the
+    TPU-idiomatic equivalent of the paper's BKD tree; kdtree.py §b)."""
+
+    def __call__(
+        self, index, q_reduced: jax.Array, depth: int,
+        bm=None, use_kernel: Optional[bool] = None,
+    ) -> Tuple[jax.Array, jax.Array]:
+        from repro.kernels.fused_topk import ops as fused
+
+        d = min(depth, index.num_docs)
+        if _use_kernel(use_kernel):
+            lifted = (
+                index.lifted if index.lifted is not None
+                else fused.lift_l2(index.reduced)
+            )
+            return fused.scan_l2_topk(lifted, q_reduced, d)
+        d_norm2 = jnp.sum(index.reduced**2, axis=-1)  # (N,)
+        dots = q_reduced @ index.reduced.T  # (B, N)
+        neg_d2 = 2.0 * dots - d_norm2[None, :]
+        return jax.lax.top_k(neg_d2, d)
+
+
+@dataclasses.dataclass(frozen=True)
+class KdTreeMatcher:
+    """Faithful batched k-d tree DFS (the paper's data structure; documented
+    TPU-hostile, kept for fidelity).  Ignores ``use_kernel``."""
+
+    def __call__(
+        self, index, q_reduced: jax.Array, depth: int,
+        bm=None, use_kernel: Optional[bool] = None,
+    ) -> Tuple[jax.Array, jax.Array]:
+        from repro.core import kdtree
+
+        return kdtree.tree_search(index, q_reduced, min(depth, index.num_docs))
+
+
+@dataclasses.dataclass(frozen=True)
+class CosineMatcher:
+    """Exact cosine over the stored unit vectors (brute-force oracle)."""
+
+    def __call__(
+        self, index, q_norm: jax.Array, depth: int,
+        bm=None, use_kernel: Optional[bool] = None,
+    ) -> Tuple[jax.Array, jax.Array]:
+        from repro.kernels.fused_topk import ops as fused
+
+        d = min(depth, index.num_docs)
+        if _use_kernel(use_kernel):
+            return fused.cosine_topk(index.vectors, q_norm, d)
+        scores = q_norm @ index.vectors.T  # (B, N)
+        return jax.lax.top_k(scores, d)
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockMaxMatcher:
+    """Two-stage blockmax pruning (docs/DESIGN.md §6) as a matcher stage:
+    optimistic block-bound pass -> keep ``n_keep`` blocks -> exact scoring of
+    the gathered rows through the fused gathered streaming top-k kernel.
+    Mode (classic / dot-int8 / LSH presence bitmaps) travels with ``bm``."""
+
+    n_keep: int
+
+    def __call__(
+        self, index, q_rep: jax.Array, depth: int,
+        bm=None, use_kernel: Optional[bool] = None,
+    ) -> Tuple[jax.Array, jax.Array]:
+        from repro.core import blockmax
+
+        assert bm is not None, "BlockMaxMatcher needs a BlockMaxIndex (bm=)"
+        return blockmax.pruned_topk(
+            index, bm, q_rep, self.n_keep, depth, use_kernel=use_kernel
+        )
+
+
+# --------------------------------------------------------------------------
+# Reranker
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ExactCosineReranker:
+    """Gather the depth-d candidates' original vectors, exact cosine, top-k
+    (id -1 = padding, masked to -inf)."""
+
+    def __call__(
+        self, index, queries: jax.Array, cand_ids: jax.Array, k: int
+    ) -> Tuple[jax.Array, jax.Array]:
+        assert index.vectors is not None, (
+            "rerank requires the index to keep original vectors "
+            "(build with keep_vectors=True)"
+        )
+        return bruteforce.rerank_exact(
+            index.vectors, queries, cand_ids, k, normalized=True
+        )
+
+
+# --------------------------------------------------------------------------
+# The pipeline
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchPipeline:
+    """encode -> match [-> blockmax prune] -> optional exact rerank.
+
+    Frozen and hashable: a pipeline is a jit-static description of *how* to
+    search; all array state stays in the index pytree (and optional ``bm``)
+    passed to every call — which is exactly what lets the same pipeline run
+    per-shard under ``shard_map``.
+    """
+
+    encoder: Any
+    matcher: Any
+    reranker: Any = ExactCosineReranker()
+
+    def encode(self, index, queries: jax.Array) -> jax.Array:
+        """Unit-normalize + method-specific query representation."""
+        return self.encoder(index, bruteforce.l2_normalize(jnp.asarray(queries)))
+
+    def search(
+        self,
+        index,
+        queries: jax.Array,
+        params: SearchParams = SearchParams(),
+        bm=None,
+        use_kernel: Optional[bool] = None,
+    ) -> Tuple[jax.Array, jax.Array]:
+        """End-to-end staged search (jitted; pipeline and params static)."""
+        q_norm = bruteforce.l2_normalize(jnp.asarray(queries))
+        return _pipeline_search(self, index, q_norm, params, bm, use_kernel)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("pipe", "params", "use_kernel")
+)
+def _pipeline_search(
+    pipe: SearchPipeline,
+    index,
+    q_norm: jax.Array,
+    params: SearchParams,
+    bm=None,
+    use_kernel: Optional[bool] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    q_rep = pipe.encoder(index, q_norm)
+    matcher = pipe.matcher
+    d_s, d_i = matcher(index, q_rep, params.depth, bm=bm, use_kernel=use_kernel)
+    if not params.rerank:
+        return d_s[:, : params.k], d_i[:, : params.k]
+    return pipe.reranker(index, q_norm, d_i, params.k)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("matcher", "k", "depth", "rerank", "use_kernel"),
+)
+def match_rerank(
+    matcher,
+    index,
+    q_rep: jax.Array,
+    queries: Optional[jax.Array],
+    k: int,
+    depth: int,
+    rerank: bool,
+    bm=None,
+    use_kernel: Optional[bool] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Match + optional exact rerank from an already-encoded query — the
+    shared tail of every per-method ``search()`` wrapper (queries must be
+    unit-normalized when reranking)."""
+    d_s, d_i = matcher(index, q_rep, depth, bm=bm, use_kernel=use_kernel)
+    if not rerank:
+        return d_s[:, :k], d_i[:, :k]
+    assert queries is not None
+    return ExactCosineReranker()(index, queries, d_i, k)
+
+
+# --------------------------------------------------------------------------
+# Builders: every method is a stage configuration
+# --------------------------------------------------------------------------
+
+
+def make_encoder(config: AnyConfig):
+    if isinstance(config, FakeWordsConfig):
+        return TfRowEncoder(config)
+    if isinstance(config, LexicalLshConfig):
+        return MinHashEncoder(config)
+    if isinstance(config, KdTreeConfig):
+        return ReducedPointEncoder()
+    if isinstance(config, BruteForceConfig):
+        return IdentityEncoder()
+    raise TypeError(f"unknown config {type(config)}")
+
+
+def make_matcher(
+    config: AnyConfig,
+    score_tile: Optional[int] = None,
+    tile_unroll: bool = False,
+):
+    """The dense match stage for a method config.  ``score_tile`` activates
+    the tiled-streaming XLA fallback for huge (sharded) fake-words corpora."""
+    if isinstance(config, FakeWordsConfig):
+        return FakeWordsMatcher(
+            scoring=config.scoring,
+            df_max_ratio=config.df_max_ratio,
+            signed_store=config.signed_store,
+            score_tile=score_tile,
+            tile_unroll=tile_unroll,
+        )
+    if isinstance(config, LexicalLshConfig):
+        return LshMatcher()
+    if isinstance(config, KdTreeConfig):
+        return KdTreeMatcher() if config.backend == "tree" else KdScanMatcher()
+    if isinstance(config, BruteForceConfig):
+        return CosineMatcher()
+    raise TypeError(f"unknown config {type(config)}")
+
+
+def build_pipeline(
+    config: AnyConfig,
+    score_tile: Optional[int] = None,
+    tile_unroll: bool = False,
+) -> SearchPipeline:
+    return SearchPipeline(
+        encoder=make_encoder(config),
+        matcher=make_matcher(config, score_tile, tile_unroll),
+    )

@@ -54,6 +54,12 @@ class FakeWordsConfig:
             raise ValueError(f"scoring must be 'classic' or 'dot', got {self.scoring}")
         if self.signed_store and self.scoring != "dot":
             raise ValueError("signed_store requires scoring='dot'")
+        # Canonicalize to a numpy dtype so configs compare/hash equal however
+        # the dtype was spelled (jnp.int8 vs np.dtype("int8") vs "int8") —
+        # load()ed configs must equal built ones.
+        import numpy as _np
+
+        object.__setattr__(self, "store_dtype", _np.dtype(self.store_dtype))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -107,6 +113,13 @@ class KdTreeConfig:
             raise ValueError(f"unknown reduction {self.reduction}")
         if self.backend not in ("tree", "scan"):
             raise ValueError(f"unknown backend {self.backend}")
+
+
+@dataclasses.dataclass(frozen=True)
+class BruteForceConfig:
+    """Exact cosine scan over the stored vectors — the paper's brute-force
+    oracle as a first-class method.  Identity query encoding; the match phase
+    is the fused streaming cosine top-k (or its XLA reference)."""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -216,6 +229,29 @@ class KdTreeIndex:
     @property
     def num_docs(self) -> int:
         return self.reduced.shape[0]
+
+    def nbytes(self) -> int:
+        total = 0
+        for leaf in jax.tree_util.tree_leaves(self):
+            total += leaf.size * leaf.dtype.itemsize
+        return total
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class FlatIndex:
+    """Brute-force "index": just the unit-normalized original vectors.
+
+    vectors: (N, dim) float32.  Exists so the exact-cosine oracle rides the
+    same AnnIndex -> SearchPipeline -> AnnService path as the three paper
+    encodings (one retrieval architecture for every method).
+    """
+
+    vectors: jax.Array
+
+    @property
+    def num_docs(self) -> int:
+        return self.vectors.shape[0]
 
     def nbytes(self) -> int:
         total = 0

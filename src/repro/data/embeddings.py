@@ -2,7 +2,7 @@
 
 No internet in this container, so the paper's corpora (word2vec GoogleNews,
 GloVe Twitter — both 300-d) are synthesized with matched statistics
-(DESIGN.md §7):
+(validated in benchmarks/table1.py; DESIGN.md §6):
 
   * power-law singular-value spectrum sigma_i ~ i^-alpha (word embedding
     matrices empirically show alpha ~ 1);

@@ -1,26 +1,33 @@
-"""Batched ANN query service over a sharded fake-words index.
+"""Batched ANN query service over any AnnIndex — single-device or sharded.
 
 The serving-side realization of the paper: a query stream is micro-batched
-(latency/throughput knob), encoded to fake-words term vectors, and searched
-against the pod-sharded index (core/distributed.py: local GEMM + local
-top-d + rerank + tiny all-gather merge).  This is the Lucene
-query-fan-out/merge architecture, one jit'd function per batch.
+(latency/throughput knob), encoded through the index's pipeline encoder
+(tf row / MinHash signature / reduced point / identity), and searched
+through the SAME staged pipeline as offline search — single-device under
+``jit``, or pod-sharded via ``core/distributed.py`` (local match stage +
+local top-d + local rerank + tiny all-gather merge, the Lucene
+query-fan-out/merge architecture), one jit'd function per batch.
 
-Also provides the single-node service used by examples and benchmarks.
+Every encoding — fake words, lexical LSH, k-d scan, brute force — serves
+through one code path; there are no per-method branches here.  An index
+built offline ships in via ``AnnIndex.load`` (see ``core/index.py``).
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import time
-from typing import List, Optional, Sequence, Tuple
+from typing import Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh
 
-from repro.core import blockmax, bruteforce, distributed, fakewords
-from repro.core.types import FakeWordsConfig, FakeWordsIndex
+from repro.core import bruteforce, distributed
+from repro.core import pipeline as pl
+from repro.core.index import AnnIndex, AnyConfig, AnyIndex
+from repro.core.types import FakeWordsIndex, LshIndex
 
 
 @dataclasses.dataclass
@@ -36,52 +43,90 @@ class AnnServiceConfig:
     # Two-stage blockmax pruning (docs/DESIGN.md §6): keep this many blocks
     # per query (per shard when sharded) in the match phase.  None disables.
     # Cuts streamed index bytes ~(1 - kept/total) at a small recall cost.
+    # Fake-words and LSH indexes only.
     blockmax_keep: Optional[int] = None
     blockmax_block_size: int = 256
+    # Latency ring-buffer length for stats() p50/p99 (per-batch wall times).
+    latency_window: int = 1024
 
 
 class AnnService:
-    """Single- or multi-device fake-words search service."""
+    """Single- or multi-device search service over any AnnIndex."""
 
     def __init__(
         self,
-        index: FakeWordsIndex,
-        config: FakeWordsConfig,
-        service: AnnServiceConfig,
+        index: Union[AnnIndex, AnyIndex],
+        config: Optional[AnyConfig] = None,
+        service: Optional[AnnServiceConfig] = None,
         mesh: Optional[Mesh] = None,
         shard_axes: Sequence[str] = (),
     ):
-        self.index = index
-        self.config = config
-        self.scfg = service
+        if isinstance(index, AnnIndex):
+            # AnnService(ann) / AnnService(ann, service_cfg) forms.
+            if service is None and isinstance(config, AnnServiceConfig):
+                config, service = None, config
+            if config is not None and config != index.config:
+                raise ValueError(
+                    "method config passed alongside an AnnIndex disagrees "
+                    f"with the index's own config ({config} != {index.config})"
+                )
+            ann = index
+        else:
+            ann = AnnIndex(config=config, index=index)
+        self.ann = ann
+        self.index = ann.index      # back-compat aliases
+        self.config = ann.config
+        self.scfg = service if service is not None else AnnServiceConfig()
         self.mesh = mesh
+        # Effective serving knobs: the service config overrides, else the
+        # index-level settings (an AnnIndex built/loaded with blockmax_keep
+        # or use_kernel serves with them by default).
+        if self.scfg.blockmax_keep is not None:
+            self._bm_keep = self.scfg.blockmax_keep
+            self._bm_block = self.scfg.blockmax_block_size
+        else:
+            self._bm_keep = ann.blockmax_keep
+            self._bm_block = ann.blockmax_block_size
+        self._uk = (
+            self.scfg.use_kernel if self.scfg.use_kernel is not None
+            else ann.use_kernel
+        )
         self._bm = None
-        if service.blockmax_keep is not None:
+        if self._bm_keep is not None:
+            if not isinstance(ann.index, (FakeWordsIndex, LshIndex)):
+                raise ValueError(
+                    f"blockmax pruning is not supported for {ann.method}"
+                )
+            signed = getattr(ann.config, "signed_store", False)
             if mesh is not None:
                 self._bm = distributed.build_blockmax_sharded(
-                    mesh, index, shard_axes, service.blockmax_block_size,
-                    signed_store=config.signed_store,
+                    mesh, ann.index, shard_axes, self._bm_block,
+                    signed_store=signed,
                 )
+            elif ann.bm is not None and ann.bm.block_size == self._bm_block:
+                self._bm = ann.bm
             else:
+                from repro.core import blockmax
+
                 self._bm = blockmax.build_blockmax(
-                    index, service.blockmax_block_size,
-                    signed_store=config.signed_store,
+                    ann.index, self._bm_block, signed_store=signed,
                 )
         if mesh is not None:
             self._search = distributed.make_sharded_search(
-                mesh, config, shard_axes,
-                k=service.k, depth=service.depth, rerank=service.rerank,
-                use_kernel=service.use_kernel,
-                blockmax_keep=service.blockmax_keep,
+                mesh, ann.config, shard_axes,
+                k=self.scfg.k, depth=self.scfg.depth, rerank=self.scfg.rerank,
+                use_kernel=self._uk,
+                blockmax_keep=self._bm_keep,
             )
         else:
             self._search = None
         self.queries_served = 0
         self.batches = 0
+        self._lat_s = collections.deque(maxlen=self.scfg.latency_window)
 
-    def _encode(self, queries: jax.Array) -> Tuple[jax.Array, jax.Array]:
-        q = bruteforce.l2_normalize(queries)
-        return fakewords.encode_queries(q, self.config, normalized=True), q
+    def _matcher(self):
+        """The effective match stage for single-device serving."""
+        return self.ann.matcher_for(self._bm, self._bm_keep)
 
     def search_batch(self, queries: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
         """(B, dim) -> (scores (B,k), ids (B,k)); pads to max_batch so the
@@ -95,44 +140,41 @@ class AnnService:
             )
         out_s, out_i = [], []
         for i in range(0, queries.shape[0], mb):
-            chunk = jnp.asarray(queries[i : i + mb])
-            q_tf, q = self._encode(chunk)
+            t0 = time.perf_counter()
+            q = bruteforce.l2_normalize(jnp.asarray(queries[i : i + mb]))
+            q_rep = self.ann.pipeline.encoder(self.ann.index, q)
             if self._search is not None:
                 if self._bm is not None:
-                    s, ids = self._search(self.index, self._bm, q_tf, q)
+                    s, ids = self._search(self.ann.index, self._bm, q_rep, q)
                 else:
-                    s, ids = self._search(self.index, q_tf, q)
-            elif self._bm is not None:
-                d_s, d_i = blockmax.pruned_search(
-                    self.index, self._bm, q_tf,
-                    n_keep=self.scfg.blockmax_keep, depth=self.scfg.depth,
-                    use_kernel=self.scfg.use_kernel,
-                )
-                if self.scfg.rerank:
-                    s, ids = bruteforce.rerank_exact(
-                        self.index.vectors, q, d_i, self.scfg.k,
-                        normalized=True,
-                    )
-                else:
-                    s, ids = d_s[:, : self.scfg.k], d_i[:, : self.scfg.k]
+                    s, ids = self._search(self.ann.index, q_rep, q)
             else:
-                s, ids = fakewords.search(
-                    self.index, q_tf, q,
-                    k=self.scfg.k, depth=self.scfg.depth,
-                    scoring=self.config.scoring, rerank=self.scfg.rerank,
-                    df_max_ratio=self.config.df_max_ratio,
-                    use_kernel=self.scfg.use_kernel,
+                s, ids = pl.match_rerank(
+                    self._matcher(), self.ann.index, q_rep, q,
+                    self.scfg.k, self.scfg.depth, self.scfg.rerank,
+                    bm=self._bm, use_kernel=self._uk,
                 )
-            out_s.append(np.asarray(s))
-            out_i.append(np.asarray(ids))
+            out_s.append(np.asarray(s))   # np.asarray blocks: wall time
+            out_i.append(np.asarray(ids))  # below covers device compute
             self.batches += 1
+            self._lat_s.append(time.perf_counter() - t0)
         self.queries_served += b
         return np.concatenate(out_s)[:b], np.concatenate(out_i)[:b]
 
+    def reset_latency(self) -> None:
+        """Drop recorded batch latencies (e.g. after a warmup/compile batch,
+        whose wall time is orders of magnitude above steady state and would
+        otherwise dominate the p99)."""
+        self._lat_s.clear()
+
     def stats(self) -> dict:
+        lat_ms = np.asarray(self._lat_s, np.float64) * 1e3
         return {
             "queries": self.queries_served,
             "batches": self.batches,
-            "index_bytes": self.index.nbytes(),
-            "num_docs": self.index.num_docs,
+            "index_bytes": self.ann.nbytes(),
+            "num_docs": self.ann.num_docs,
+            "method": self.ann.method,
+            "lat_p50_ms": round(float(np.percentile(lat_ms, 50)), 3) if lat_ms.size else None,
+            "lat_p99_ms": round(float(np.percentile(lat_ms, 99)), 3) if lat_ms.size else None,
         }
