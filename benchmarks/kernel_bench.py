@@ -222,6 +222,94 @@ def pipeline_latency(
     return rows
 
 
+def build_bench(n_docs: int, dim: int) -> List[Dict]:
+    """Build-time rows, local vs mesh-sharded, for every encoding through
+    the staged BuildPipeline (docs/DESIGN.md §8).  The sharded build runs
+    the SAME stages row-parallel under ``shard_map`` over every available
+    device (1 device still exercises the psum path)."""
+    from repro.core import builder
+
+    rng = np.random.default_rng(0)
+    n_dev = len(jax.devices())
+    n_docs -= n_docs % n_dev  # divisibility for the doc shards
+    vecs = jnp.asarray(rng.normal(size=(n_docs, dim)).astype(np.float32))
+    mesh = jax.make_mesh((n_dev,), ("data",))
+    rows: List[Dict] = []
+    for cfg in (
+        FakeWordsConfig(quantization=50),
+        LexicalLshConfig(buckets=300, hashes=1),
+        KdTreeConfig(dims=8, backend="scan"),
+        BruteForceConfig(),
+    ):
+        tag = type(cfg).__name__.replace("Config", "")
+        bp = builder.make_build_pipeline(cfg)
+        # Jit BOTH sides so the rows compare steady-state compiled builds
+        # (_time's warmup call pays each compile); an eager local build
+        # would otherwise lose on per-op dispatch, not on sharding.
+        local_fn = jax.jit(bp.build_local)
+        sharded_fn = jax.jit(bp.sharded_build_fn(mesh, ("data",), n_docs))
+
+        def local(fn=local_fn):
+            idx = fn(vecs)
+            jax.block_until_ready(jax.tree_util.tree_leaves(idx))
+            return idx
+
+        def sharded(fn=sharded_fn):
+            idx = fn(vecs)
+            jax.block_until_ready(jax.tree_util.tree_leaves(idx))
+            return idx
+
+        dt_l = _time(local, n=2)
+        dt_s = _time(sharded, n=2)
+        rows.append({
+            "kernel": f"build({tag}) local", "us_per_call": dt_l * 1e6,
+            "docs_per_s": n_docs / dt_l,
+        })
+        rows.append({
+            "kernel": f"build({tag}) sharded x{n_dev}",
+            "us_per_call": dt_s * 1e6, "docs_per_s": n_docs / dt_s,
+        })
+    return rows
+
+
+def rerank_bench(
+    n_docs: int, dim: int, batch: int, depth: int = 100, k: int = 10
+) -> Tuple[List[Dict], Dict]:
+    """fp32 vs int8 rerank store: latency, gather bytes, recall@10 against
+    the exact oracle.  The int8 gather moves ~(4 dim)/(dim + 4) ~= 4x fewer
+    bytes per candidate (docs/DESIGN.md §8); the measured recall delta is
+    the price, bounded by the ||q||_1 * scale/2 score-error bound."""
+    from repro.core import eval as ev
+
+    rng = np.random.default_rng(0)
+    vecs = jnp.asarray(rng.normal(size=(n_docs, dim)).astype(np.float32))
+    queries = vecs[:batch] + 0.01 * jnp.asarray(
+        rng.normal(size=(batch, dim)).astype(np.float32))
+    uk = None if jax.default_backend() == "tpu" else False
+    _, gt = bruteforce.exact_topk(vecs, queries, k, use_kernel=uk)
+    cfg = FakeWordsConfig(quantization=50)
+    rows: List[Dict] = []
+    summary: Dict = {"depth": depth}
+    for store in ("exact", "int8"):
+        ann = AnnIndex.build(vecs, cfg, rerank_store=store, use_kernel=uk)
+        dt = _time(lambda a=ann: a.search(queries, k=k, depth=depth, rerank=True))
+        _, ids = ann.search(queries, k=k, depth=depth, rerank=True)
+        recall = float(ev.recall_at(gt, ids))
+        # Gather bytes per batch: depth candidate rows per query.
+        per_row = dim * 4 if store == "exact" else dim + 4
+        gather_mb = batch * depth * per_row / 1e6
+        rows.append({
+            "kernel": f"rerank({store}) gather+cosine+topk",
+            "us_per_call": dt * 1e6, "gather_mb": gather_mb,
+            "recall_at_10": recall,
+        })
+        summary[store] = {"gather_mb": gather_mb, "recall": recall,
+                          "us": dt * 1e6}
+    summary["byte_cut"] = summary["exact"]["gather_mb"] / summary["int8"]["gather_mb"]
+    summary["recall_delta"] = summary["exact"]["recall"] - summary["int8"]["recall"]
+    return rows, summary
+
+
 def run(n_docs: int = 50_000, dim: int = 300, batch: int = 64) -> List[Dict]:
     rng = np.random.default_rng(0)
     vecs = jnp.asarray(rng.normal(size=(n_docs, dim)).astype(np.float32))
@@ -302,7 +390,20 @@ def main(n_docs: int = 50_000, dim: int = 300, batch: int = 64):
             f"({s['byte_cut']:.1f}x byte cut; wall-clock {s['speedup']:.2f}x"
             f"{' on-TPU' if p_summary['on_tpu'] else ' via XLA ref'})"
         )
-    return rows + pl_rows + f_rows + p_rows, {**summary, "blockmax": p_summary}
+    b_rows = build_bench(min(n_docs, 20_000), dim)
+    _print_rows(b_rows)
+    r_rows, r_summary = rerank_bench(n_docs, dim, batch)
+    _print_rows(r_rows)
+    print(
+        f"rerank[int8]: gathers {r_summary['int8']['gather_mb']:.2f} MB vs "
+        f"{r_summary['exact']['gather_mb']:.2f} MB fp32 "
+        f"({r_summary['byte_cut']:.1f}x fewer rerank gather bytes; "
+        f"recall@10 delta {r_summary['recall_delta']:+.4f})"
+    )
+    return (
+        rows + pl_rows + f_rows + p_rows + b_rows + r_rows,
+        {**summary, "blockmax": p_summary, "rerank": r_summary},
+    )
 
 
 if __name__ == "__main__":

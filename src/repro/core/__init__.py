@@ -8,7 +8,9 @@ from repro.core.types import (  # noqa: F401
     KdTreeIndex,
     LexicalLshConfig,
     LshIndex,
+    QuantizedStore,
     SearchParams,
 )
 from repro.core.index import AnnIndex  # noqa: F401
 from repro.core.pipeline import SearchPipeline  # noqa: F401
+from repro.core.builder import BuildPipeline, make_build_pipeline  # noqa: F401

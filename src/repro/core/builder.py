@@ -1,0 +1,373 @@
+"""Staged index construction: one build architecture for every encoding
+(docs/DESIGN.md §8) — the build-side mirror of ``core/pipeline.py``.
+
+The paper's three Lucene encodings and the brute-force oracle share one
+logical build recipe:
+
+    normalize rows -> transform vectors     (tf rows / MinHash signatures /
+                                             fitted reduction -> points)
+                   -> assemble postings     (index container + global stats)
+                   -> attach rerank store   (fp32 originals / int8+scale /
+                                             none)
+
+A :class:`BuildPipeline` makes that recipe structural.  Each stage is a
+frozen (hashable, jit-static) dataclass:
+
+  * **VectorTransform** — ``transform(v_norm, axes=None, n_total=None) ->
+    (realization, fitted_model_or_None)``: the method's document
+    realization.  Row-local for fake words (quantized tf rows), lexical LSH
+    (MinHash signatures) and brute force (identity); the k-d tree's
+    reduction fits from ``psum``-able moments (``core/pca.py``) so with
+    ``axes`` set every shard fits the IDENTICAL model from global
+    statistics while its rows stay shard-resident.
+  * **Postings** — ``postings(realization, model, v_norm, store, n_total,
+    axes=None) -> index``: assembles the index container.  Global
+    statistics (fake-words df -> idf) are ``psum``-ed under ``axes`` so a
+    sharded build matches the single-host build bit-for-bit.
+  * **RerankStore** — ``store(v_norm) -> {"vectors": ..., "vq": ...}``: the
+    exact-rerank operand.  :class:`ExactRerankStore` keeps the fp32
+    originals; :class:`QuantizedRerankStore` keeps an int8 + per-doc-scale
+    :class:`repro.core.types.QuantizedStore` (~4x fewer rerank gather
+    bytes, score error bounded by ``||q||_1 * scale/2``);
+    :class:`NoRerankStore` keeps neither.  Row-local, so it shards freely.
+
+Because every stage takes ``axes`` explicitly, the SAME pipeline object
+builds single-host (``build_local``) or row-parallel under ``shard_map``
+over a mesh (``build_sharded``) — no stage ever materializes the full
+corpus on one shard, and the per-method ``build()`` functions are thin
+wrappers over these stages (exact parity), the same way PR 3's
+SearchPipeline absorbed the per-method ``search()`` functions.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bruteforce, pca
+from repro.core.types import (
+    BruteForceConfig,
+    FakeWordsConfig,
+    FakeWordsIndex,
+    FlatIndex,
+    KdTreeConfig,
+    KdTreeIndex,
+    LexicalLshConfig,
+    LshIndex,
+    QuantizedStore,
+)
+
+AnyConfig = Union[FakeWordsConfig, LexicalLshConfig, KdTreeConfig, BruteForceConfig]
+
+RERANK_STORES = ("exact", "int8", "none")
+
+_TREE_BUILD_MSG = (
+    "kd-tree 'tree' backend builds host-side (numpy) and cannot shard on "
+    "documents; use backend='scan' (identical results, docs/DESIGN.md §3)"
+)
+
+
+# --------------------------------------------------------------------------
+# Vector transforms
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TfTransform:
+    """Fake words: sign-split quantized term-frequency rows (row-local)."""
+
+    config: FakeWordsConfig
+
+    def __call__(self, v: jax.Array, axes=None, n_total=None):
+        from repro.core import fakewords
+
+        return fakewords.encode(v, self.config.quantization, self.config.store_dtype), None
+
+
+@dataclasses.dataclass(frozen=True)
+class MinHashTransform:
+    """Lexical LSH: MinHash signatures (row-local)."""
+
+    config: LexicalLshConfig
+
+    def __call__(self, v: jax.Array, axes=None, n_total=None):
+        from repro.core import lexical_lsh
+
+        return lexical_lsh.encode(v, self.config), None
+
+
+@dataclasses.dataclass(frozen=True)
+class ReductionTransform:
+    """k-d tree: fit PPA/PCA from (psum-able) global moments, project rows.
+    The fitted model rides along as the transform's aux output and lands in
+    the index pytree (queries project through it at search time)."""
+
+    config: KdTreeConfig
+
+    def __call__(self, v: jax.Array, axes=None, n_total=None):
+        model, reduced = pca.fit_reduction(
+            v, self.config.dims, self.config.reduction, self.config.ppa_remove,
+            axes=axes, n_total=n_total,
+        )
+        return reduced.astype(jnp.float32), model
+
+
+@dataclasses.dataclass(frozen=True)
+class IdentityTransform:
+    """Brute force: the unit-normalized rows themselves."""
+
+    def __call__(self, v: jax.Array, axes=None, n_total=None):
+        return v, None
+
+
+# --------------------------------------------------------------------------
+# Postings assembly
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class FakeWordsPostings:
+    """df/idf/norm statistics + optional precomputed classic scoring matrix.
+    df is the ONE global statistic: psum'd under ``axes`` (integer sum, so
+    sharded idf/scored match the single-host build bit-for-bit)."""
+
+    config: FakeWordsConfig
+
+    def __call__(self, tf, model, v, store, n_total, axes=None) -> FakeWordsIndex:
+        tf_f = tf.astype(jnp.float32)
+        df = jnp.sum(tf > 0, axis=0).astype(jnp.int32)
+        if axes is not None:
+            df = jax.lax.psum(df, axes)
+        idf = 1.0 + jnp.log(n_total / (df.astype(jnp.float32) + 1.0))
+        doc_len = jnp.sum(tf_f, axis=-1)
+        norm = jax.lax.rsqrt(jnp.maximum(doc_len, 1.0))
+        scored = None
+        if self.config.scoring == "classic":
+            # Per-(doc, term) scoring matrix so query scoring is one GEMM:
+            # sqrt(tf_d) * idf^2 * norm_d, stored bf16.
+            scored = (
+                jnp.sqrt(tf_f) * (idf**2)[None, :] * norm[:, None]
+            ).astype(jnp.bfloat16)
+        return FakeWordsIndex(
+            tf=tf, idf=idf, norm=norm, df=df, scored=scored, **store
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class LshPostings:
+    """Signatures carry their own statistics: pure container assembly."""
+
+    def __call__(self, sig, model, v, store, n_total, axes=None) -> LshIndex:
+        return LshIndex(sig=sig, **store)
+
+
+@dataclasses.dataclass(frozen=True)
+class KdTreePostings:
+    """Reduced points + precomputed scan-kernel lift; the faithful tree
+    arrays (backend='tree') are host-side numpy and local-build only."""
+
+    config: KdTreeConfig
+
+    def __call__(self, reduced, model, v, store, n_total, axes=None) -> KdTreeIndex:
+        from repro.kernels.fused_topk import ops as fused
+
+        split_dim = split_val = perm = None
+        if self.config.backend == "tree":
+            if axes is not None:
+                raise ValueError(_TREE_BUILD_MSG)
+            from repro.core import kdtree
+
+            sd, sv, pm, _ = kdtree._build_arrays(
+                np.asarray(reduced), self.config.leaf_size
+            )
+            split_dim, split_val, perm = (
+                jnp.asarray(sd), jnp.asarray(sv), jnp.asarray(pm)
+            )
+        return KdTreeIndex(
+            reduced=reduced,
+            reduction=model,
+            split_dim=split_dim,
+            split_val=split_val,
+            perm=perm,
+            lifted=fused.lift_l2(reduced),
+            **store,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class FlatPostings:
+    """Brute force: the normalized rows ARE the match operand, so the exact
+    fp32 vectors are kept regardless of the rerank-store choice."""
+
+    def __call__(self, rep, model, v, store, n_total, axes=None) -> FlatIndex:
+        return FlatIndex(vectors=v, vq=store["vq"])
+
+
+# --------------------------------------------------------------------------
+# Rerank stores
+# --------------------------------------------------------------------------
+
+
+def quantize_store(v: jax.Array) -> QuantizedStore:
+    """Symmetric per-doc int8 quantization: scale = max|v_row|/127,
+    q = round(v/scale).  Row-local (shards freely)."""
+    amax = jnp.max(jnp.abs(v.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.round(v / scale[:, None]).astype(jnp.int8)
+    return QuantizedStore(q=q, scale=scale.astype(jnp.float32))
+
+
+@dataclasses.dataclass(frozen=True)
+class ExactRerankStore:
+    """Keep the fp32 unit-normalized originals (the PR-3 default)."""
+
+    def __call__(self, v: jax.Array) -> dict:
+        return {"vectors": v, "vq": None}
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantizedRerankStore:
+    """int8 + per-doc scale instead of fp32 originals: ~4x fewer rerank
+    gather bytes at a bounded score error (docs/DESIGN.md §8)."""
+
+    def __call__(self, v: jax.Array) -> dict:
+        return {"vectors": None, "vq": quantize_store(v)}
+
+
+@dataclasses.dataclass(frozen=True)
+class NoRerankStore:
+    """No rerank operand (build-time opt-out; rerank=True will fail)."""
+
+    def __call__(self, v: jax.Array) -> dict:
+        return {"vectors": None, "vq": None}
+
+
+_STORES = {
+    "exact": ExactRerankStore(),
+    "int8": QuantizedRerankStore(),
+    "none": NoRerankStore(),
+}
+
+
+# --------------------------------------------------------------------------
+# The pipeline
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class BuildPipeline:
+    """normalize -> transform -> postings -> rerank store.
+
+    Frozen and hashable, like :class:`repro.core.pipeline.SearchPipeline`:
+    a build pipeline is a static description of *how* to build; all array
+    state flows through the call.  ``build_local`` and ``build_sharded``
+    run the SAME stage objects — the only difference is ``axes`` (which
+    turns the global-statistic reductions into psums under ``shard_map``).
+    """
+
+    config: AnyConfig
+    transform: Any
+    postings: Any
+    store: Any = ExactRerankStore()
+
+    def _assemble(self, v, n_total, axes=None):
+        rep, model = self.transform(v, axes=axes, n_total=n_total)
+        return self.postings(rep, model, v, self.store(v), n_total, axes=axes)
+
+    def build_local(self, vectors: jax.Array, normalized: bool = False):
+        """Single-host build (what the per-method ``build()`` wrappers
+        call)."""
+        v = jnp.asarray(vectors)
+        v = v if normalized else bruteforce.l2_normalize(v)
+        return self._assemble(v, n_total=v.shape[0])
+
+    def sharded_build_fn(
+        self, mesh, axes: Sequence[str], n_total: int, normalized: bool = False
+    ):
+        """The ``shard_map``-wrapped per-shard build: ``fn(vectors) ->
+        index`` with doc-sharded leaves.  Reusable across calls (jit caches
+        one compilation) — ``build_sharded`` is the one-shot convenience."""
+        from repro import compat
+        from repro.core import distributed
+
+        axes = tuple(axes)
+        if isinstance(self.config, KdTreeConfig) and self.config.backend == "tree":
+            raise ValueError(_TREE_BUILD_MSG)
+
+        def local_build(v):
+            # Normalization is row-local, so honoring ``normalized`` here
+            # keeps the sharded branch argument-for-argument equal to
+            # build_local.
+            v = v if normalized else bruteforce.l2_normalize(v)
+            return self._assemble(v, n_total=n_total, axes=axes)
+
+        out_specs = distributed.config_pspec(
+            self.config, axes,
+            keep_vectors=isinstance(self.store, ExactRerankStore)
+            or isinstance(self.config, BruteForceConfig),
+            quantized_store=isinstance(self.store, QuantizedRerankStore),
+        )
+        # Replicated leaves (idf/df, reduction model) come out of psums the
+        # static replication checker cannot always prove; disable it — the
+        # sharded==local parity tests are the real guarantee.
+        return compat.shard_map(
+            local_build, mesh=mesh, in_specs=jax.sharding.PartitionSpec(axes, None),
+            out_specs=out_specs, check_vma=False,
+        )
+
+    def build_sharded(
+        self,
+        mesh,
+        vectors: jax.Array,
+        axes: Sequence[str],
+        normalized: bool = False,
+    ):
+        """Row-parallel build under ``shard_map``: every doc-sharded leaf is
+        computed from shard-local rows; global statistics (df, reduction
+        moments) travel through psums.  No stage materializes the full
+        corpus on any shard."""
+        from repro.core import distributed
+
+        n = vectors.shape[0]
+        n_shards = distributed.flat_axis_size(mesh, tuple(axes))
+        assert n % n_shards == 0, (
+            f"corpus size {n} not divisible by {n_shards} shards"
+        )
+        return self.sharded_build_fn(mesh, axes, n, normalized=normalized)(vectors)
+
+    def build(
+        self,
+        vectors: jax.Array,
+        mesh=None,
+        axes: Sequence[str] = ("data",),
+        normalized: bool = False,
+    ):
+        """Single entry point: local when ``mesh`` is None, else sharded."""
+        if mesh is None:
+            return self.build_local(vectors, normalized=normalized)
+        return self.build_sharded(mesh, vectors, axes, normalized=normalized)
+
+
+def make_build_pipeline(
+    config: AnyConfig, rerank_store: str = "exact"
+) -> BuildPipeline:
+    """Every method is a stage configuration (the build-side analog of
+    ``pipeline.build_pipeline``).  ``rerank_store``: "exact" | "int8" |
+    "none"."""
+    if rerank_store not in _STORES:
+        raise ValueError(
+            f"rerank_store must be one of {RERANK_STORES}, got {rerank_store!r}"
+        )
+    store = _STORES[rerank_store]
+    if isinstance(config, FakeWordsConfig):
+        return BuildPipeline(config, TfTransform(config), FakeWordsPostings(config), store)
+    if isinstance(config, LexicalLshConfig):
+        return BuildPipeline(config, MinHashTransform(config), LshPostings(), store)
+    if isinstance(config, KdTreeConfig):
+        return BuildPipeline(config, ReductionTransform(config), KdTreePostings(config), store)
+    if isinstance(config, BruteForceConfig):
+        return BuildPipeline(config, IdentityTransform(), FlatPostings(), store)
+    raise TypeError(f"unknown config {type(config)}")

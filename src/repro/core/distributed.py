@@ -20,8 +20,12 @@ method's matcher from its config and calls it on each shard's local index
 slice, so every encoding — fake words, lexical LSH, k-d scan, brute force —
 gets the fan-out/merge architecture from one code path.
 
-Build is also distributed: document-frequency statistics are ``psum``-ed so
-idf matches a single-node build exactly.
+Build is also distributed — for EVERY encoding (:func:`build_sharded`, the
+pod entry of the staged ``core/builder.py`` BuildPipeline): fake-words and
+LSH postings are row-parallel, document-frequency statistics ``psum`` so
+idf matches a single-node build exactly, and the kd-tree reduction fits
+from psum'd global moments so every shard holds the identical model while
+its rows never leave the shard.
 """
 from __future__ import annotations
 
@@ -32,7 +36,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro import compat
-from repro.core import bruteforce, fakewords, pca
+from repro.core import pca
 from repro.core import pipeline as pl
 from repro.core.blockmax import BlockMaxIndex
 from repro.core.types import (
@@ -44,6 +48,7 @@ from repro.core.types import (
     KdTreeIndex,
     LexicalLshConfig,
     LshIndex,
+    QuantizedStore,
 )
 
 
@@ -79,6 +84,7 @@ def _pspec_tree(
     vectors: bool = True,
     reduction_spec=None,
     lifted: bool = True,
+    vq: bool = False,
 ):
     """The one place the per-type doc-dimension spec trees are written;
     :func:`index_pspec` / :func:`config_pspec` just derive the presence
@@ -86,20 +92,22 @@ def _pspec_tree(
     axes = tuple(axes)
     doc = P(axes, None)
     vec = doc if vectors else None
+    # int8 rerank store: rows doc-sharded, per-doc scales shard with them.
+    vqs = QuantizedStore(q=doc, scale=P(axes)) if vq else None
     if kind == "fake-words":
         return FakeWordsIndex(
             tf=doc, idf=P(), norm=P(axes), df=P(),
-            scored=doc if scored else None, vectors=vec,
+            scored=doc if scored else None, vectors=vec, vq=vqs,
         )
     if kind == "lexical-lsh":
-        return LshIndex(sig=doc, vectors=vec)
+        return LshIndex(sig=doc, vectors=vec, vq=vqs)
     if kind == "kd-tree":
         return KdTreeIndex(
             reduced=doc, reduction=reduction_spec,
-            lifted=doc if lifted else None, vectors=vec,
+            lifted=doc if lifted else None, vectors=vec, vq=vqs,
         )
     if kind == "bruteforce":
-        return FlatIndex(vectors=doc)
+        return FlatIndex(vectors=doc, vq=vqs)
     raise ValueError(f"unknown index kind {kind!r}")
 
 
@@ -117,10 +125,12 @@ def index_pspec(index, axes: Sequence[str]):
             "fake-words", axes,
             scored=index.scored is not None,
             vectors=index.vectors is not None,
+            vq=index.vq is not None,
         )
     if isinstance(index, LshIndex):
         return _pspec_tree(
-            "lexical-lsh", axes, vectors=index.vectors is not None
+            "lexical-lsh", axes, vectors=index.vectors is not None,
+            vq=index.vq is not None,
         )
     if isinstance(index, KdTreeIndex):
         if index.split_dim is not None:
@@ -130,22 +140,33 @@ def index_pspec(index, axes: Sequence[str]):
             vectors=index.vectors is not None,
             reduction_spec=_replicated_tree(index.reduction),
             lifted=index.lifted is not None,
+            vq=index.vq is not None,
         )
     if isinstance(index, FlatIndex):
-        return _pspec_tree("bruteforce", axes)
+        return _pspec_tree("bruteforce", axes, vq=index.vq is not None)
     raise TypeError(f"unknown index {type(index)}")
 
 
-def config_pspec(config, axes: Sequence[str], keep_vectors: bool = True):
+def config_pspec(
+    config,
+    axes: Sequence[str],
+    keep_vectors: bool = True,
+    quantized_store: bool = False,
+):
     """Spec tree from a method config (when no index instance is at hand —
-    e.g. dryrun cells that eval_shape through the sharded search)."""
+    e.g. dryrun cells that eval_shape through the sharded search).
+    ``quantized_store`` marks the int8 rerank store present (built with
+    ``rerank_store='int8'``, in which case fp32 vectors are absent)."""
     if isinstance(config, FakeWordsConfig):
         return _pspec_tree(
             "fake-words", axes,
             scored=config.scoring == "classic", vectors=keep_vectors,
+            vq=quantized_store,
         )
     if isinstance(config, LexicalLshConfig):
-        return _pspec_tree("lexical-lsh", axes, vectors=keep_vectors)
+        return _pspec_tree(
+            "lexical-lsh", axes, vectors=keep_vectors, vq=quantized_store
+        )
     if isinstance(config, KdTreeConfig):
         if config.backend == "tree":
             raise ValueError(_TREE_BACKEND_MSG)
@@ -159,16 +180,46 @@ def config_pspec(config, axes: Sequence[str], keep_vectors: bool = True):
             )
         )
         return _pspec_tree(
-            "kd-tree", axes, vectors=keep_vectors, reduction_spec=red
+            "kd-tree", axes, vectors=keep_vectors, reduction_spec=red,
+            vq=quantized_store,
         )
     if isinstance(config, BruteForceConfig):
-        return _pspec_tree("bruteforce", axes)
+        return _pspec_tree("bruteforce", axes, vq=quantized_store)
     raise TypeError(f"unknown config {type(config)}")
 
 
 # --------------------------------------------------------------------------
 # Distributed build
 # --------------------------------------------------------------------------
+
+
+def build_sharded(
+    mesh: Mesh,
+    vectors: jax.Array,
+    config,
+    axes: Sequence[str],
+    keep_vectors: bool = True,
+    rerank_store: Optional[str] = None,
+):
+    """Build ANY encoding's index with its doc-sharded leaves distributed
+    over ``axes`` — the pod-scale entry of the staged
+    :class:`repro.core.builder.BuildPipeline` (docs/DESIGN.md §8).
+
+    Fake-words and LSH postings are embarrassingly row-parallel; the k-d
+    tree's reduction fits from psum'd global moments so every shard holds
+    the identical (replicated) model; global statistics (df -> idf) psum.
+    No stage materializes the full corpus on any shard, and the result
+    matches :func:`repro.core.builder.BuildPipeline.build_local`
+    bit-for-bit (fp-tolerance for the eigendecomposed reduction).
+
+    ``rerank_store``: "exact" | "int8" | "none" (None derives from
+    ``keep_vectors``)."""
+    from repro.core import builder
+
+    if rerank_store is None:
+        rerank_store = "exact" if keep_vectors else "none"
+    bp = builder.make_build_pipeline(config, rerank_store)
+    return bp.build_sharded(mesh, vectors, tuple(axes))
 
 
 def build_fakewords_sharded(
@@ -178,40 +229,10 @@ def build_fakewords_sharded(
     axes: Sequence[str],
     keep_vectors: bool = True,
 ) -> FakeWordsIndex:
-    """Build a FakeWordsIndex whose doc-sharded leaves live distributed over
-    ``axes``; idf/df are computed globally (psum) and replicated."""
-    axes = tuple(axes)
-    n_shards = flat_axis_size(mesh, axes)
-    n = vectors.shape[0]
-    assert n % n_shards == 0, f"corpus size {n} not divisible by {n_shards} shards"
-
-    def local_build(v):
-        v = bruteforce.l2_normalize(v)
-        tf = fakewords.encode(v, config.quantization, config.store_dtype)
-        df_local = jnp.sum(tf > 0, axis=0).astype(jnp.int32)
-        df = jax.lax.psum(df_local, axes)
-        idf = 1.0 + jnp.log(n / (df.astype(jnp.float32) + 1.0))
-        doc_len = jnp.sum(tf.astype(jnp.float32), axis=-1)
-        norm = jax.lax.rsqrt(jnp.maximum(doc_len, 1.0))
-        scored = None
-        if config.scoring == "classic":
-            scored = (
-                jnp.sqrt(tf.astype(jnp.float32)) * (idf**2)[None, :] * norm[:, None]
-            ).astype(jnp.bfloat16)
-        return FakeWordsIndex(
-            tf=tf,
-            idf=idf,
-            norm=norm,
-            df=df,
-            scored=scored,
-            vectors=v if keep_vectors else None,
-        )
-
-    out_specs = config_pspec(config, axes, keep_vectors)
-    fn = compat.shard_map(
-        local_build, mesh=mesh, in_specs=P(axes, None), out_specs=out_specs
-    )
-    return fn(vectors)
+    """Deprecated alias: the fake-words special case of the generic
+    :func:`build_sharded` (kept for callers of the pre-BuildPipeline
+    API)."""
+    return build_sharded(mesh, vectors, config, axes, keep_vectors)
 
 
 # --------------------------------------------------------------------------
@@ -231,6 +252,7 @@ def make_sharded_search(
     tile_unroll: bool = False,
     use_kernel: Optional[bool] = None,
     blockmax_keep: Optional[int] = None,
+    rerank_store: Optional[str] = None,
 ):
     """Returns a jit-able ``search(index, q_rep, queries) -> (scores, ids)``
     closed over the mesh, for ANY method config (fake words / lexical LSH /
@@ -254,10 +276,20 @@ def make_sharded_search(
     local block upper bounds, then exact scoring of the kept blocks through
     the fused gathered streaming top-k kernel — so the pod also gets the
     ~(1 - beta) scan-byte cut.  The df-prune mask is not applied on this
-    path (like the single-node ``pruned_search``)."""
+    path (like the single-node ``pruned_search``).
+
+    ``rerank_store`` ("exact" | "int8" | "none"; None derives from
+    ``keep_vectors``) must name the store the index was built with: with
+    "int8" the local rerank gathers from the int8
+    :class:`repro.core.types.QuantizedStore` (~4x fewer HBM gather bytes
+    per shard, docs/DESIGN.md §8) instead of the fp32 originals."""
     axes = tuple(axes)
     from repro.kernels.fused_topk import ops as fused
 
+    if rerank_store is None:
+        rerank_store = "exact" if keep_vectors else "none"
+    if rerank and rerank_store == "none" and not isinstance(config, BruteForceConfig):
+        raise ValueError("rerank=True needs rerank_store 'exact' or 'int8'")
     kernel_local = fused.resolve_use_kernel(use_kernel)
     matcher = pl.make_matcher(config, score_tile=score_tile, tile_unroll=tile_unroll)
 
@@ -266,12 +298,13 @@ def make_sharded_search(
         n_local = index.num_docs
         valid = loc_i >= 0
         if rerank:
-            # Exact rerank against *local* originals: no cross-shard gather.
-            # -1 padding slots would otherwise gather doc 0 and earn a real
-            # cosine score; mask them back to -inf.
-            cand = index.vectors[jnp.maximum(loc_i, 0)]  # (B, d_local, dim)
-            loc_s = jnp.einsum("bd,bcd->bc", queries, cand)
-            loc_s = jnp.where(valid, loc_s, -jnp.inf)
+            # Exact rerank against the *local* store — fp32 originals or the
+            # int8 quantized store — so there is no cross-shard vector
+            # movement.  -1 padding slots would otherwise gather doc 0 and
+            # earn a real cosine score; candidate_scores masks them to -inf.
+            loc_s = pl.candidate_scores(
+                index, queries, loc_i, quantized=rerank_store == "int8"
+            )
         # Invalid slots keep id -1 (never ``-1 + shard * n_local``).
         glob_i = jnp.where(valid, loc_i + shard * n_local, -1)
         # Tiny collective: d*(score,id) per shard.
@@ -296,7 +329,11 @@ def make_sharded_search(
         )
         return merge_global(index, loc_s, loc_i, queries)
 
-    index_spec = config_pspec(config, axes, keep_vectors)
+    index_spec = config_pspec(
+        config, axes,
+        keep_vectors=rerank_store == "exact",
+        quantized_store=rerank_store == "int8",
+    )
     if blockmax_keep is not None:
         # Prefix spec: BlockMaxIndex's one array leaf (ub) shards on the
         # block dimension; its block_size/mode are static metadata.

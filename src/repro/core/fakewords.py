@@ -63,27 +63,18 @@ def build(
     normalized: bool = False,
 ) -> FakeWordsIndex:
     """Build the fake-words index.  Unlike Lucene's O(Q) repeated-token
-    indexing cost per feature, we store tf directly (O(1) per feature)."""
-    v = vectors if normalized else bruteforce.l2_normalize(vectors)
-    tf = encode(v, config.quantization, config.store_dtype)
-    df, idf, norm = doc_stats(tf)
-    scored = None
-    if config.scoring == "classic":
-        # Precompute the per-(doc, term) scoring matrix so query scoring is a
-        # single GEMM: sqrt(tf_d) * idf^2 * norm_d, stored bf16.
-        scored = (
-            jnp.sqrt(tf.astype(jnp.float32))
-            * (idf**2)[None, :]
-            * norm[:, None]
-        ).astype(jnp.bfloat16)
-    return FakeWordsIndex(
-        tf=tf,
-        idf=idf,
-        norm=norm,
-        df=df,
-        scored=scored,
-        vectors=v if keep_vectors else None,
+    indexing cost per feature, we store tf directly (O(1) per feature).
+
+    Thin wrapper over the shared staged :class:`repro.core.builder.
+    BuildPipeline` (TfTransform -> FakeWordsPostings -> rerank store);
+    the same stages build row-parallel on a mesh via
+    ``BuildPipeline.build_sharded`` / ``distributed.build_sharded``."""
+    from repro.core import builder
+
+    bp = builder.make_build_pipeline(
+        config, "exact" if keep_vectors else "none"
     )
+    return bp.build_local(vectors, normalized=normalized)
 
 
 def encode_queries(

@@ -8,7 +8,13 @@ An AnnIndex owns a staged :class:`repro.core.pipeline.SearchPipeline`
 method — fake words, lexical LSH, k-d tree, brute force — is a stage
 configuration, not a bespoke ``search()``.  The serving layer
 (``serve/ann_service.py``) and the pod path (``core/distributed.py``) run
-the same stage objects.
+the same stage objects.  Construction is staged the same way
+(:class:`repro.core.builder.BuildPipeline`, docs/DESIGN.md §8):
+``AnnIndex.build`` runs the method's transform/postings/rerank-store
+stages locally, or — with ``mesh=`` — row-parallel under ``shard_map``
+with no full-corpus materialization on any shard; ``rerank_store="int8"``
+swaps the fp32 rerank operand for the quantized store (~4x fewer rerank
+gather bytes).
 
 All state lives in pytree index containers, so an AnnIndex can be sharded
 (``jax.device_put`` with a NamedSharding) and searched under ``jit`` /
@@ -29,7 +35,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import bruteforce, fakewords, kdtree, lexical_lsh, pca
+from repro.core import pca
 from repro.core import pipeline as pl
 from repro.core.blockmax import BlockMaxIndex, build_blockmax
 from repro.core.types import (
@@ -41,6 +47,7 @@ from repro.core.types import (
     KdTreeIndex,
     LexicalLshConfig,
     LshIndex,
+    QuantizedStore,
     SearchParams,
 )
 
@@ -78,9 +85,26 @@ class AnnIndex:
     blockmax_keep: Optional[int] = None
     blockmax_block_size: int = 256
     bm: Optional[BlockMaxIndex] = None
+    # Rerank from the int8 + per-doc-scale store (index.vq) instead of the
+    # fp32 originals.  None = auto: quantized iff the index carries ONLY the
+    # int8 store (built with rerank_store="int8").
+    quantized_rerank: Optional[bool] = None
 
     def __post_init__(self):
         self.pipeline: pl.SearchPipeline = pl.build_pipeline(self.config)
+        if self.quantized_rerank is None:
+            self.quantized_rerank = (
+                self.index.vq is not None and self.index.vectors is None
+            )
+        if self.quantized_rerank:
+            if self.index.vq is None:
+                raise ValueError(
+                    "quantized_rerank=True but the index has no int8 store "
+                    "(build with rerank_store='int8')"
+                )
+            self.pipeline = dataclasses.replace(
+                self.pipeline, reranker=pl.QuantizedCosineReranker()
+            )
         if self.blockmax_keep is not None and self.bm is None:
             if not isinstance(self.index, (FakeWordsIndex, LshIndex)):
                 raise ValueError(
@@ -101,24 +125,33 @@ class AnnIndex:
         use_kernel: Optional[bool] = None,
         blockmax_keep: Optional[int] = None,
         blockmax_block_size: int = 256,
+        rerank_store: Optional[str] = None,
+        mesh=None,
+        shard_axes=("data",),
     ) -> "AnnIndex":
-        vectors = bruteforce.l2_normalize(jnp.asarray(vectors))
-        if isinstance(config, FakeWordsConfig):
-            idx = fakewords.build(vectors, config, keep_vectors, normalized=True)
-        elif isinstance(config, LexicalLshConfig):
-            idx = lexical_lsh.build(vectors, config, keep_vectors, normalized=True)
-        elif isinstance(config, KdTreeConfig):
-            idx = kdtree.build(vectors, config, keep_vectors, normalized=True)
-        elif isinstance(config, BruteForceConfig):
-            idx = FlatIndex(vectors=vectors)
-        else:
-            raise TypeError(f"unknown config {type(config)}")
+        """Build any encoding through the staged
+        :class:`repro.core.builder.BuildPipeline` (docs/DESIGN.md §8) — the
+        single build entry point, locally or (with ``mesh``) row-parallel
+        under ``shard_map`` with no full-corpus materialization on any
+        shard.
+
+        ``rerank_store``: "exact" (fp32 originals, the default), "int8"
+        (quantized store + per-doc scale; rerank gathers ~4x fewer bytes),
+        or "none".  ``keep_vectors=False`` is back-compat shorthand for
+        "none"."""
+        from repro.core import builder
+
+        if rerank_store is None:
+            rerank_store = "exact" if keep_vectors else "none"
+        bp = builder.make_build_pipeline(config, rerank_store)
+        idx = bp.build(vectors, mesh=mesh, axes=shard_axes)
         return cls(
             config=config,
             index=idx,
             use_kernel=use_kernel,
             blockmax_keep=blockmax_keep,
             blockmax_block_size=blockmax_block_size,
+            quantized_rerank=rerank_store == "int8",
         )
 
     @property
@@ -192,6 +225,7 @@ class AnnIndex:
             "use_kernel": self.use_kernel,
             "blockmax_keep": self.blockmax_keep,
             "blockmax_block_size": self.blockmax_block_size,
+            "quantized_rerank": self.quantized_rerank,
         }
         with open(os.path.join(path, "config.json"), "w") as f:
             json.dump(meta, f, indent=2)
@@ -214,6 +248,7 @@ class AnnIndex:
             "use_kernel": meta.get("use_kernel"),
             "blockmax_keep": meta.get("blockmax_keep"),
             "blockmax_block_size": meta.get("blockmax_block_size", 256),
+            "quantized_rerank": meta.get("quantized_rerank"),
         }
         knobs.update(overrides)
         return cls(config=config, index=index, **knobs)
@@ -289,24 +324,31 @@ def _rebuild_reduction(config: KdTreeConfig, arrays: Dict[str, jax.Array]):
     )
 
 
+def _rebuild_vq(arrays: Dict[str, jax.Array]) -> Optional[QuantizedStore]:
+    if "vq.q" in arrays:
+        return QuantizedStore(q=arrays["vq.q"], scale=arrays["vq.scale"])
+    return None
+
+
 def _rebuild_index(
     method: str, config: AnyConfig, arrays: Dict[str, jax.Array]
 ) -> AnyIndex:
     g = arrays.get
+    vq = _rebuild_vq(arrays)
     if method == "fake-words":
         return FakeWordsIndex(
             tf=arrays["tf"], idf=arrays["idf"], norm=arrays["norm"],
-            df=arrays["df"], scored=g("scored"), vectors=g("vectors"),
+            df=arrays["df"], scored=g("scored"), vectors=g("vectors"), vq=vq,
         )
     if method == "lexical-lsh":
-        return LshIndex(sig=arrays["sig"], vectors=g("vectors"))
+        return LshIndex(sig=arrays["sig"], vectors=g("vectors"), vq=vq)
     if method == "kd-tree":
         return KdTreeIndex(
             reduced=arrays["reduced"],
             reduction=_rebuild_reduction(config, arrays),
             split_dim=g("split_dim"), split_val=g("split_val"), perm=g("perm"),
-            lifted=g("lifted"), vectors=g("vectors"),
+            lifted=g("lifted"), vectors=g("vectors"), vq=vq,
         )
     if method == "bruteforce":
-        return FlatIndex(vectors=arrays["vectors"])
+        return FlatIndex(vectors=arrays["vectors"], vq=vq)
     raise ValueError(f"unknown method {method!r}")

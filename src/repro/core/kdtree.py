@@ -79,24 +79,17 @@ def build(
     keep_vectors: bool = True,
     normalized: bool = False,
 ) -> KdTreeIndex:
-    from repro.kernels.fused_topk import ops as fused
+    """Thin wrapper over the staged :class:`repro.core.builder.BuildPipeline`
+    (ReductionTransform -> KdTreePostings -> rerank store).  The reduction
+    fits from psum-able moments (core/pca.py), so the scan backend also
+    builds row-parallel on a mesh (``BuildPipeline.build_sharded``) with the
+    identical model fitted on every shard."""
+    from repro.core import builder
 
-    v = vectors if normalized else bruteforce.l2_normalize(vectors)
-    model, reduced = pca.fit_reduction(v, config.dims, config.reduction, config.ppa_remove)
-    reduced = reduced.astype(jnp.float32)
-    split_dim = split_val = perm = None
-    if config.backend == "tree":
-        sd, sv, pm, _ = _build_arrays(np.asarray(reduced), config.leaf_size)
-        split_dim, split_val, perm = jnp.asarray(sd), jnp.asarray(sv), jnp.asarray(pm)
-    return KdTreeIndex(
-        reduced=reduced,
-        reduction=model,
-        split_dim=split_dim,
-        split_val=split_val,
-        perm=perm,
-        lifted=fused.lift_l2(reduced),
-        vectors=v if keep_vectors else None,
+    bp = builder.make_build_pipeline(
+        config, "exact" if keep_vectors else "none"
     )
+    return bp.build_local(vectors, normalized=normalized)
 
 
 def reduce_queries(index: KdTreeIndex, queries: jax.Array, normalized=False) -> jax.Array:

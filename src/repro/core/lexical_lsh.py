@@ -95,8 +95,15 @@ def build(
     keep_vectors: bool = True,
     normalized: bool = False,
 ) -> LshIndex:
-    v = vectors if normalized else bruteforce.l2_normalize(vectors)
-    return LshIndex(sig=encode(v, config), vectors=v if keep_vectors else None)
+    """Thin wrapper over the staged :class:`repro.core.builder.BuildPipeline`
+    (MinHashTransform -> LshPostings -> rerank store); fully row-local, so
+    the same stages shard trivially (``BuildPipeline.build_sharded``)."""
+    from repro.core import builder
+
+    bp = builder.make_build_pipeline(
+        config, "exact" if keep_vectors else "none"
+    )
+    return bp.build_local(vectors, normalized=normalized)
 
 
 def match_scores(

@@ -10,14 +10,46 @@ All fits are exact eigendecompositions of the (dim x dim) covariance - dim is
 300 here, so this is tiny; for a pod-scale corpus only the covariance
 accumulation streams over the (sharded) data, which is a single
 ``psum``-able matmul.
+
+Distributed fits (the BuildPipeline's kd-tree path, docs/DESIGN.md §8):
+every fit here accepts ``axes``/``n_total``.  With ``axes`` set the call
+runs *inside* ``shard_map`` over doc-sharded rows and the moments are
+``psum``-ed — mean from the psum'd row sum, covariance from the psum'd
+centered Gram matrix — so every shard fits the IDENTICAL model from global
+statistics while its points stay shard-resident.  With ``axes=None`` the
+exact same code path is the single-host fit (psum of one shard == local
+sum), so local and sharded builds share one numerical recipe.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+
+
+def _mean_cov(
+    x: jax.Array,
+    axes: Optional[Sequence[str]] = None,
+    n_total: Optional[int] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Global (mean, covariance) of doc-sharded rows.
+
+    Two psums: the row sum (-> global mean, replicated on every shard),
+    then the centered Gram matrix ``sum (x - mean)(x - mean)^T`` — centering
+    against the GLOBAL mean commutes with the shard sum, so the psum'd Gram
+    equals the single-host centered Gram up to summation order (and bitwise
+    on one shard).  dim x dim stays tiny; only the Gram matmul streams data.
+    """
+    if axes is None:
+        mean = jnp.mean(x, axis=0)
+        xc = x - mean
+        return mean, (xc.T @ xc) / x.shape[0]
+    assert n_total is not None, "sharded fit needs the global row count"
+    mean = jax.lax.psum(jnp.sum(x, axis=0), axes) / n_total
+    xc = x - mean
+    return mean, jax.lax.psum(xc.T @ xc, axes) / n_total
 
 
 @jax.tree_util.register_dataclass
@@ -27,11 +59,15 @@ class PcaModel:
     components: jax.Array  # (dim, out_dim), columns = top eigenvectors
 
 
-def pca_fit(x: jax.Array, out_dim: int) -> PcaModel:
-    """Fit PCA; returns projection onto the top ``out_dim`` components."""
-    mean = jnp.mean(x, axis=0)
-    xc = x - mean
-    cov = (xc.T @ xc) / x.shape[0]
+def pca_fit(
+    x: jax.Array,
+    out_dim: int,
+    axes: Optional[Sequence[str]] = None,
+    n_total: Optional[int] = None,
+) -> PcaModel:
+    """Fit PCA; returns projection onto the top ``out_dim`` components.
+    ``axes`` runs the fit from psum'd moments inside ``shard_map``."""
+    mean, cov = _mean_cov(x, axes, n_total)
     # eigh returns ascending eigenvalues; take the trailing columns.
     _, vecs = jnp.linalg.eigh(cov)
     comps = vecs[:, ::-1][:, :out_dim]
@@ -51,10 +87,13 @@ class PpaModel:
     top: jax.Array  # (dim, D)
 
 
-def ppa_fit(x: jax.Array, remove: int) -> PpaModel:
-    mean = jnp.mean(x, axis=0)
-    xc = x - mean
-    cov = (xc.T @ xc) / x.shape[0]
+def ppa_fit(
+    x: jax.Array,
+    remove: int,
+    axes: Optional[Sequence[str]] = None,
+    n_total: Optional[int] = None,
+) -> PpaModel:
+    mean, cov = _mean_cov(x, axes, n_total)
     _, vecs = jnp.linalg.eigh(cov)
     top = vecs[:, ::-1][:, :remove]
     return PpaModel(mean=mean, top=top)
@@ -73,15 +112,24 @@ class PpaPcaPpaModel:
     ppa2: PpaModel
 
 
-def ppa_pca_ppa_fit(x: jax.Array, out_dim: int, remove: int = 3) -> PpaPcaPpaModel:
-    """Raunak (2017): PPA -> PCA(out_dim) -> PPA, fitted stage by stage."""
-    ppa1 = ppa_fit(x, remove)
+def ppa_pca_ppa_fit(
+    x: jax.Array,
+    out_dim: int,
+    remove: int = 3,
+    axes: Optional[Sequence[str]] = None,
+    n_total: Optional[int] = None,
+) -> PpaPcaPpaModel:
+    """Raunak (2017): PPA -> PCA(out_dim) -> PPA, fitted stage by stage.
+    Sharded, each stage psums its own moments and then applies the (by
+    construction replicated) stage model to the local rows — three fits,
+    six tiny collectives, zero row movement."""
+    ppa1 = ppa_fit(x, remove, axes, n_total)
     x1 = ppa_apply(ppa1, x)
-    pca = pca_fit(x1, out_dim)
+    pca = pca_fit(x1, out_dim, axes, n_total)
     x2 = pca_apply(pca, x1)
     # Second PPA removes min(remove, out_dim - 1) comps of the reduced space.
     r2 = max(1, min(remove, out_dim - 1))
-    ppa2 = ppa_fit(x2, r2)
+    ppa2 = ppa_fit(x2, r2, axes, n_total)
     return PpaPcaPpaModel(ppa1=ppa1, pca=pca, ppa2=ppa2)
 
 
@@ -90,14 +138,21 @@ def ppa_pca_ppa_apply(model: PpaPcaPpaModel, x: jax.Array) -> jax.Array:
 
 
 def fit_reduction(
-    x: jax.Array, out_dim: int, kind: str, ppa_remove: int = 3
+    x: jax.Array,
+    out_dim: int,
+    kind: str,
+    ppa_remove: int = 3,
+    axes: Optional[Sequence[str]] = None,
+    n_total: Optional[int] = None,
 ):
-    """Dispatch helper used by the k-d tree index builder."""
+    """Dispatch helper used by the k-d tree index builder.  With ``axes``
+    the fit runs from psum'd global moments inside ``shard_map`` (the
+    BuildPipeline's distributed reduction path)."""
     if kind == "pca":
-        model = pca_fit(x, out_dim)
+        model = pca_fit(x, out_dim, axes, n_total)
         return model, pca_apply(model, x)
     if kind == "ppa-pca-ppa":
-        model = ppa_pca_ppa_fit(x, out_dim, ppa_remove)
+        model = ppa_pca_ppa_fit(x, out_dim, ppa_remove, axes, n_total)
         return model, ppa_pca_ppa_apply(model, x)
     raise ValueError(f"unknown reduction kind {kind!r}")
 

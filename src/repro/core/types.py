@@ -140,6 +140,29 @@ class SearchParams:
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
+class QuantizedStore:
+    """int8 symmetric per-doc quantized rerank store (docs/DESIGN.md §8).
+
+    q:     (N, dim) int8, q[d] = round(v[d] / scale[d]).
+    scale: (N,) float32 per-doc scale = max_i |v[d,i]| / 127 (symmetric:
+           zero maps to zero, so dequantization is one multiply).
+
+    v̂[d] = q[d] * scale[d] reconstructs within scale[d]/2 per component,
+    so a unit query's rerank score error is bounded by
+    ``||q_norm||_1 * scale[d] / 2`` — while the rerank gather moves ~4x
+    fewer HBM bytes than the fp32 original vectors.
+    """
+
+    q: jax.Array
+    scale: jax.Array
+
+    @property
+    def num_docs(self) -> int:
+        return self.q.shape[0]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
 class FakeWordsIndex:
     """Sign-split quantized term-frequency index.
 
@@ -153,6 +176,8 @@ class FakeWordsIndex:
              scoring matrix) or None in dot mode.
     vectors: (N, dim) original float vectors kept for exact reranking, or
              None if reranking is disabled at build time.
+    vq:      int8 :class:`QuantizedStore` rerank alternative (or None); built
+             by the ``rerank_store="int8"`` BuildPipeline stage.
     """
 
     tf: jax.Array
@@ -161,6 +186,7 @@ class FakeWordsIndex:
     df: jax.Array
     scored: Optional[jax.Array] = None
     vectors: Optional[jax.Array] = None
+    vq: Optional[QuantizedStore] = None
 
     @property
     def num_docs(self) -> int:
@@ -184,10 +210,12 @@ class LshIndex:
 
     sig:     (N, h*b) uint32 signatures; SENTINEL marks empty buckets.
     vectors: (N, dim) originals for reranking (optional).
+    vq:      int8 :class:`QuantizedStore` rerank alternative (optional).
     """
 
     sig: jax.Array
     vectors: Optional[jax.Array] = None
+    vq: Optional[QuantizedStore] = None
 
     SENTINEL = jnp.uint32(0xFFFFFFFF)
 
@@ -225,6 +253,7 @@ class KdTreeIndex:
     perm: Optional[jax.Array] = None  # (n_leaves, leaf_size) int32 doc ids
     lifted: Optional[jax.Array] = None  # (N, dims+1) f32 scan-kernel operand
     vectors: Optional[jax.Array] = None
+    vq: Optional[QuantizedStore] = None
 
     @property
     def num_docs(self) -> int:
@@ -244,10 +273,13 @@ class FlatIndex:
 
     vectors: (N, dim) float32.  Exists so the exact-cosine oracle rides the
     same AnnIndex -> SearchPipeline -> AnnService path as the three paper
-    encodings (one retrieval architecture for every method).
+    encodings (one retrieval architecture for every method).  ``vectors``
+    stays mandatory (it IS the match operand); ``vq`` is the optional int8
+    rerank store so the quantized-rerank knob is uniform across methods.
     """
 
     vectors: jax.Array
+    vq: Optional[QuantizedStore] = None
 
     @property
     def num_docs(self) -> int:

@@ -2,7 +2,7 @@
 
 scores[i,j] = #{s : sig_q[i,s] == sig_d[j,s] != SENTINEL} - the lexical-LSH
 match score.  Integer equality + popcount-style reduce: a VPU workload with
-no MXU use (docs/DESIGN.md §9).  The signature axis is tiled through the grid so
+no MXU use (docs/DESIGN.md §10).  The signature axis is tiled through the grid so
 the (bq, bn, bs) broadcast-compare stays inside VMEM; partial counts
 accumulate in an int32 scratch across signature tiles.
 """

@@ -3,15 +3,21 @@
     PYTHONPATH=src python -m repro.launch.serve --n-docs 100000 --queries 512
     PYTHONPATH=src python -m repro.launch.serve --method lsh
     PYTHONPATH=src python -m repro.launch.serve --save-index /tmp/idx.ann
+    PYTHONPATH=src python -m repro.launch.serve --quantized-rerank
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+        PYTHONPATH=src python -m repro.launch.serve --shards 8
 
 Builds an AnnIndex (any encoding: fake words / lexical LSH / kd-scan /
 brute force) over a synthetic word2vec-like corpus, stands up the batched
 AnnService over it, replays a query stream, and reports R@(k,d) against the
 brute-force oracle plus the service's own latency percentiles.  With
 ``--save-index`` the index round-trips through ``AnnIndex.save`` /
-``AnnIndex.load`` first — the ship-to-serving-process path.  On a pod the
-same service runs over the sharded index (core/distributed.py); here it
-exercises the single-device path end to end.
+``AnnIndex.load`` first — the ship-to-serving-process path.  With
+``--shards N`` the index builds THROUGH the distributed BuildPipeline
+(docs/DESIGN.md §8: row-parallel under ``shard_map``, no full-corpus
+materialization on any shard) and serves through the pod fan-out/merge
+path; ``--quantized-rerank`` swaps the rerank store for the int8 + per-doc
+scale QuantizedStore (~4x fewer rerank gather bytes).
 """
 from __future__ import annotations
 
@@ -19,6 +25,7 @@ import argparse
 import time
 
 import numpy as np
+import jax
 import jax.numpy as jnp
 
 from repro.core import bruteforce, eval as ev
@@ -70,6 +77,17 @@ def main(argv=None) -> dict:
         "--save-index", default=None,
         help="save the built index here and serve from the loaded copy",
     )
+    ap.add_argument(
+        "--shards", type=int, default=0,
+        help="build AND serve doc-sharded over this many devices "
+             "(distributed BuildPipeline; needs >= N jax devices, e.g. "
+             "XLA_FLAGS=--xla_force_host_platform_device_count=N)",
+    )
+    ap.add_argument(
+        "--quantized-rerank", action="store_true",
+        help="rerank from the int8 + per-doc-scale QuantizedStore instead "
+             "of fp32 originals (~4x fewer rerank gather bytes)",
+    )
     args = ap.parse_args(argv)
 
     corpus = embeddings.make_corpus(
@@ -77,12 +95,37 @@ def main(argv=None) -> dict:
     )
     queries, qids = embeddings.make_queries(corpus, args.queries)
 
+    mesh = None
+    if args.shards:
+        n_dev = len(jax.devices())
+        if n_dev < args.shards:
+            raise SystemExit(
+                f"--shards {args.shards} needs >= {args.shards} devices, "
+                f"found {n_dev}; on CPU set "
+                f"XLA_FLAGS=--xla_force_host_platform_device_count={args.shards}"
+            )
+        mesh = jax.make_mesh((args.shards,), ("data",))
+
     config = make_config(args)
+    rerank_store = "int8" if args.quantized_rerank else "exact"
     t0 = time.time()
-    ann = AnnIndex.build(jnp.asarray(corpus), config)
+    ann = AnnIndex.build(
+        jnp.asarray(corpus), config,
+        rerank_store=rerank_store, mesh=mesh, shard_axes=("data",),
+    )
+    jax.block_until_ready(jax.tree_util.tree_leaves(ann.index))
     build_s = time.time() - t0
-    print(f"[serve] indexed {args.n_docs} docs ({ann.method}) in {build_s:.1f}s "
-          f"({ann.nbytes()/1e6:.0f} MB)")
+    if mesh is not None:
+        # On a real multi-host mesh shards build concurrently, so this wall
+        # time IS the per-shard build time; under simulated host devices
+        # the shards share one host's cores and it is the total.
+        print(f"[serve] sharded build: {args.shards} shards x "
+              f"{args.n_docs // args.shards} docs, build wall time "
+              f"{build_s:.2f}s (= per-shard on a multi-host mesh; "
+              f"no full-corpus materialization)")
+    print(f"[serve] indexed {args.n_docs} docs ({ann.method}"
+          f"{', int8 rerank store' if args.quantized_rerank else ''}) "
+          f"in {build_s:.1f}s ({ann.nbytes()/1e6:.0f} MB)")
 
     if args.save_index:
         ann.save(args.save_index)
@@ -91,7 +134,8 @@ def main(argv=None) -> dict:
 
     svc = AnnService(ann, AnnServiceConfig(
         k=args.k, depth=args.depth, rerank=args.rerank, max_batch=args.batch,
-        blockmax_keep=args.blockmax_keep))
+        blockmax_keep=args.blockmax_keep),
+        mesh=mesh, shard_axes=("data",) if mesh is not None else ())
 
     # Warmup (compile) then timed replay; drop the compile batch's wall time
     # so the reported percentiles reflect steady-state serving latency.

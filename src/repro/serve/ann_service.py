@@ -11,11 +11,16 @@ query-fan-out/merge architecture), one jit'd function per batch.
 Every encoding — fake words, lexical LSH, k-d scan, brute force — serves
 through one code path; there are no per-method branches here.  An index
 built offline ships in via ``AnnIndex.load`` (see ``core/index.py``).
+Indexes carrying the int8 :class:`repro.core.types.QuantizedStore` rerank
+automatically through the quantized gather (single-device AND sharded),
+and ``AnnServiceConfig.cache_size`` enables the per-shard LRU result
+cache keyed on the encoded query representation (docs/DESIGN.md §8).
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
+import hashlib
 import time
 from typing import Optional, Sequence, Tuple, Union
 
@@ -48,6 +53,12 @@ class AnnServiceConfig:
     blockmax_block_size: int = 256
     # Latency ring-buffer length for stats() p50/p99 (per-batch wall times).
     latency_window: int = 1024
+    # Per-shard result cache (ROADMAP follow-up): LRU over the last
+    # ``cache_size`` micro-batches, keyed on the hash of the ENCODED query
+    # representation bytes + the effective SearchParams/knobs — so a repeated
+    # query stream skips the match+rerank entirely on this serving shard.
+    # 0 disables.  Hit/miss counters surface in stats().
+    cache_size: int = 0
 
 
 class AnnService:
@@ -112,21 +123,50 @@ class AnnService:
                     ann.index, self._bm_block, signed_store=signed,
                 )
         if mesh is not None:
+            # The rerank gather must read the store the index was built
+            # with: int8 quantized, fp32 originals, or none.
+            if ann.quantized_rerank:
+                rs = "int8"
+            else:
+                rs = "exact" if ann.index.vectors is not None else "none"
             self._search = distributed.make_sharded_search(
                 mesh, ann.config, shard_axes,
                 k=self.scfg.k, depth=self.scfg.depth, rerank=self.scfg.rerank,
                 use_kernel=self._uk,
                 blockmax_keep=self._bm_keep,
+                rerank_store=rs,
             )
         else:
             self._search = None
         self.queries_served = 0
         self.batches = 0
         self._lat_s = collections.deque(maxlen=self.scfg.latency_window)
+        self._cache: "collections.OrderedDict[bytes, Tuple[np.ndarray, np.ndarray]]" = (
+            collections.OrderedDict()
+        )
+        self.cache_hits = 0
+        self.cache_misses = 0
 
     def _matcher(self):
         """The effective match stage for single-device serving."""
         return self.ann.matcher_for(self._bm, self._bm_keep)
+
+    def _cache_key(self, q_rep, q) -> bytes:
+        """Result-cache key: the encoded query representation's bytes plus
+        every knob that changes the result.  When reranking, the raw
+        normalized queries join the hash — distinct queries can collide on
+        a quantized rep (tf row / signature), and their exact rerank scores
+        would differ.  Note np.asarray(q_rep) blocks on the (tiny) encoder
+        before the search dispatch; that host sync is the price of rep-level
+        keying and only paid when the cache is enabled."""
+        h = hashlib.sha1(np.asarray(q_rep).tobytes())
+        if self.scfg.rerank:
+            h.update(np.asarray(q).tobytes())
+        h.update(
+            repr((self.scfg.k, self.scfg.depth, self.scfg.rerank,
+                  self._bm_keep, self._bm_block, self._uk)).encode()
+        )
+        return h.digest()
 
     def search_batch(self, queries: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
         """(B, dim) -> (scores (B,k), ids (B,k)); pads to max_batch so the
@@ -138,24 +178,39 @@ class AnnService:
             queries = np.concatenate(
                 [queries, np.zeros((pad, queries.shape[1]), queries.dtype)], 0
             )
+        use_cache = self.scfg.cache_size > 0
         out_s, out_i = [], []
         for i in range(0, queries.shape[0], mb):
             t0 = time.perf_counter()
             q = bruteforce.l2_normalize(jnp.asarray(queries[i : i + mb]))
             q_rep = self.ann.pipeline.encoder(self.ann.index, q)
-            if self._search is not None:
-                if self._bm is not None:
-                    s, ids = self._search(self.ann.index, self._bm, q_rep, q)
-                else:
-                    s, ids = self._search(self.ann.index, q_rep, q)
+            key = self._cache_key(q_rep, q) if use_cache else None
+            if use_cache and key in self._cache:
+                self._cache.move_to_end(key)
+                s_np, i_np = self._cache[key]
+                self.cache_hits += 1
             else:
-                s, ids = pl.match_rerank(
-                    self._matcher(), self.ann.index, q_rep, q,
-                    self.scfg.k, self.scfg.depth, self.scfg.rerank,
-                    bm=self._bm, use_kernel=self._uk,
-                )
-            out_s.append(np.asarray(s))   # np.asarray blocks: wall time
-            out_i.append(np.asarray(ids))  # below covers device compute
+                if self._search is not None:
+                    if self._bm is not None:
+                        s, ids = self._search(self.ann.index, self._bm, q_rep, q)
+                    else:
+                        s, ids = self._search(self.ann.index, q_rep, q)
+                else:
+                    s, ids = pl.match_rerank(
+                        self._matcher(), self.ann.index, q_rep, q,
+                        self.scfg.k, self.scfg.depth, self.scfg.rerank,
+                        bm=self._bm, use_kernel=self._uk,
+                        reranker=self.ann.pipeline.reranker,
+                    )
+                s_np = np.asarray(s)   # np.asarray blocks: wall time
+                i_np = np.asarray(ids)  # below covers device compute
+                if use_cache:
+                    self.cache_misses += 1
+                    self._cache[key] = (s_np, i_np)
+                    while len(self._cache) > self.scfg.cache_size:
+                        self._cache.popitem(last=False)
+            out_s.append(s_np)
+            out_i.append(i_np)
             self.batches += 1
             self._lat_s.append(time.perf_counter() - t0)
         self.queries_served += b
@@ -177,4 +232,7 @@ class AnnService:
             "method": self.ann.method,
             "lat_p50_ms": round(float(np.percentile(lat_ms, 50)), 3) if lat_ms.size else None,
             "lat_p99_ms": round(float(np.percentile(lat_ms, 99)), 3) if lat_ms.size else None,
+            "cache_hits": self.cache_hits,
+            "cache_misses": self.cache_misses,
+            "cache_entries": len(self._cache),
         }

@@ -43,7 +43,7 @@ def test_sharded_fakewords_search_equals_single_device():
     qs = vecs[:8]
     cfg = FakeWordsConfig(quantization=50)
     mesh = jax.make_mesh((4, 2), ("data", "model"))
-    idx_sh = distributed.build_fakewords_sharded(mesh, vecs, cfg, ("data", "model"))
+    idx_sh = distributed.build_sharded(mesh, vecs, cfg, ("data", "model"))
     search = distributed.make_sharded_search(mesh, cfg, ("data", "model"), k=10, depth=50, rerank=True)
     q_tf = fakewords.encode_queries(qs, cfg)
     s_sh, i_sh = search(idx_sh, q_tf, bruteforce.l2_normalize(qs))
@@ -75,6 +75,7 @@ def test_sharded_blockmax_search_and_rerank_padding_mask():
     vecs = jnp.asarray(vecs)
     cfg = FakeWordsConfig(quantization=50)
     mesh = jax.make_mesh((8,), ("data",))
+    # deprecated alias of the generic BuildPipeline build_sharded
     idx_sh = distributed.build_fakewords_sharded(mesh, vecs, cfg, ("data",))
     # ragged per-shard blocks: 128 docs/shard, block 48 -> 3 blocks, 16 pad
     bm_sh = distributed.build_blockmax_sharded(mesh, idx_sh, ("data",), block_size=48)
