@@ -310,6 +310,66 @@ def rerank_bench(
     return rows, summary
 
 
+def segments_bench(
+    n_docs: int, dim: int, batch: int, depth: int = 100, k: int = 10,
+) -> Tuple[List[Dict], Dict]:
+    """Segmented (Lucene-lifecycle) serving cost (docs/DESIGN.md §11):
+    search latency at 1 / 4 / 16 segments over the same corpus, full-merge
+    wall time from 16 segments, and post-merge recall@10 (which must equal
+    the 1-segment recall — the merge rebuilds through the same
+    BuildPipeline).  The latency spread IS the price of segment fan-out
+    (per-segment dispatch + merge) that a background merge policy buys
+    back."""
+    from repro.core import eval as ev
+    from repro.core.segments import IndexWriter
+    from repro.core.types import FakeWordsConfig as FWC
+
+    rng = np.random.default_rng(0)
+    vecs = rng.normal(size=(n_docs, dim)).astype(np.float32)
+    queries = jnp.asarray(vecs[:batch])
+    uk = None if jax.default_backend() == "tpu" else False
+    _, gt = bruteforce.exact_topk(jnp.asarray(vecs), queries, k, use_kernel=uk)
+    cfg = FWC(quantization=50)
+    rows: List[Dict] = []
+    summary: Dict = {"depth": depth}
+    w = None
+    for n_seg in (1, 4, 16):
+        # One writer at a time: each holds a full index copy (originals +
+        # tf/scored), and only the last (16-segment) one feeds the merge
+        # timing below.
+        w = IndexWriter(cfg, use_kernel=uk, merge_policy=None)
+        for chunk in np.array_split(vecs, n_seg):
+            w.add(chunk)
+            w.flush()
+        reader = w.refresh()
+
+        def search(r=reader):
+            return r.search(queries, k=k, depth=depth, rerank=True)
+
+        dt = _time(search)
+        _, ids = search()
+        recall = float(ev.recall_at(gt, jnp.asarray(np.asarray(ids))))
+        rows.append({
+            "kernel": f"segments({n_seg}) search encode+match+merge+rerank",
+            "us_per_call": dt * 1e6, "recall_at_10": recall,
+        })
+        summary[n_seg] = {"us": dt * 1e6, "recall": recall}
+    t0 = time.perf_counter()
+    w.force_merge(1)
+    merged = w.refresh()
+    merge_s = time.perf_counter() - t0
+    _, ids = merged.search(queries, k=k, depth=depth, rerank=True)
+    post_recall = float(ev.recall_at(gt, jnp.asarray(np.asarray(ids))))
+    rows.append({
+        "kernel": "segments merge 16->1", "us_per_call": merge_s * 1e6,
+        "recall_at_10": post_recall,
+    })
+    summary["merge_s"] = merge_s
+    summary["post_merge_recall"] = post_recall
+    summary["fanout_cost"] = summary[16]["us"] / summary[1]["us"]
+    return rows, summary
+
+
 def run(n_docs: int = 50_000, dim: int = 300, batch: int = 64) -> List[Dict]:
     rng = np.random.default_rng(0)
     vecs = jnp.asarray(rng.normal(size=(n_docs, dim)).astype(np.float32))
@@ -400,9 +460,19 @@ def main(n_docs: int = 50_000, dim: int = 300, batch: int = 64):
         f"({r_summary['byte_cut']:.1f}x fewer rerank gather bytes; "
         f"recall@10 delta {r_summary['recall_delta']:+.4f})"
     )
+    s_rows, s_summary = segments_bench(min(n_docs, 20_000), dim, min(batch, 16))
+    _print_rows(s_rows)
+    print(
+        f"segments: 16-seg search {s_summary['fanout_cost']:.2f}x the "
+        f"1-seg latency (fan-out price a background merge buys back); "
+        f"merge 16->1 in {s_summary['merge_s']:.2f}s; post-merge recall@10 "
+        f"{s_summary['post_merge_recall']:.3f} "
+        f"(1-seg {s_summary[1]['recall']:.3f})"
+    )
     return (
-        rows + pl_rows + f_rows + p_rows + b_rows + r_rows,
-        {**summary, "blockmax": p_summary, "rerank": r_summary},
+        rows + pl_rows + f_rows + p_rows + b_rows + r_rows + s_rows,
+        {**summary, "blockmax": p_summary, "rerank": r_summary,
+         "segments": s_summary},
     )
 
 

@@ -1,13 +1,18 @@
-"""Quickstart: ANN search on dense vectors through the staged pipeline API.
+"""Quickstart: ANN search on dense vectors through the writer API.
 
     PYTHONPATH=src python examples/quickstart.py
 
-Builds all three paper encodings (plus the exact brute-force oracle) over a
-synthetic word2vec-like corpus via the one entry point — ``AnnIndex`` —
-searches each through the shared ``SearchPipeline`` (encode -> match ->
-exact rerank), prints R@(10,d) against the oracle (a miniature of paper
-Table 1), and round-trips one index through ``save``/``load`` (the
-ship-to-serving-process path).
+Feeds a synthetic word2vec-like corpus through the Lucene-style
+``IndexWriter`` (docs/DESIGN.md §11) for all three paper encodings (plus
+the exact brute-force oracle): ``add`` buffers rows, ``refresh()`` returns
+a searchable near-real-time reader, and every reader searches through the
+shared staged ``SearchPipeline`` (encode -> match -> exact rerank).
+Prints R@(10,d) against the oracle (a miniature of paper Table 1), then
+walks the full segment lifecycle — incremental adds, deletes, a
+generation-numbered ``commit``, reload, and a forced merge — asserting the
+segmented index stays bit-for-bit identical to a fresh monolithic build of
+the live corpus.  (``AnnIndex.build`` remains the one-shot offline path;
+a writer with a single flush produces exactly the same results.)
 """
 import dataclasses
 import os
@@ -18,6 +23,7 @@ import numpy as np
 
 from repro.core import bruteforce, eval as ev
 from repro.core.index import AnnIndex
+from repro.core.segments import IndexWriter, SegmentedAnnIndex
 from repro.core.types import (
     BruteForceConfig,
     FakeWordsConfig,
@@ -44,7 +50,9 @@ def main():
         KdTreeConfig(dims=8, reduction="pca"),            # fast, collapsed
         BruteForceConfig(),                               # the oracle itself
     ]:
-        idx = AnnIndex.build(corpus, cfg)
+        writer = IndexWriter(cfg)
+        writer.add(corpus_np)
+        idx = writer.refresh()  # NRT reader over the flushed segment
         _, ids = idx.search(queries, params=SearchParams(k=100, depth=100))
         r10 = float(ev.recall_at(gt, ids[:, :10]))
         r100 = float(ev.recall_at(gt, ids))
@@ -55,16 +63,42 @@ def main():
         print(f"{idx.method:12s} R@(10,10)={r10:.3f} R@(10,100)={r100:.3f} "
               f"rerank@100->10={r_rr:.3f} index={idx.nbytes()/1e6:.0f}MB")
 
-    # Persistence: a built index ships to a serving process as npz + JSON.
-    idx = AnnIndex.build(corpus, FakeWordsConfig(quantization=50))
-    s0, i0 = idx.search(queries, k=10, depth=100, rerank=True)
+    # The segment lifecycle: ingest-while-serving, deletes, commit, merge.
+    cfg = FakeWordsConfig(quantization=50)
+    split = n_docs // 2
+    writer = IndexWriter(cfg)
+    writer.add(corpus_np[:split])
+    writer.flush()                      # segment 1
+    writer.add(corpus_np[split:])       # segment 2 (flushed by refresh)
+    writer.delete(np.arange(0, n_docs, 10))  # kill every 10th doc
+    reader = writer.refresh()
+    print(f"segments={reader.num_segments} live={reader.num_docs} "
+          f"deleted={reader.del_count} epoch={reader.epoch}")
+
+    # Bit-for-bit parity with a fresh monolithic build of the live corpus.
+    live = np.ones(n_docs, bool)
+    live[::10] = False
+    mono = AnnIndex.build(jnp.asarray(corpus_np[live]), cfg)
+    s_seg, i_seg = reader.search(queries, k=10, depth=100, rerank=True)
+    s_mono, i_mono = mono.search(queries, k=10, depth=100, rerank=True)
+    gmap = reader.live_global_ids()  # monolithic id j <-> gmap[j]
+    assert (gmap[np.asarray(i_mono)] == np.asarray(i_seg)).all()
+    assert (np.asarray(s_mono) == np.asarray(s_seg)).all()
+    print("segmented == monolithic live-corpus build: bit-for-bit")
+
+    # Commit points are durable and generation-numbered; merges compact.
     with tempfile.TemporaryDirectory() as tmp:
         path = os.path.join(tmp, "fakewords.ann")
-        idx.save(path)
-        loaded = AnnIndex.load(path)
-        s1, i1 = loaded.search(queries, k=10, depth=100, rerank=True)
-    assert (np.asarray(i0) == np.asarray(i1)).all()
-    print("save/load round trip: search output identical bit-for-bit")
+        gen = writer.commit(path)
+        writer.force_merge(1)           # drop deletes, remap ids
+        gen2 = writer.commit()
+        loaded = SegmentedAnnIndex.load(path)          # latest generation
+        s2, i2 = loaded.search(queries, k=10, depth=100, rerank=True)
+        assert (np.asarray(i2) == np.asarray(i_mono)).all()  # merged == mono
+        old = SegmentedAnnIndex.load(path, generation=gen)   # point-in-time
+        print(f"commit gens {gen}->{gen2}: merged reload identical to the "
+              f"monolithic build; gen {gen} still readable "
+              f"({old.num_segments} segments, {old.del_count} deletes)")
 
 
 if __name__ == "__main__":

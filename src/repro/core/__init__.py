@@ -14,3 +14,8 @@ from repro.core.types import (  # noqa: F401
 from repro.core.index import AnnIndex  # noqa: F401
 from repro.core.pipeline import SearchPipeline  # noqa: F401
 from repro.core.builder import BuildPipeline, make_build_pipeline  # noqa: F401
+from repro.core.segments import (  # noqa: F401
+    IndexWriter,
+    SegmentedAnnIndex,
+    TieredMergePolicy,
+)

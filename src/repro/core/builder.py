@@ -128,6 +128,33 @@ class IdentityTransform:
 # --------------------------------------------------------------------------
 
 
+def live_df(tf: jax.Array, live: Optional[jax.Array] = None) -> jax.Array:
+    """Per-term document frequency over the (optionally live-masked) rows.
+    Integer sum, so accumulating it per shard (psum) or per segment
+    (docs/DESIGN.md §11) matches the single-host count bit-for-bit."""
+    present = tf > 0
+    if live is not None:
+        present = present & live[:, None]
+    return jnp.sum(present, axis=0).astype(jnp.int32)
+
+
+def idf_from_df(df: jax.Array, n_total) -> jax.Array:
+    """Lucene ClassicSimilarity idf = 1 + ln(N / (df + 1))."""
+    return 1.0 + jnp.log(n_total / (df.astype(jnp.float32) + 1.0))
+
+
+def classic_scored(tf: jax.Array, idf: jax.Array, norm: jax.Array) -> jax.Array:
+    """Per-(doc, term) classic scoring matrix sqrt(tf_d)*idf^2*norm_d (bf16)
+    so query scoring is one GEMM.  Row-local given idf: the ONE formula both
+    the build stage and the segmented stats refresh (docs/DESIGN.md §11)
+    evaluate, so a segment rescored under global statistics matches a
+    monolithic build bit-for-bit."""
+    tf_f = tf.astype(jnp.float32)
+    return (jnp.sqrt(tf_f) * (idf**2)[None, :] * norm[:, None]).astype(
+        jnp.bfloat16
+    )
+
+
 @dataclasses.dataclass(frozen=True)
 class FakeWordsPostings:
     """df/idf/norm statistics + optional precomputed classic scoring matrix.
@@ -137,20 +164,15 @@ class FakeWordsPostings:
     config: FakeWordsConfig
 
     def __call__(self, tf, model, v, store, n_total, axes=None) -> FakeWordsIndex:
-        tf_f = tf.astype(jnp.float32)
-        df = jnp.sum(tf > 0, axis=0).astype(jnp.int32)
+        df = live_df(tf)
         if axes is not None:
             df = jax.lax.psum(df, axes)
-        idf = 1.0 + jnp.log(n_total / (df.astype(jnp.float32) + 1.0))
-        doc_len = jnp.sum(tf_f, axis=-1)
+        idf = idf_from_df(df, n_total)
+        doc_len = jnp.sum(tf.astype(jnp.float32), axis=-1)
         norm = jax.lax.rsqrt(jnp.maximum(doc_len, 1.0))
         scored = None
         if self.config.scoring == "classic":
-            # Per-(doc, term) scoring matrix so query scoring is one GEMM:
-            # sqrt(tf_d) * idf^2 * norm_d, stored bf16.
-            scored = (
-                jnp.sqrt(tf_f) * (idf**2)[None, :] * norm[:, None]
-            ).astype(jnp.bfloat16)
+            scored = classic_scored(tf, idf, norm)
         return FakeWordsIndex(
             tf=tf, idf=idf, norm=norm, df=df, scored=scored, **store
         )

@@ -98,12 +98,21 @@ def df_prune_mask(df: jax.Array, num_docs: int, df_max_ratio: float) -> jax.Arra
 
 
 def classic_query(
-    index: FakeWordsIndex, q_tf: jax.Array, df_max_ratio: float = 1.0
+    index: FakeWordsIndex,
+    q_tf: jax.Array,
+    df_max_ratio: float = 1.0,
+    num_docs: Optional[int] = None,
 ) -> jax.Array:
     """bf16 classic-mode query operand with the df-prune keep-mask folded in
-    (the single source of truth for every classic scoring path)."""
+    (the single source of truth for every classic scoring path).
+
+    ``num_docs`` overrides the prune threshold's collection size: a segment
+    of a :class:`repro.core.segments.SegmentedAnnIndex` masks against the
+    GLOBAL live-doc count (its ``df`` leaf already holds the global df), not
+    its own row count."""
     assert index.scored is not None, "index was built with scoring='dot'"
-    keep = df_prune_mask(index.df, index.num_docs, df_max_ratio)
+    n = index.num_docs if num_docs is None else num_docs
+    keep = df_prune_mask(index.df, n, df_max_ratio)
     return (q_tf * keep).astype(jnp.bfloat16)
 
 
@@ -121,11 +130,14 @@ def dot_query(
     q_tf: jax.Array,
     df_max_ratio: float = 1.0,
     dtype=jnp.int32,
+    num_docs: Optional[int] = None,
 ) -> jax.Array:
     """Dot-mode query operand: the [u; -u] sign-split lift (u = q+ - q-)
     with the keep-mask folded in.  ``dtype`` is int32 for the XLA einsum,
-    int8 for the MXU integer kernel path."""
-    keep = df_prune_mask(index.df, index.num_docs, df_max_ratio)
+    int8 for the MXU integer kernel path.  ``num_docs`` overrides the prune
+    threshold's collection size (see :func:`classic_query`)."""
+    n = index.num_docs if num_docs is None else num_docs
+    keep = df_prune_mask(index.df, n, df_max_ratio)
     u = signed_query(q_tf)
     return (jnp.concatenate([u, -u], axis=-1) * keep).astype(dtype)
 

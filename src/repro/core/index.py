@@ -49,7 +49,15 @@ from repro.core.types import (
     LshIndex,
     QuantizedStore,
     SearchParams,
+    next_epoch,
 )
+
+# The single-index persistence format this module reads and writes.  The
+# segmented commit-point format (core/segments.py) is format_version 2 and
+# uses directories of these v1 segment dirs plus a ``segments_N.json``
+# commit file; AnnIndex.load reads v1 only (and points the caller at
+# SegmentedAnnIndex.load for v2 commit points).
+FORMAT_VERSION = 1
 
 AnyConfig = Union[FakeWordsConfig, LexicalLshConfig, KdTreeConfig, BruteForceConfig]
 AnyIndex = Union[FakeWordsIndex, LshIndex, KdTreeIndex, FlatIndex]
@@ -70,13 +78,23 @@ _CONFIG_BY_METHOD = {
 
 @dataclasses.dataclass
 class AnnIndex:
-    """One retrieval architecture for every encoding.
+    """One retrieval architecture for every encoding — and the immutable
+    *segment* unit of the Lucene-style mutable index
+    (:mod:`repro.core.segments`: ``IndexWriter`` flushes buffered rows into
+    fresh AnnIndex segments and merges compact them; an AnnIndex itself
+    never changes after build).
 
     ``use_kernel`` / ``blockmax_keep`` / ``blockmax_block_size`` are the
     uniform serving knobs: kernel routing (None = Pallas on TPU, XLA
     elsewhere) and two-stage blockmax pruning (docs/DESIGN.md §6; fake-words
     and LSH indexes only).  Per-call ``SearchParams`` select (k, depth,
     rerank).
+
+    ``epoch`` is the process-unique snapshot identity
+    (:func:`repro.core.types.next_epoch`): the serving layer folds it into
+    its result-cache key, so swapping a service's index — or refreshing a
+    segmented one — can never serve another index's cached results.  Not
+    persisted: a loaded copy is a distinct snapshot.
     """
 
     config: AnyConfig
@@ -89,8 +107,11 @@ class AnnIndex:
     # fp32 originals.  None = auto: quantized iff the index carries ONLY the
     # int8 store (built with rerank_store="int8").
     quantized_rerank: Optional[bool] = None
+    epoch: Optional[int] = None
 
     def __post_init__(self):
+        if self.epoch is None:
+            self.epoch = next_epoch()
         self.pipeline: pl.SearchPipeline = pl.build_pipeline(self.config)
         if self.quantized_rerank is None:
             self.quantized_rerank = (
@@ -128,6 +149,7 @@ class AnnIndex:
         rerank_store: Optional[str] = None,
         mesh=None,
         shard_axes=("data",),
+        normalized: bool = False,
     ) -> "AnnIndex":
         """Build any encoding through the staged
         :class:`repro.core.builder.BuildPipeline` (docs/DESIGN.md §8) — the
@@ -138,13 +160,16 @@ class AnnIndex:
         ``rerank_store``: "exact" (fp32 originals, the default), "int8"
         (quantized store + per-doc scale; rerank gathers ~4x fewer bytes),
         or "none".  ``keep_vectors=False`` is back-compat shorthand for
-        "none"."""
+        "none".  ``normalized=True`` marks the rows as already
+        unit-normalized (the segment-merge path rebuilds from stored
+        normalized originals and must not renormalize — 1-ulp drift would
+        break segmented-vs-monolithic score parity)."""
         from repro.core import builder
 
         if rerank_store is None:
             rerank_store = "exact" if keep_vectors else "none"
         bp = builder.make_build_pipeline(config, rerank_store)
-        idx = bp.build(vectors, mesh=mesh, axes=shard_axes)
+        idx = bp.build(vectors, mesh=mesh, axes=shard_axes, normalized=normalized)
         return cls(
             config=config,
             index=idx,
@@ -218,7 +243,7 @@ class AnnIndex:
             packed[name] = a
             dtypes[name] = dtype_name
         meta = {
-            "format_version": 1,
+            "format_version": FORMAT_VERSION,
             "method": self.method,
             "config": _config_to_json(self.config),
             "dtypes": dtypes,
@@ -235,9 +260,34 @@ class AnnIndex:
     def load(cls, path: str, **overrides) -> "AnnIndex":
         """Reconstruct a saved index.  ``overrides`` replace the persisted
         serving knobs (``use_kernel``, ``blockmax_keep``,
-        ``blockmax_block_size``)."""
-        with open(os.path.join(path, "config.json")) as f:
+        ``blockmax_block_size``).  Validates ``format_version`` up front so
+        an index written by a newer format fails with a clear error instead
+        of a KeyError deep in ``_rebuild_index``."""
+        meta_path = os.path.join(path, "config.json")
+        if not os.path.exists(meta_path):
+            from repro.core import segments as seg
+
+            if seg.find_commits(path):
+                raise ValueError(
+                    f"{path!r} holds a segmented commit point "
+                    "(segments_N.json), not a single-index save; open it "
+                    "with SegmentedAnnIndex.load / IndexWriter.open "
+                    "(repro.core.segments)"
+                )
+        with open(meta_path) as f:
             meta = json.load(f)
+        version = meta.get("format_version", 1)
+        if version != FORMAT_VERSION:
+            raise ValueError(
+                f"index at {path!r} has format_version {version}, but this "
+                f"build reads format_version {FORMAT_VERSION}"
+                + (
+                    " — it was written by a newer version of the code; "
+                    "upgrade to load it"
+                    if version > FORMAT_VERSION
+                    else ""
+                )
+            )
         config = _config_from_json(meta["method"], meta["config"])
         with np.load(os.path.join(path, "index.npz")) as z:
             arrays = {

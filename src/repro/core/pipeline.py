@@ -158,6 +158,11 @@ class FakeWordsMatcher:
     ``score_tile`` (when set) bounds the XLA fallback's working set: shards
     larger than ``2 * score_tile`` docs stream tile-by-tile with a running
     top-d merge instead of materializing the dense (B, N) score matrix.
+
+    ``df_num_docs`` (when set) is the collection size the df-prune keep-mask
+    thresholds against instead of the index's own row count — the segmented
+    index (docs/DESIGN.md §11) scores every segment with GLOBAL collection
+    statistics, Lucene-IndexSearcher style.
     """
 
     scoring: str = "classic"
@@ -165,6 +170,7 @@ class FakeWordsMatcher:
     signed_store: bool = False
     score_tile: Optional[int] = None
     tile_unroll: bool = False
+    df_num_docs: Optional[int] = None
 
     def operands(self, index, q_tf: jax.Array, dtype) -> Tuple[jax.Array, jax.Array]:
         """(query operand, stored matrix) for this scoring mode; ``dtype``
@@ -172,19 +178,24 @@ class FakeWordsMatcher:
         XLA einsum)."""
         from repro.core import fakewords
 
+        n = self.df_num_docs if self.df_num_docs is not None else index.num_docs
         if self.scoring == "classic":
-            return fakewords.classic_query(index, q_tf, self.df_max_ratio), index.scored
+            return (
+                fakewords.classic_query(
+                    index, q_tf, self.df_max_ratio, num_docs=n),
+                index.scored,
+            )
         if self.signed_store:
             # index.tf holds the SIGNED (N, m) matrix; fold the sign-split
             # keep mask down to m terms.
-            keep = fakewords.df_prune_mask(
-                index.df, index.num_docs, self.df_max_ratio)
+            keep = fakewords.df_prune_mask(index.df, n, self.df_max_ratio)
             m = index.tf.shape[1]
             keep_m = keep[:m] & keep[m:] if keep.shape[0] == 2 * m else keep[:m]
             qv = (fakewords.signed_query(q_tf) * keep_m).astype(dtype)
             return qv, index.tf
         return (
-            fakewords.dot_query(index, q_tf, self.df_max_ratio, dtype=dtype),
+            fakewords.dot_query(
+                index, q_tf, self.df_max_ratio, dtype=dtype, num_docs=n),
             index.tf,
         )
 
@@ -314,6 +325,45 @@ class BlockMaxMatcher:
         return blockmax.pruned_topk(
             index, bm, q_rep, self.n_keep, depth, use_kernel=use_kernel
         )
+
+
+@dataclasses.dataclass(frozen=True)
+class LiveDocsMatcher:
+    """Lucene liveDocs as a match-stage wrapper (docs/DESIGN.md §11).
+
+    Deleted docs are masked to ``(-inf, -1)`` INSIDE the match stage — not
+    post-filtered from its output — so ``depth`` semantics survive: the
+    stage asks the inner matcher for ``depth + extra`` candidates (``extra``
+    is a bucketed upper bound on the segment's deleted-doc count, so at
+    least ``depth`` live candidates are present whenever the segment holds
+    that many) and re-reduces to the top ``depth`` live docs.  Equal-score
+    ties keep the inner matcher's lowest-doc-id order (``lax.top_k`` is
+    stable), so a segment with deletes returns exactly what a segment never
+    containing the dead rows would.
+
+    ``live`` is an explicit ``(N,)`` bool operand (True = live) rather than
+    an index leaf: the segment index stays immutable while its live-docs
+    mask mutates, exactly like Lucene's sidecar ``.liv`` bitsets.  ``extra``
+    is bucketed (next power of two) by the caller so a delete stream does
+    not recompile per delete.
+    """
+
+    inner: Any
+    extra: int = 0
+
+    def __call__(
+        self, index, q_rep: jax.Array, depth: int, live: jax.Array,
+        bm=None, use_kernel: Optional[bool] = None,
+    ) -> Tuple[jax.Array, jax.Array]:
+        n = index.num_docs
+        d_in = min(depth + self.extra, n)
+        s, i = self.inner(index, q_rep, d_in, bm=bm, use_kernel=use_kernel)
+        alive = (i >= 0) & live[jnp.maximum(i, 0)]
+        s = jnp.where(alive, s, -jnp.inf)
+        i = jnp.where(alive, i, -1)
+        d_out = min(depth, n)
+        top_s, pos = jax.lax.top_k(s, d_out)
+        return top_s, jnp.take_along_axis(i, pos, axis=-1)
 
 
 # --------------------------------------------------------------------------

@@ -1,0 +1,900 @@
+"""Lucene-style segmented mutable index: IndexWriter / commit / merge over
+immutable AnnIndex segments (docs/DESIGN.md §11).
+
+The paper's whole premise is riding Lucene's native machinery, and the most
+Lucene part of Lucene is the segmented index lifecycle that lets a real
+deployment ingest documents while serving: immutable segments + sidecar
+live-docs bitsets for deletes + generation-numbered commit points +
+background merges.  This module reproduces that lifecycle on top of the
+staged Build/Search pipelines:
+
+  * :class:`repro.core.index.AnnIndex` is the immutable **segment** unit —
+    ``IndexWriter.add`` buffers rows and flushes them through the method's
+    :class:`repro.core.builder.BuildPipeline` into a fresh segment; a built
+    segment never changes.
+  * ``IndexWriter.delete(ids)`` flips bits in a per-segment **liveDocs**
+    mask (Lucene's ``.liv`` sidecar).  Deleted docs are masked to
+    ``(-inf, -1)`` *inside the match stage*
+    (:class:`repro.core.pipeline.LiveDocsMatcher`), not post-filtered, so
+    ``depth`` semantics survive deletes exactly.
+  * ``IndexWriter.commit`` atomically persists a generation-numbered commit
+    point: per-segment v1 index dirs + per-generation live files + a
+    ``segments_N.json`` manifest written last via ``os.replace``
+    (``format_version: 2``; a plain v1 ``AnnIndex.save`` dir loads as a
+    single-segment index for read-compat).
+  * A tiered :class:`TieredMergePolicy` compacts small adjacent segments by
+    rebuilding their live rows through the same BuildPipeline stages —
+    deleted rows drop out and global doc ids remap, exactly like a Lucene
+    merge.
+  * :class:`SegmentedAnnIndex` is the point-in-time **reader**:
+    multi-segment search runs the method's jit'd matcher per segment and
+    merges per-segment top-k on global ids — the same fan-out/merge
+    architecture ``core/distributed.py`` uses across shards, here across
+    segments.
+  * ``IndexWriter.refresh()`` is the NRT reader hook: flush + snapshot, and
+    every visible mutation advances the snapshot **epoch**
+    (:func:`repro.core.types.next_epoch`) — the serving layer's
+    cache-invalidation key (``serve/ann_service.py``).
+
+**Exact global-statistics scoring.**  Lucene's IndexSearcher scores every
+leaf with collection-level statistics; we do the same so a segmented search
+is *bitwise identical* to a monolithic build of the equivalent live corpus:
+
+  * fake words — document frequency is recounted over live rows per segment
+    and summed (exact integer sum); idf and the classic ``scored`` matrix
+    are re-derived per segment from the global (df, live-N) through the
+    same :func:`repro.core.builder.classic_scored` formula the build stage
+    evaluates (row-local, so bitwise);
+  * k-d tree — the reduction refits on the concatenated live originals
+    (the one encoding whose "statistic" is a fitted model) and every
+    segment's rows re-project through the shared model (row-local matmuls,
+    so bitwise);
+  * lexical LSH / brute force — signatures and unit vectors carry no
+    collection statistics.
+
+Stats views rebuild lazily per snapshot (Lucene rebuilds per-leaf scorers
+per reader the same way); ``global_stats=False`` trades exact parity for
+per-segment statistics with no refresh cost.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import json
+import os
+import re
+from typing import Any, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bruteforce, builder, pca
+from repro.core import index as index_mod
+from repro.core import pipeline as pl
+from repro.core.index import AnnIndex, AnyConfig
+from repro.core.types import (
+    FakeWordsConfig,
+    KdTreeConfig,
+    SearchParams,
+    next_epoch,
+)
+
+SEGMENTS_FORMAT_VERSION = 2
+
+_METHOD_BY_CONFIG = {v: k for k, v in index_mod._CONFIG_BY_METHOD.items()}
+
+_COMMIT_RE = re.compile(r"^segments_(\d+)\.json$")
+
+_NEEDS_VECTORS_MSG = (
+    "requires the fp32 original vectors on every segment "
+    "(rerank_store='exact')"
+)
+
+
+def find_commits(path: str) -> List[Tuple[int, str]]:
+    """(generation, filename) for every commit point under ``path``,
+    ascending.  Empty when the directory holds no segmented commits (e.g. a
+    v1 single-index save, or nothing at all)."""
+    if not os.path.isdir(path):
+        return []
+    out = []
+    for name in os.listdir(path):
+        m = _COMMIT_RE.match(name)
+        if m:
+            out.append((int(m.group(1)), name))
+    return sorted(out)
+
+
+def _bucket(n: int) -> int:
+    """Round a deleted-doc count up to the next power of two so the
+    LiveDocsMatcher's static depth inflation doesn't recompile per
+    delete."""
+    return 0 if n <= 0 else 1 << (n - 1).bit_length()
+
+
+# --------------------------------------------------------------------------
+# Segments
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Segment:
+    """One immutable index + its mutable sidecar live-docs mask.
+
+    ``ann`` never changes after build (the Lucene segment invariant); all
+    mutation is bit-flips in ``live`` (True = live).  ``name`` is the
+    stable on-disk directory name assigned at flush time.
+    """
+
+    ann: AnnIndex
+    live: np.ndarray
+    name: str
+
+    @property
+    def num_docs(self) -> int:
+        """Total rows, deleted included (Lucene maxDoc)."""
+        return self.ann.num_docs
+
+    @property
+    def num_live(self) -> int:
+        return int(self.live.sum())
+
+    @property
+    def del_count(self) -> int:
+        return self.num_docs - self.num_live
+
+    def snapshot(self) -> "Segment":
+        """Point-in-time copy: shares the immutable index, copies the
+        mutable live mask — later writer deletes don't leak into an open
+        reader."""
+        return Segment(ann=self.ann, live=self.live.copy(), name=self.name)
+
+
+# --------------------------------------------------------------------------
+# Merge policy
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TieredMergePolicy:
+    """Lucene-style tiered merging over ADJACENT segments.
+
+    Segments land in exponential size tiers (tier t holds up to
+    ``floor_docs * merge_factor**t`` live docs); a run of ``merge_factor``
+    adjacent same-tier segments merges into one segment of the next tier,
+    so the segment count stays O(merge_factor * log(N / floor_docs)) under
+    a steady add stream.  A segment whose delete ratio reaches
+    ``expunge_ratio`` is rewritten alone (deletes drop out).  Only adjacent
+    runs merge: unlike Lucene we guarantee global doc order == add order,
+    which is what makes segmented search results identical to a monolithic
+    build of the live corpus.
+    """
+
+    merge_factor: int = 8
+    floor_docs: int = 1024
+    expunge_ratio: float = 0.5
+
+    def __post_init__(self):
+        if self.merge_factor < 2:
+            raise ValueError("merge_factor must be >= 2")
+        if not (0.0 < self.expunge_ratio <= 1.0):
+            raise ValueError("expunge_ratio must be in (0, 1]")
+
+    def tier(self, num_live: int) -> int:
+        t, cap = 0, max(1, self.floor_docs)
+        while num_live > cap:
+            cap *= self.merge_factor
+            t += 1
+        return t
+
+    def find_merge(self, segments: Sequence[Segment]) -> Optional[Tuple[int, int]]:
+        """The next ``[start, end)`` range to merge, or None when the
+        geometry is stable.  Called in a loop by ``IndexWriter``."""
+        for i, seg in enumerate(segments):
+            if seg.num_docs and seg.del_count / seg.num_docs >= self.expunge_ratio:
+                return (i, i + 1)
+        tiers = [self.tier(s.num_live) for s in segments]
+        start = 0
+        while start < len(tiers):
+            end = start
+            while end < len(tiers) and tiers[end] == tiers[start]:
+                end += 1
+            if end - start >= self.merge_factor:
+                return (start, start + self.merge_factor)
+            start = end
+        return None
+
+
+# --------------------------------------------------------------------------
+# Per-segment search (jit'd per segment, merged on global ids)
+# --------------------------------------------------------------------------
+
+
+@functools.partial(
+    jax.jit, static_argnames=("matcher", "depth", "use_kernel")
+)
+def _segment_match(
+    matcher: pl.LiveDocsMatcher,
+    view,
+    live: jax.Array,
+    base: jax.Array,
+    q_rep: jax.Array,
+    depth: int,
+    use_kernel: Optional[bool],
+):
+    """One segment's contribution: live-masked match (the method's own
+    matcher stage inside a LiveDocsMatcher) on global ids."""
+    s, i = matcher(view, q_rep, depth, live, use_kernel=use_kernel)
+    return s, jnp.where(i >= 0, i + base, -1)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "depth", "rerank", "quantized", "bases")
+)
+def _merge_candidates(
+    parts_s,
+    parts_i,
+    q_norm,
+    stores,
+    k: int,
+    depth: int,
+    rerank: bool,
+    quantized: bool,
+    bases: Tuple[int, ...],
+):
+    """Merge per-segment candidate lists exactly like the monolithic path:
+    global top-``depth`` by MATCH score first (so the rerank sees precisely
+    the candidate set a monolithic depth-d match would produce), then the
+    rerank over the merged list.  Segment-major concatenation +
+    ``lax.top_k``'s stable ties reproduce the lowest-global-id tie-break
+    bit-for-bit.
+
+    The rerank assembles the merged candidates' stored rows into ONE
+    ``(B, depth, dim)`` tensor — each segment contributes its owned
+    positions — and runs the same einsum as the monolithic reranker.
+    Unlike the distributed path's local-rerank-then-merge (which avoids
+    cross-shard vector movement), segments share a process, and scoring in
+    the merged candidate positions is what makes the rerank scores bitwise
+    equal to a monolithic build (XLA's reduction for a gathered-candidate
+    dot is position-dependent at the last bit)."""
+    all_s = jnp.concatenate(parts_s, axis=1)
+    all_i = jnp.concatenate(parts_i, axis=1)
+    top_s, pos = jax.lax.top_k(all_s, depth)
+    top_i = jnp.take_along_axis(all_i, pos, axis=-1)
+    if not rerank:
+        return top_s[:, :k], top_i[:, :k]
+    cand = scale = None
+    for base, store in zip(bases, stores):
+        rows = store[0] if quantized else store
+        n = rows.shape[0]
+        own = (top_i >= base) & (top_i < base + n)
+        safe = jnp.clip(top_i - base, 0, n - 1)
+        part = rows[safe]  # (B, depth, dim)
+        cand = part if cand is None else jnp.where(own[:, :, None], part, cand)
+        if quantized:
+            sc = store[1][safe]  # (B, depth)
+            scale = sc if scale is None else jnp.where(own, sc, scale)
+    s = jnp.einsum("bd,bcd->bc", q_norm, cand.astype(jnp.float32))
+    if quantized:
+        s = s * scale
+    s = jnp.where(top_i >= 0, s, -jnp.inf)
+    out_s, p2 = jax.lax.top_k(s, k)
+    return out_s, jnp.take_along_axis(top_i, p2, axis=-1)
+
+
+# --------------------------------------------------------------------------
+# The reader
+# --------------------------------------------------------------------------
+
+
+class SegmentedAnnIndex:
+    """Point-in-time multi-segment reader (Lucene DirectoryReader).
+
+    Immutable snapshot: segments share their (immutable) per-segment
+    AnnIndexes with the writer but own copies of the live masks, and
+    ``epoch`` identifies the snapshot for cache invalidation.  Search fans
+    out the method's matcher per segment (deleted docs masked inside the
+    match stage) and merges per-segment top-k on global ids — the shard
+    fan-out/merge architecture of ``core/distributed.py``, across segments.
+
+    Doc ids are segment-stable: global id = segment base (sum of preceding
+    segments' row counts, deleted included) + local row.  Ids survive
+    deletes; merges compact and remap them (like Lucene).
+    """
+
+    def __init__(
+        self,
+        config: AnyConfig,
+        segments: Sequence[Segment],
+        use_kernel: Optional[bool] = None,
+        global_stats: bool = True,
+        epoch: Optional[int] = None,
+    ):
+        if isinstance(config, KdTreeConfig) and config.backend == "tree":
+            raise ValueError(
+                "segmented kd-tree requires backend='scan' (identical "
+                "results, docs/DESIGN.md §3); the host-built tree arrays "
+                "cannot re-derive shared global statistics"
+            )
+        self.config = config
+        self.segments = list(segments)
+        self.use_kernel = use_kernel
+        self.global_stats = global_stats
+        self.epoch = next_epoch() if epoch is None else epoch
+        self.pipeline = pl.build_pipeline(config)
+        # Quantized rerank iff every segment carries ONLY the int8 store
+        # (v1 read-compat of an int8-rerank index; writer segments always
+        # keep the fp32 originals).
+        self.quantized_rerank = bool(self.segments) and all(
+            s.ann.index.vectors is None and s.ann.index.vq is not None
+            for s in self.segments
+        )
+        self._views: Optional[List[Any]] = None
+        self._live_dev: Optional[List[jax.Array]] = None
+        self._n_live = int(sum(s.num_live for s in self.segments))
+
+    # -- shape/identity ----------------------------------------------------
+
+    @property
+    def method(self) -> str:
+        return _METHOD_BY_CONFIG[type(self.config)]
+
+    @property
+    def num_docs(self) -> int:
+        """LIVE docs (Lucene ``numDocs``); ``max_doc`` counts deleted too."""
+        return self._n_live
+
+    @property
+    def max_doc(self) -> int:
+        return sum(s.num_docs for s in self.segments)
+
+    @property
+    def num_segments(self) -> int:
+        return len(self.segments)
+
+    @property
+    def del_count(self) -> int:
+        return self.max_doc - self._n_live
+
+    def nbytes(self) -> int:
+        return sum(s.ann.nbytes() + s.live.nbytes for s in self.segments)
+
+    def live_global_ids(self) -> np.ndarray:
+        """Stable global ids of the live docs in corpus (add) order — the
+        id mapping between this reader and a monolithic build of the
+        equivalent live corpus (monolithic id j <-> live_global_ids()[j])."""
+        parts, base = [], 0
+        for s in self.segments:
+            parts.append(np.flatnonzero(s.live) + base)
+            base += s.num_docs
+        return (
+            np.concatenate(parts) if parts else np.zeros((0,), np.int64)
+        ).astype(np.int64)
+
+    # -- global collection statistics (Lucene IndexSearcher-level) ---------
+
+    def _ensure_views(self) -> Tuple[List[Any], List[pl.LiveDocsMatcher]]:
+        if self._views is None:
+            self._live_dev = [jnp.asarray(s.live) for s in self.segments]
+            self._views = (
+                self._stat_views() if self.global_stats
+                else [s.ann.index for s in self.segments]
+            )
+        base = pl.make_matcher(self.config)
+        if self.global_stats and isinstance(base, pl.FakeWordsMatcher):
+            base = dataclasses.replace(base, df_num_docs=self._n_live)
+        matchers = [
+            pl.LiveDocsMatcher(inner=base, extra=_bucket(s.del_count))
+            for s in self.segments
+        ]
+        return self._views, matchers
+
+    def _stat_views(self) -> List[Any]:
+        segs = self.segments
+        if isinstance(self.config, FakeWordsConfig):
+            df = None
+            for s, live in zip(segs, self._live_dev):
+                d = builder.live_df(s.ann.index.tf, live)
+                df = d if df is None else df + d
+            idf = builder.idf_from_df(df, self._n_live)
+            views = []
+            for s in segs:
+                idx = s.ann.index
+                scored = (
+                    builder.classic_scored(idx.tf, idf, idx.norm)
+                    if self.config.scoring == "classic" else None
+                )
+                views.append(
+                    dataclasses.replace(idx, df=df, idf=idf, scored=scored)
+                )
+            return views
+        if isinstance(self.config, KdTreeConfig):
+            if any(s.ann.index.vectors is None for s in segs):
+                raise ValueError(
+                    "global-stats refresh for a segmented kd-tree "
+                    + _NEEDS_VECTORS_MSG
+                    + "; pass global_stats=False to score each segment "
+                    "under its own fitted reduction"
+                )
+            from repro.kernels.fused_topk import ops as fused
+
+            live_rows = [
+                np.asarray(s.ann.index.vectors)[s.live] for s in segs
+            ]
+            v_live = jnp.asarray(np.concatenate(live_rows, axis=0))
+            model, _ = pca.fit_reduction(
+                v_live, self.config.dims, self.config.reduction,
+                self.config.ppa_remove,
+            )
+            views = []
+            for s in segs:
+                red = pca.apply_reduction(model, s.ann.index.vectors).astype(
+                    jnp.float32
+                )
+                views.append(
+                    dataclasses.replace(
+                        s.ann.index, reduced=red, reduction=model,
+                        lifted=fused.lift_l2(red),
+                    )
+                )
+            return views
+        # LSH signatures and brute-force unit vectors carry no collection
+        # statistics: the stored index IS the view.
+        return [s.ann.index for s in segs]
+
+    # -- search ------------------------------------------------------------
+
+    def encode_queries(self, queries: jax.Array) -> jax.Array:
+        views, _ = self._ensure_views()
+        if not views:
+            raise ValueError("cannot encode against an empty segmented index")
+        return self.pipeline.encode(views[0], queries)
+
+    def search(
+        self,
+        queries: jax.Array,
+        k: int = 10,
+        depth: int = 100,
+        rerank: bool = False,
+        params: Optional[SearchParams] = None,
+        use_kernel: Optional[bool] = None,
+    ) -> Tuple[jax.Array, jax.Array]:
+        """Multi-segment staged search: encode once (the global-stats view
+        carries any fitted model) -> per-segment live-masked match [+ local
+        rerank gather] -> merge on global ids.  Same signature and — for a
+        healthy snapshot — bitwise the same results as ``AnnIndex.search``
+        over the equivalent live corpus (ids mapped through
+        :meth:`live_global_ids`)."""
+        p = params if params is not None else SearchParams(k=k, depth=depth, rerank=rerank)
+        if self._n_live == 0:
+            raise ValueError("segmented index has no live docs to search")
+        uk = self.use_kernel if use_kernel is None else use_kernel
+        views, matchers = self._ensure_views()
+        q_norm = bruteforce.l2_normalize(jnp.asarray(queries))
+        q_rep = self.pipeline.encoder(views[0], q_norm)
+        d_eff = min(p.depth, self._n_live)
+        k_eff = min(p.k, d_eff)
+        parts_s, parts_i, stores, bases = [], [], [], []
+        base = 0
+        for seg, view, live, matcher in zip(
+            self.segments, views, self._live_dev, matchers
+        ):
+            s, gid = _segment_match(
+                matcher, view, live, jnp.int32(base), q_rep, p.depth, uk
+            )
+            parts_s.append(s)
+            parts_i.append(gid)
+            bases.append(base)
+            base += seg.num_docs
+            if p.rerank:
+                idx = seg.ann.index
+                if self.quantized_rerank:
+                    stores.append((idx.vq.q, idx.vq.scale))
+                elif idx.vectors is not None:
+                    stores.append(idx.vectors)
+                else:
+                    raise ValueError(
+                        "rerank=True " + _NEEDS_VECTORS_MSG
+                        + " or the int8 store on every segment"
+                    )
+        return _merge_candidates(
+            tuple(parts_s), tuple(parts_i), q_norm, tuple(stores),
+            k_eff, d_eff, p.rerank, self.quantized_rerank, tuple(bases),
+        )
+
+    # -- persistence (read side; IndexWriter.commit writes) ----------------
+
+    @classmethod
+    def load(
+        cls,
+        path: str,
+        generation: Optional[int] = None,
+        **overrides,
+    ) -> "SegmentedAnnIndex":
+        """Open a commit point (latest generation by default).  A plain v1
+        ``AnnIndex.save`` directory loads as a single fully-live segment
+        (read-compat), so every pre-segmentation index remains servable."""
+        commits = find_commits(path)
+        if not commits:
+            if os.path.exists(os.path.join(path, "config.json")):
+                if generation is not None:
+                    raise FileNotFoundError(
+                        f"{path!r} is a v1 single-index save with no commit "
+                        f"generations; cannot load generation {generation}"
+                    )
+                ann = AnnIndex.load(path)
+                seg = Segment(
+                    ann=ann,
+                    live=np.ones(ann.num_docs, bool),
+                    name="seg0",
+                )
+                return cls(
+                    ann.config, [seg],
+                    use_kernel=overrides.get("use_kernel", ann.use_kernel),
+                    global_stats=overrides.get("global_stats", True),
+                )
+            raise FileNotFoundError(
+                f"no segments_N.json commit point (and no v1 config.json) "
+                f"under {path!r}"
+            )
+        if generation is None:
+            generation, fname = commits[-1]
+        else:
+            by_gen = dict(commits)
+            if generation not in by_gen:
+                raise FileNotFoundError(
+                    f"no commit generation {generation} under {path!r} "
+                    f"(have {sorted(by_gen)})"
+                )
+            fname = by_gen[generation]
+        with open(os.path.join(path, fname)) as f:
+            meta = json.load(f)
+        version = meta.get("format_version", 2)
+        if version > SEGMENTS_FORMAT_VERSION:
+            raise ValueError(
+                f"commit point {fname!r} has format_version {version}, but "
+                f"this build reads <= {SEGMENTS_FORMAT_VERSION} — it was "
+                "written by a newer version of the code; upgrade to load it"
+            )
+        config = index_mod._config_from_json(meta["method"], meta["config"])
+        segments = []
+        for e in meta["segments"]:
+            ann = AnnIndex.load(os.path.join(path, e["name"]))
+            if e.get("live_file"):
+                with np.load(os.path.join(path, e["live_file"])) as z:
+                    live = z["live"].astype(bool)
+            else:
+                live = np.ones(ann.num_docs, bool)
+            segments.append(Segment(ann=ann, live=live, name=e["name"]))
+        return cls(
+            config, segments,
+            use_kernel=overrides.get("use_kernel", meta.get("use_kernel")),
+            global_stats=overrides.get(
+                "global_stats", meta.get("global_stats", True)
+            ),
+        )
+
+
+# --------------------------------------------------------------------------
+# The writer
+# --------------------------------------------------------------------------
+
+
+class IndexWriter:
+    """Lucene IndexWriter for AnnIndex segments: buffer adds, flush through
+    the BuildPipeline, flip liveDocs bits on delete, merge by policy, and
+    atomically commit generation-numbered points.
+
+    Doc ids: ``add`` assigns consecutive global ids (segment base + row).
+    Ids are stable across adds and deletes; a merge compacts its range and
+    REMAPS every id after it (exactly Lucene's contract).  ``refresh()``
+    returns a point-in-time :class:`SegmentedAnnIndex` whose ``epoch``
+    advances only when something actually changed — an unchanged refresh
+    returns the same snapshot, so serving caches stay warm.
+
+    Requires ``rerank_store="exact"``: merges rebuild from the stored fp32
+    normalized originals (dropping deleted rows bit-for-bit), and the
+    kd-tree's global-stats refit reads them too.  int8/none stores for
+    segments are a follow-up (ROADMAP).
+    """
+
+    def __init__(
+        self,
+        config: AnyConfig,
+        path: Optional[str] = None,
+        rerank_store: str = "exact",
+        use_kernel: Optional[bool] = None,
+        merge_policy: Optional[TieredMergePolicy] = TieredMergePolicy(),
+        max_buffered_docs: Optional[int] = None,
+        global_stats: bool = True,
+    ):
+        if rerank_store != "exact":
+            raise ValueError(
+                f"IndexWriter {_NEEDS_VECTORS_MSG}: merges rebuild segments "
+                f"from the stored originals; got rerank_store={rerank_store!r}"
+            )
+        if isinstance(config, KdTreeConfig) and config.backend == "tree":
+            raise ValueError(
+                "segmented kd-tree requires backend='scan' "
+                "(docs/DESIGN.md §3/§11)"
+            )
+        self.config = config
+        self.path = path
+        self.rerank_store = rerank_store
+        self.use_kernel = use_kernel
+        self.merge_policy = merge_policy
+        self.max_buffered_docs = max_buffered_docs
+        self.global_stats = global_stats
+        self._segments: List[Segment] = []
+        self._buf: List[np.ndarray] = []
+        self._buf_live: List[np.ndarray] = []
+        self._seg_counter = 0
+        self._changed = False
+        self._reader: Optional[SegmentedAnnIndex] = None
+        # Latest commit generation THIS writer has read or written.  The
+        # commit-lineage guard (Lucene's write.lock analog): committing
+        # into a directory whose commits this writer never saw would reuse
+        # segment names against another writer's dirs.
+        self._last_gen = 0
+
+    @classmethod
+    def open(cls, path: str, **kwargs) -> "IndexWriter":
+        """Open the latest commit point under ``path`` for further writes
+        (a plain v1 ``AnnIndex.save`` dir opens as one segment: the upgrade
+        path from a frozen index to an online one)."""
+        reader = SegmentedAnnIndex.load(path)
+        kwargs.setdefault("use_kernel", reader.use_kernel)
+        kwargs.setdefault("global_stats", reader.global_stats)
+        w = cls(reader.config, path=path, **kwargs)
+        w._segments = reader.segments
+        commits = find_commits(path)
+        w._last_gen = commits[-1][0] if commits else 0
+        nums = [
+            int(m.group(1))
+            for m in (re.match(r"^seg(\d+)$", s.name) for s in w._segments)
+            if m
+        ]
+        w._seg_counter = max(nums) + 1 if nums else 0
+        return w
+
+    # -- counts ------------------------------------------------------------
+
+    @property
+    def buffered_docs(self) -> int:
+        return sum(len(c) for c in self._buf)
+
+    @property
+    def total_docs(self) -> int:
+        """Total assigned doc ids (segments + buffer, deleted included)."""
+        return sum(s.num_docs for s in self._segments) + self.buffered_docs
+
+    @property
+    def num_segments(self) -> int:
+        return len(self._segments)
+
+    def _next_name(self) -> str:
+        name = f"seg{self._seg_counter}"
+        self._seg_counter += 1
+        return name
+
+    # -- mutation ----------------------------------------------------------
+
+    def add(self, vectors) -> np.ndarray:
+        """Buffer rows; returns their assigned global doc ids.  Buffered
+        rows become searchable at the next flush/refresh/commit."""
+        rows = np.asarray(vectors, np.float32)
+        if rows.ndim == 1:
+            rows = rows[None, :]
+        if rows.ndim != 2 or rows.shape[0] == 0:
+            raise ValueError(f"add expects (n, dim) rows, got {rows.shape}")
+        start = self.total_docs
+        self._buf.append(rows)
+        self._buf_live.append(np.ones(rows.shape[0], bool))
+        if (
+            self.max_buffered_docs is not None
+            and self.buffered_docs >= self.max_buffered_docs
+        ):
+            self.flush()
+        return np.arange(start, start + rows.shape[0], dtype=np.int64)
+
+    def delete(self, ids) -> int:
+        """Flip liveDocs bits for the given global doc ids (buffered rows
+        included).  Returns the number of newly deleted docs; deleting a
+        dead id is a no-op, an unknown id raises."""
+        ids = np.atleast_1d(np.asarray(ids, np.int64))
+        bases = np.cumsum([0] + [s.num_docs for s in self._segments])
+        flushed_total = int(bases[-1])
+        newly = 0
+        for gid in ids:
+            gid = int(gid)
+            if gid < 0 or gid >= self.total_docs:
+                raise IndexError(
+                    f"unknown doc id {gid} (have {self.total_docs} docs)"
+                )
+            if gid < flushed_total:
+                si = int(np.searchsorted(bases, gid, side="right")) - 1
+                seg, loc = self._segments[si], gid - int(bases[si])
+                if seg.live[loc]:
+                    seg.live[loc] = False
+                    newly += 1
+                    self._changed = True
+            else:
+                off = gid - flushed_total
+                for chunk in self._buf_live:
+                    if off < len(chunk):
+                        if chunk[off]:
+                            chunk[off] = False
+                            newly += 1
+                        break
+                    off -= len(chunk)
+        return newly
+
+    def flush(self) -> bool:
+        """Build buffered rows into a fresh immutable segment through the
+        method's BuildPipeline, then let the merge policy react.  Returns
+        True when a segment was written."""
+        if not self._buf:
+            return False
+        rows = np.concatenate(self._buf, axis=0)
+        live = np.concatenate(self._buf_live, axis=0)
+        ann = AnnIndex.build(
+            jnp.asarray(rows), self.config,
+            rerank_store=self.rerank_store, use_kernel=self.use_kernel,
+        )
+        self._segments.append(
+            Segment(ann=ann, live=live, name=self._next_name())
+        )
+        self._buf, self._buf_live = [], []
+        self._changed = True
+        self.maybe_merge()
+        return True
+
+    # -- merging -----------------------------------------------------------
+
+    def maybe_merge(self) -> int:
+        """Run the merge policy to a fixed point; returns merges done."""
+        if self.merge_policy is None:
+            return 0
+        done = 0
+        while True:
+            rng = self.merge_policy.find_merge(self._segments)
+            if rng is None:
+                return done
+            self._merge_range(*rng)
+            done += 1
+
+    def force_merge(self, max_segments: int = 1) -> None:
+        """Compact to at most ``max_segments`` segments and expunge every
+        delete (a full merge with ``max_segments=1`` leaves one fully-live
+        segment identical to a monolithic build of the live corpus)."""
+        self.flush()
+        if max_segments < 1:
+            raise ValueError("max_segments must be >= 1")
+        while len(self._segments) > max_segments:
+            # Cheapest adjacent pair first (Lucene's smallest-merge bias).
+            sizes = [s.num_live for s in self._segments]
+            i = min(
+                range(len(sizes) - 1), key=lambda j: sizes[j] + sizes[j + 1]
+            )
+            self._merge_range(i, i + 2)
+        for i in range(len(self._segments) - 1, -1, -1):
+            if self._segments[i].del_count:
+                self._merge_range(i, i + 1)
+
+    def _merge_range(self, start: int, end: int) -> None:
+        """Rebuild segments [start, end) as one: concatenate their live
+        normalized originals (add order preserved) and run the same
+        BuildPipeline with ``normalized=True`` — deleted rows drop out and
+        ids after the range remap, exactly like a Lucene merge."""
+        group = self._segments[start:end]
+        for s in group:
+            if s.ann.index.vectors is None:
+                raise ValueError(
+                    "merging " + _NEEDS_VECTORS_MSG
+                    + f"; segment {s.name!r} has none"
+                )
+        rows = np.concatenate(
+            [np.asarray(s.ann.index.vectors)[s.live] for s in group], axis=0
+        )
+        if rows.shape[0] == 0:
+            # Every row dead: drop the segments outright.
+            del self._segments[start:end]
+            self._changed = True
+            return
+        ann = AnnIndex.build(
+            jnp.asarray(rows), self.config,
+            rerank_store=self.rerank_store, use_kernel=self.use_kernel,
+            normalized=True,
+        )
+        merged = Segment(
+            ann=ann, live=np.ones(rows.shape[0], bool), name=self._next_name()
+        )
+        self._segments[start:end] = [merged]
+        self._changed = True
+
+    # -- visibility --------------------------------------------------------
+
+    def refresh(self) -> SegmentedAnnIndex:
+        """Near-real-time reader (Lucene openIfChanged): flush the buffer
+        and return a point-in-time snapshot.  The epoch advances IFF
+        something changed; an unchanged refresh returns the cached reader,
+        so epoch-keyed serving caches stay warm."""
+        self.flush()
+        if self._reader is None or self._changed:
+            self._reader = SegmentedAnnIndex(
+                self.config,
+                [s.snapshot() for s in self._segments],
+                use_kernel=self.use_kernel,
+                global_stats=self.global_stats,
+            )
+            self._changed = False
+        return self._reader
+
+    def commit(self, path: Optional[str] = None) -> int:
+        """Flush + durably persist a generation-numbered commit point.
+
+        Layout: one v1 index dir per segment (written once — segments are
+        immutable, so later commits reuse them), a per-generation live file
+        per segment carrying deletes, and ``segments_{gen}.json`` written
+        LAST via write-to-temp + ``os.replace`` — a reader either sees the
+        complete new generation or the previous one, never a torn commit.
+        Superseded segment dirs / live files are left for older generations
+        (no GC, like Lucene without a deletion policy)."""
+        path = path if path is not None else self.path
+        if path is None:
+            raise ValueError("commit needs a path (or IndexWriter(path=...))")
+        self.path = path
+        self.flush()
+        os.makedirs(path, exist_ok=True)
+        commits = find_commits(path)
+        on_disk = commits[-1][0] if commits else 0
+        if on_disk != self._last_gen:
+            # Lineage guard (Lucene's write.lock analog): this directory
+            # holds commits this writer never read — committing would reuse
+            # segment names against another writer's dirs and silently
+            # corrupt the new generation.
+            raise ValueError(
+                f"{path!r} holds commit generation {on_disk}, but this "
+                f"writer last saw generation {self._last_gen}; open the "
+                "directory with IndexWriter.open(path) (or commit to a "
+                "fresh directory) instead of committing over a foreign "
+                "commit history"
+            )
+        gen = on_disk + 1
+        entries = []
+        for seg in self._segments:
+            seg_dir = os.path.join(path, seg.name)
+            if not os.path.exists(os.path.join(seg_dir, "config.json")):
+                seg.ann.save(seg_dir)
+            entry = {
+                "name": seg.name,
+                "num_docs": seg.num_docs,
+                "del_count": seg.del_count,
+                "live_file": None,
+            }
+            if seg.del_count:
+                live_file = os.path.join(seg.name, f"live_gen{gen}.npz")
+                np.savez_compressed(
+                    os.path.join(path, live_file), live=seg.live
+                )
+                entry["live_file"] = live_file
+            entries.append(entry)
+        meta = {
+            "format_version": SEGMENTS_FORMAT_VERSION,
+            "generation": gen,
+            "method": _METHOD_BY_CONFIG[type(self.config)],
+            "config": index_mod._config_to_json(self.config),
+            "total_docs": sum(s.num_docs for s in self._segments),
+            "num_live": sum(s.num_live for s in self._segments),
+            "segments": entries,
+            "use_kernel": self.use_kernel,
+            "global_stats": self.global_stats,
+        }
+        final = os.path.join(path, f"segments_{gen}.json")
+        tmp = final + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(meta, f, indent=2)
+        os.replace(tmp, final)
+        self._last_gen = gen
+        return gen

@@ -9,10 +9,34 @@ sharded with ``jax.device_put`` / ``NamedSharding`` and passed through ``jit``.
 from __future__ import annotations
 
 import dataclasses
+import itertools
 from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+
+# --------------------------------------------------------------------------
+# Index epochs
+# --------------------------------------------------------------------------
+
+_EPOCHS = itertools.count(1)
+
+
+def next_epoch() -> int:
+    """Process-unique, monotonically increasing index epoch.
+
+    Every searchable index snapshot (an ``AnnIndex``, or a
+    ``SegmentedAnnIndex`` refresh) carries a distinct epoch, and every
+    mutation the ``IndexWriter`` makes visible (flush / delete / merge)
+    advances it — so the epoch is the cache-invalidation hook for online
+    index updates: the serving layer folds it into its result-cache key
+    (docs/DESIGN.md §11) and a swapped or refreshed index can never serve
+    another index's cached results.  Lives here (the dependency-free leaf
+    module) so ``core/index.py``, ``core/segments.py`` and
+    ``serve/ann_service.py`` share one counter without import cycles.
+    """
+    return next(_EPOCHS)
+
 
 # --------------------------------------------------------------------------
 # Method configs

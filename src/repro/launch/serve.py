@@ -4,6 +4,7 @@
     PYTHONPATH=src python -m repro.launch.serve --method lsh
     PYTHONPATH=src python -m repro.launch.serve --save-index /tmp/idx.ann
     PYTHONPATH=src python -m repro.launch.serve --quantized-rerank
+    PYTHONPATH=src python -m repro.launch.serve --segments 8
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
         PYTHONPATH=src python -m repro.launch.serve --shards 8
 
@@ -18,6 +19,14 @@ brute-force oracle plus the service's own latency percentiles.  With
 materialization on any shard) and serves through the pod fan-out/merge
 path; ``--quantized-rerank`` swaps the rerank store for the int8 + per-doc
 scale QuantizedStore (~4x fewer rerank gather bytes).
+
+With ``--segments N`` the corpus is INGESTED ONLINE through the Lucene-style
+``IndexWriter`` (docs/DESIGN.md §11): the service starts on the first chunk
+and the remaining chunks arrive between query rounds via
+``writer.add`` + ``service.refresh()`` — near-real-time serving with the
+epoch-keyed result cache; 10% of the corpus is then deleted and the index
+force-merged to one segment, demonstrating the full segment lifecycle the
+frozen facade cannot express.
 """
 from __future__ import annotations
 
@@ -30,6 +39,7 @@ import jax.numpy as jnp
 
 from repro.core import bruteforce, eval as ev
 from repro.core.index import AnnIndex
+from repro.core.segments import IndexWriter
 from repro.core.types import (
     BruteForceConfig,
     FakeWordsConfig,
@@ -54,6 +64,66 @@ def make_config(args):
     if args.method == "bruteforce":
         return BruteForceConfig()
     raise ValueError(f"unknown method {args.method}")
+
+
+def serve_segmented(args, corpus, queries) -> dict:
+    """Online-ingestion serving loop: start on the first chunk, stream the
+    rest through ``writer.add`` + ``service.refresh()`` between query
+    rounds, then delete 10% and force-merge — the segment lifecycle end to
+    end, with recall measured against the final live corpus."""
+    rng = np.random.default_rng(0)
+    config = make_config(args)
+    writer = IndexWriter(config)
+    chunks = np.array_split(np.asarray(corpus), args.segments)
+    t0 = time.time()
+    writer.add(chunks[0])
+    svc = AnnService(writer=writer, service=AnnServiceConfig(
+        k=args.k, depth=args.depth, rerank=args.rerank,
+        max_batch=args.batch, cache_size=64))
+    svc.search_batch(queries[: args.batch])  # warmup/compile
+    svc.reset_latency()
+    for chunk in chunks[1:]:
+        writer.add(chunk)
+        svc.refresh()
+        svc.search_batch(queries[: args.batch])  # serve between ingests
+    ingest_s = time.time() - t0
+    # Delete a random 10% of everything ingested, then serve the rest.
+    dead = rng.choice(args.n_docs, size=args.n_docs // 10, replace=False)
+    writer.delete(dead)
+    svc.refresh()
+    n_seg_before = svc.ann.num_segments
+    ids_all = []
+    for i in range(0, len(queries), args.batch):
+        _, ids = svc.search_batch(queries[i : i + args.batch])
+        ids_all.append(ids)
+    ids_all = np.concatenate(ids_all)
+    # Ground truth over the LIVE corpus, mapped to stable global ids.
+    live = np.ones(args.n_docs, bool)
+    live[dead] = False
+    gmap = svc.ann.live_global_ids()
+    _, gt_i = bruteforce.exact_topk(
+        jnp.asarray(np.asarray(corpus)[live]), jnp.asarray(queries), args.k)
+    gt_global = gmap[np.asarray(gt_i)]
+    recall = float(ev.recall_at(jnp.asarray(gt_global), jnp.asarray(ids_all)))
+    t1 = time.time()
+    writer.force_merge(1)
+    svc.refresh()
+    merge_s = time.time() - t1
+    stats = svc.stats()
+    out = {
+        "method": svc.ann.method,
+        "recall@k": round(recall, 4),
+        "p50_ms_per_batch": stats["lat_p50_ms"],
+        "p99_ms_per_batch": stats["lat_p99_ms"],
+        "segments_before_merge": n_seg_before,
+        "merge_s": round(merge_s, 2),
+        "ingest_s": round(ingest_s, 2),
+        "live_docs": stats["num_docs"],
+        "epoch": stats["epoch"],
+        "cache": (stats["cache_hits"], stats["cache_misses"]),
+    }
+    print(f"[serve] segmented NRT {out}")
+    return out
 
 
 def main(argv=None) -> dict:
@@ -88,12 +158,35 @@ def main(argv=None) -> dict:
         help="rerank from the int8 + per-doc-scale QuantizedStore instead "
              "of fp32 originals (~4x fewer rerank gather bytes)",
     )
+    ap.add_argument(
+        "--segments", type=int, default=0,
+        help="ingest the corpus ONLINE in this many chunks through the "
+             "Lucene-style IndexWriter (segmented NRT serving with "
+             "deletes + a forced merge; docs/DESIGN.md §11)",
+    )
     args = ap.parse_args(argv)
 
     corpus = embeddings.make_corpus(
         embeddings.CorpusConfig(n_vectors=args.n_docs, dim=args.dim)
     )
     queries, qids = embeddings.make_queries(corpus, args.queries)
+
+    if args.segments:
+        if args.shards:
+            raise SystemExit("--segments and --shards are mutually exclusive")
+        if args.save_index:
+            raise SystemExit(
+                "--segments persists via IndexWriter.commit, not "
+                "--save-index; use writer.commit(path) / "
+                "SegmentedAnnIndex.load(path)"
+            )
+        if args.quantized_rerank:
+            raise SystemExit(
+                "--segments requires the exact rerank store (merges "
+                "rebuild from stored originals); --quantized-rerank is "
+                "unsupported there"
+            )
+        return serve_segmented(args, corpus, queries)
 
     mesh = None
     if args.shards:

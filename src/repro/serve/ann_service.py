@@ -1,20 +1,32 @@
-"""Batched ANN query service over any AnnIndex — single-device or sharded.
+"""Batched ANN query service over any AnnIndex — single-device, sharded, or
+segmented (near-real-time).
 
 The serving-side realization of the paper: a query stream is micro-batched
 (latency/throughput knob), encoded through the index's pipeline encoder
 (tf row / MinHash signature / reduced point / identity), and searched
 through the SAME staged pipeline as offline search — single-device under
-``jit``, or pod-sharded via ``core/distributed.py`` (local match stage +
+``jit``, pod-sharded via ``core/distributed.py`` (local match stage +
 local top-d + local rerank + tiny all-gather merge, the Lucene
-query-fan-out/merge architecture), one jit'd function per batch.
+query-fan-out/merge architecture), or across the segments of a mutable
+:class:`repro.core.segments.SegmentedAnnIndex`, one jit'd function per
+batch (per segment, when segmented).
 
 Every encoding — fake words, lexical LSH, k-d scan, brute force — serves
 through one code path; there are no per-method branches here.  An index
-built offline ships in via ``AnnIndex.load`` (see ``core/index.py``).
-Indexes carrying the int8 :class:`repro.core.types.QuantizedStore` rerank
-automatically through the quantized gather (single-device AND sharded),
-and ``AnnServiceConfig.cache_size`` enables the per-shard LRU result
-cache keyed on the encoded query representation (docs/DESIGN.md §8).
+built offline ships in via ``AnnIndex.load`` (see ``core/index.py``) or
+``SegmentedAnnIndex.load`` (a commit point).  Indexes carrying the int8
+:class:`repro.core.types.QuantizedStore` rerank automatically through the
+quantized gather (single-device AND sharded), and
+``AnnServiceConfig.cache_size`` enables the per-shard LRU result cache
+keyed on the encoded query representation (docs/DESIGN.md §8).
+
+**Online serving** (docs/DESIGN.md §11): construct with ``writer=`` (an
+:class:`repro.core.segments.IndexWriter`) and call :meth:`AnnService.refresh`
+after ingesting — the service re-points at the writer's latest NRT
+snapshot.  Every searchable snapshot carries a process-unique **epoch**
+(:func:`repro.core.types.next_epoch`) that joins the result-cache key, so
+a refresh (or an explicit :meth:`AnnService.set_index` swap) can never
+serve another index generation's cached results.
 """
 from __future__ import annotations
 
@@ -32,47 +44,62 @@ from jax.sharding import Mesh
 from repro.core import bruteforce, distributed
 from repro.core import pipeline as pl
 from repro.core.index import AnnIndex, AnyConfig, AnyIndex
+from repro.core.segments import IndexWriter, SegmentedAnnIndex
 from repro.core.types import FakeWordsIndex, LshIndex
 
 
 @dataclasses.dataclass
 class AnnServiceConfig:
+    # NOTE: ``max_wait_s`` (a batching window for a streaming deployment)
+    # was dead config — ``search_batch`` is synchronous, so there is never
+    # anything to wait for — and was removed; an async admission queue
+    # would reintroduce it alongside the queue (see serve/engine.py for
+    # the continuous-batching shape it would take).
     k: int = 10
     depth: int = 100
     rerank: bool = True
     max_batch: int = 64       # micro-batch size (pad to this)
-    max_wait_s: float = 0.002  # batching window in a real deployment
     # Route the match phase through the fused streaming score->top-k Pallas
     # kernel (docs/DESIGN.md §4).  None = kernel on TPU, XLA elsewhere.
     use_kernel: Optional[bool] = None
     # Two-stage blockmax pruning (docs/DESIGN.md §6): keep this many blocks
     # per query (per shard when sharded) in the match phase.  None disables.
     # Cuts streamed index bytes ~(1 - kept/total) at a small recall cost.
-    # Fake-words and LSH indexes only.
+    # Fake-words and LSH indexes only (monolithic; not segmented).
     blockmax_keep: Optional[int] = None
     blockmax_block_size: int = 256
     # Latency ring-buffer length for stats() p50/p99 (per-batch wall times).
     latency_window: int = 1024
     # Per-shard result cache (ROADMAP follow-up): LRU over the last
     # ``cache_size`` micro-batches, keyed on the hash of the ENCODED query
-    # representation bytes + the effective SearchParams/knobs — so a repeated
+    # representation bytes + the effective SearchParams/knobs + the index
+    # EPOCH (so swapping or refreshing the index invalidates) — a repeated
     # query stream skips the match+rerank entirely on this serving shard.
     # 0 disables.  Hit/miss counters surface in stats().
     cache_size: int = 0
 
 
 class AnnService:
-    """Single- or multi-device search service over any AnnIndex."""
+    """Single-device, sharded, or segmented search service over any
+    AnnIndex / SegmentedAnnIndex."""
 
     def __init__(
         self,
-        index: Union[AnnIndex, AnyIndex],
+        index: Union[AnnIndex, SegmentedAnnIndex, AnyIndex, None] = None,
         config: Optional[AnyConfig] = None,
         service: Optional[AnnServiceConfig] = None,
         mesh: Optional[Mesh] = None,
         shard_axes: Sequence[str] = (),
+        writer: Optional[IndexWriter] = None,
     ):
-        if isinstance(index, AnnIndex):
+        if writer is not None:
+            if index is not None:
+                raise ValueError("pass index= or writer=, not both")
+            index = writer.refresh()
+        self.writer = writer
+        if index is None:
+            raise ValueError("AnnService needs an index or a writer")
+        if isinstance(index, (AnnIndex, SegmentedAnnIndex)):
             # AnnService(ann) / AnnService(ann, service_cfg) forms.
             if service is None and isinstance(config, AnnServiceConfig):
                 config, service = None, config
@@ -84,11 +111,28 @@ class AnnService:
             ann = index
         else:
             ann = AnnIndex(config=config, index=index)
-        self.ann = ann
-        self.index = ann.index      # back-compat aliases
-        self.config = ann.config
         self.scfg = service if service is not None else AnnServiceConfig()
         self.mesh = mesh
+        self.shard_axes = tuple(shard_axes)
+        self._bind(ann)
+        self.queries_served = 0
+        self.batches = 0
+        self._lat_s = collections.deque(maxlen=self.scfg.latency_window)
+        self._cache: "collections.OrderedDict[bytes, Tuple[np.ndarray, np.ndarray]]" = (
+            collections.OrderedDict()
+        )
+        self.cache_hits = 0
+        self.cache_misses = 0
+
+    def _bind(self, ann: Union[AnnIndex, SegmentedAnnIndex]) -> None:
+        """Point the service at a searchable snapshot and derive the
+        effective serving knobs.  Called from __init__ and on every
+        set_index / refresh swap; the snapshot's epoch in the cache key is
+        what keeps previously cached results unreachable."""
+        self.ann = ann
+        self.index = getattr(ann, "index", ann)  # back-compat alias
+        self.config = ann.config
+        self._segmented = isinstance(ann, SegmentedAnnIndex)
         # Effective serving knobs: the service config overrides, else the
         # index-level settings (an AnnIndex built/loaded with blockmax_keep
         # or use_kernel serves with them by default).
@@ -96,12 +140,26 @@ class AnnService:
             self._bm_keep = self.scfg.blockmax_keep
             self._bm_block = self.scfg.blockmax_block_size
         else:
-            self._bm_keep = ann.blockmax_keep
-            self._bm_block = ann.blockmax_block_size
+            self._bm_keep = getattr(ann, "blockmax_keep", None)
+            self._bm_block = getattr(ann, "blockmax_block_size", 256)
         self._uk = (
             self.scfg.use_kernel if self.scfg.use_kernel is not None
             else ann.use_kernel
         )
+        if self._segmented:
+            if self.mesh is not None:
+                raise ValueError(
+                    "segmented serving is single-process; shard the corpus "
+                    "with mesh= over a monolithic index instead"
+                )
+            if self._bm_keep is not None:
+                raise ValueError(
+                    "blockmax pruning is not supported for segmented "
+                    "indexes (ROADMAP follow-up)"
+                )
+            self._bm = None
+            self._search = None
+            return
         self._bm = None
         if self._bm_keep is not None:
             if not isinstance(ann.index, (FakeWordsIndex, LshIndex)):
@@ -109,9 +167,9 @@ class AnnService:
                     f"blockmax pruning is not supported for {ann.method}"
                 )
             signed = getattr(ann.config, "signed_store", False)
-            if mesh is not None:
+            if self.mesh is not None:
                 self._bm = distributed.build_blockmax_sharded(
-                    mesh, ann.index, shard_axes, self._bm_block,
+                    self.mesh, ann.index, self.shard_axes, self._bm_block,
                     signed_store=signed,
                 )
             elif ann.bm is not None and ann.bm.block_size == self._bm_block:
@@ -122,7 +180,7 @@ class AnnService:
                 self._bm = blockmax.build_blockmax(
                     ann.index, self._bm_block, signed_store=signed,
                 )
-        if mesh is not None:
+        if self.mesh is not None:
             # The rerank gather must read the store the index was built
             # with: int8 quantized, fp32 originals, or none.
             if ann.quantized_rerank:
@@ -130,7 +188,7 @@ class AnnService:
             else:
                 rs = "exact" if ann.index.vectors is not None else "none"
             self._search = distributed.make_sharded_search(
-                mesh, ann.config, shard_axes,
+                self.mesh, ann.config, self.shard_axes,
                 k=self.scfg.k, depth=self.scfg.depth, rerank=self.scfg.rerank,
                 use_kernel=self._uk,
                 blockmax_keep=self._bm_keep,
@@ -138,14 +196,33 @@ class AnnService:
             )
         else:
             self._search = None
-        self.queries_served = 0
-        self.batches = 0
-        self._lat_s = collections.deque(maxlen=self.scfg.latency_window)
-        self._cache: "collections.OrderedDict[bytes, Tuple[np.ndarray, np.ndarray]]" = (
-            collections.OrderedDict()
-        )
-        self.cache_hits = 0
-        self.cache_misses = 0
+
+    # -- online index updates ----------------------------------------------
+
+    def set_index(self, index: Union[AnnIndex, SegmentedAnnIndex]) -> int:
+        """Swap the served index for a new snapshot.  Returns the new
+        epoch; the epoch-keyed cache makes the old index's cached results
+        unreachable (no eviction sweep needed)."""
+        if not isinstance(index, (AnnIndex, SegmentedAnnIndex)):
+            raise TypeError(
+                "set_index takes an AnnIndex or SegmentedAnnIndex"
+            )
+        self._bind(index)
+        return self.ann.epoch
+
+    def refresh(self) -> int:
+        """Near-real-time visibility: pull the writer's latest snapshot
+        (flushing its buffered adds) and serve it.  Returns the serving
+        epoch — unchanged when the writer had nothing new, so the result
+        cache stays warm across no-op refreshes."""
+        if self.writer is None:
+            raise ValueError(
+                "refresh() needs a service constructed with writer="
+            )
+        self._bind(self.writer.refresh())
+        return self.ann.epoch
+
+    # -- serving -----------------------------------------------------------
 
     def _matcher(self):
         """The effective match stage for single-device serving."""
@@ -153,18 +230,21 @@ class AnnService:
 
     def _cache_key(self, q_rep, q) -> bytes:
         """Result-cache key: the encoded query representation's bytes plus
-        every knob that changes the result.  When reranking, the raw
-        normalized queries join the hash — distinct queries can collide on
-        a quantized rep (tf row / signature), and their exact rerank scores
-        would differ.  Note np.asarray(q_rep) blocks on the (tiny) encoder
-        before the search dispatch; that host sync is the price of rep-level
-        keying and only paid when the cache is enabled."""
+        every knob that changes the result — INCLUDING the index epoch, so
+        a swapped/refreshed index can never serve a stale entry.  When
+        reranking, the raw normalized queries join the hash — distinct
+        queries can collide on a quantized rep (tf row / signature), and
+        their exact rerank scores would differ.  Note np.asarray(q_rep)
+        blocks on the (tiny) encoder before the search dispatch; that host
+        sync is the price of rep-level keying and only paid when the cache
+        is enabled."""
         h = hashlib.sha1(np.asarray(q_rep).tobytes())
-        if self.scfg.rerank:
+        if self.scfg.rerank and q is not None:
             h.update(np.asarray(q).tobytes())
         h.update(
             repr((self.scfg.k, self.scfg.depth, self.scfg.rerank,
-                  self._bm_keep, self._bm_block, self._uk)).encode()
+                  self._bm_keep, self._bm_block, self._uk,
+                  getattr(self.ann, "epoch", 0))).encode()
         )
         return h.digest()
 
@@ -182,15 +262,29 @@ class AnnService:
         out_s, out_i = [], []
         for i in range(0, queries.shape[0], mb):
             t0 = time.perf_counter()
-            q = bruteforce.l2_normalize(jnp.asarray(queries[i : i + mb]))
-            q_rep = self.ann.pipeline.encoder(self.ann.index, q)
-            key = self._cache_key(q_rep, q) if use_cache else None
+            q_np = queries[i : i + mb]
+            if self._segmented:
+                # The segmented reader encodes per search (its global-stats
+                # view owns any fitted model), so key on the raw query
+                # bytes; the epoch in the key still pins the snapshot.
+                key = self._cache_key(q_np, None) if use_cache else None
+                q = q_rep = None
+            else:
+                q = bruteforce.l2_normalize(jnp.asarray(q_np))
+                q_rep = self.ann.pipeline.encoder(self.ann.index, q)
+                key = self._cache_key(q_rep, q) if use_cache else None
             if use_cache and key in self._cache:
                 self._cache.move_to_end(key)
                 s_np, i_np = self._cache[key]
                 self.cache_hits += 1
             else:
-                if self._search is not None:
+                if self._segmented:
+                    s, ids = self.ann.search(
+                        jnp.asarray(q_np), k=self.scfg.k,
+                        depth=self.scfg.depth, rerank=self.scfg.rerank,
+                        use_kernel=self._uk,
+                    )
+                elif self._search is not None:
                     if self._bm is not None:
                         s, ids = self._search(self.ann.index, self._bm, q_rep, q)
                     else:
@@ -230,6 +324,8 @@ class AnnService:
             "index_bytes": self.ann.nbytes(),
             "num_docs": self.ann.num_docs,
             "method": self.ann.method,
+            "epoch": getattr(self.ann, "epoch", None),
+            "segments": getattr(self.ann, "num_segments", None),
             "lat_p50_ms": round(float(np.percentile(lat_ms, 50)), 3) if lat_ms.size else None,
             "lat_p99_ms": round(float(np.percentile(lat_ms, 99)), 3) if lat_ms.size else None,
             "cache_hits": self.cache_hits,
