@@ -12,6 +12,8 @@ construction.
 """
 from __future__ import annotations
 
+import json
+import os
 import time
 from typing import Dict, List, Tuple
 
@@ -370,6 +372,111 @@ def segments_bench(
     return rows, summary
 
 
+def quantized_ab(
+    n_docs: int, dim: int, batch: int, depth: int = 100, k: int = 10,
+    group: int = 32, n_calls: int = 20,
+) -> Tuple[List[Dict], Dict]:
+    """fp32 vs int8 vs int4 primary postings A/B (docs/DESIGN.md §12):
+    build wall time, match-only QPS and p50/p99 latency, recall@10 against
+    the exact oracle, and match-stage bytes streamed per full scan.
+
+    Two method families: the cosine path (FlatIndex; a genuine 4-byte/elem
+    fp32 baseline, so the byte cuts are the headline 4x / 6x numbers) and
+    fake-words classic (whose fp32 store is the bf16 ``scored`` matrix plus
+    the int8 tf).  Every row serves the full read path the budget planner
+    pairs with a quantized store — match at ``depth`` candidates, rerank
+    through the SAME int8 store — so ``recall_at_10`` isolates the match
+    encoding (the rerank cost is constant across rows) and
+    ``match_recall_at_10`` keeps the raw pre-rerank stage number.  Byte
+    accounting reuses
+    :func:`repro.core.memory_budget.postings_bytes_per_doc` so the A/B rows
+    and the budget planner can never disagree.  The acceptance bars — int8
+    >= 3.5x fewer match bytes within 0.02 recall of fp32, int4 >= 6x within
+    0.05 — are recorded per row as ``bytes_cut_vs_fp32`` /
+    ``recall_delta_vs_fp32`` on the cosine family."""
+    from repro.core import eval as ev
+    from repro.core import memory_budget as mb
+
+    rng = np.random.default_rng(0)
+    vecs = jnp.asarray(rng.normal(size=(n_docs, dim)).astype(np.float32))
+    queries = vecs[:batch] + 0.01 * jnp.asarray(
+        rng.normal(size=(batch, dim)).astype(np.float32))
+    uk = None if jax.default_backend() == "tpu" else False
+    _, gt = bruteforce.exact_topk(vecs, queries, k, use_kernel=uk)
+    rows: List[Dict] = []
+    summary: Dict = {"depth": depth, "group": group, "k": k}
+    for cfg in (BruteForceConfig(), FakeWordsConfig(quantization=50)):
+        base: Dict = {}
+        for pp in ("fp32", "int8", "int4"):
+            t0 = time.perf_counter()
+            ann = AnnIndex.build(
+                vecs, cfg, rerank_store="int8", primary_postings=pp,
+                postings_group=group, use_kernel=uk,
+            )
+            jax.block_until_ready(jax.tree_util.tree_leaves(ann.index))
+            build_s = time.perf_counter() - t0
+
+            def search(a=ann, rerank=True):
+                return a.search(queries, k=k, depth=depth, rerank=rerank)
+
+            jax.block_until_ready(search())  # compile
+            lat = []
+            for _ in range(n_calls):
+                t1 = time.perf_counter()
+                jax.block_until_ready(search())
+                lat.append(time.perf_counter() - t1)
+            lat_ms = np.asarray(lat, np.float64) * 1e3
+            _, ids = search()
+            recall = float(ev.recall_at(gt, ids))
+            _, ids_m = search(rerank=False)
+            match_recall = float(ev.recall_at(gt, ids_m))
+            match_mb = (
+                n_docs * mb.postings_bytes_per_doc(cfg, dim, pp, group) / 1e6
+            )
+            row = {
+                "method": ann.method,
+                "postings": pp,
+                "build_s": round(build_s, 3),
+                "qps": round(batch / float(np.percentile(lat_ms, 50)) * 1e3, 1),
+                "p50_ms": round(float(np.percentile(lat_ms, 50)), 3),
+                "p99_ms": round(float(np.percentile(lat_ms, 99)), 3),
+                "recall_at_10": round(recall, 4),
+                "match_recall_at_10": round(match_recall, 4),
+                "match_mb": round(match_mb, 3),
+            }
+            if pp == "fp32":
+                base = {"mb": match_mb, "recall": recall}
+            row["bytes_cut_vs_fp32"] = round(base["mb"] / match_mb, 2)
+            row["recall_delta_vs_fp32"] = round(base["recall"] - recall, 4)
+            rows.append(row)
+            summary.setdefault(ann.method, {})[pp] = {
+                "bytes_cut": row["bytes_cut_vs_fp32"],
+                "recall_delta": row["recall_delta_vs_fp32"],
+            }
+    return rows, summary
+
+
+def emit_bench6(
+    path: str, n_docs: int = 20_000, dim: int = 300, batch: int = 64,
+) -> Dict:
+    """Write the quantized-read-path A/B artifact consumed by
+    :func:`repro.core.memory_budget.load_frontier` and validated in CI."""
+    rows, summary = quantized_ab(n_docs, dim, batch)
+    bench = {
+        "bench": 6,
+        "backend": jax.default_backend(),
+        "n_docs": n_docs,
+        "dim": dim,
+        "batch": batch,
+        "quantized_ab": rows,
+        "summary": summary,
+    }
+    with open(path, "w") as f:
+        json.dump(bench, f, indent=2)
+        f.write("\n")
+    return bench
+
+
 def run(n_docs: int = 50_000, dim: int = 300, batch: int = 64) -> List[Dict]:
     rng = np.random.default_rng(0)
     vecs = jnp.asarray(rng.normal(size=(n_docs, dim)).astype(np.float32))
@@ -469,12 +576,32 @@ def main(n_docs: int = 50_000, dim: int = 300, batch: int = 64):
         f"{s_summary['post_merge_recall']:.3f} "
         f"(1-seg {s_summary[1]['recall']:.3f})"
     )
+    q_rows, q_summary = quantized_ab(min(n_docs, 20_000), dim, batch)
+    _print_rows(q_rows)
+    for method, per_pp in q_summary.items():
+        if not isinstance(per_pp, dict) or "int8" not in per_pp:
+            continue
+        print(
+            f"quantized[{method}]: int8 {per_pp['int8']['bytes_cut']:.1f}x "
+            f"fewer match bytes (recall@10 delta "
+            f"{per_pp['int8']['recall_delta']:+.4f}), int4 "
+            f"{per_pp['int4']['bytes_cut']:.1f}x (delta "
+            f"{per_pp['int4']['recall_delta']:+.4f}) vs fp32"
+        )
     return (
-        rows + pl_rows + f_rows + p_rows + b_rows + r_rows + s_rows,
+        rows + pl_rows + f_rows + p_rows + b_rows + r_rows + s_rows + q_rows,
         {**summary, "blockmax": p_summary, "rerank": r_summary,
-         "segments": s_summary},
+         "segments": s_summary, "quantized": q_summary},
     )
 
 
 if __name__ == "__main__":
-    main()
+    import sys
+
+    if "--bench6" in sys.argv:
+        out = os.path.join(os.path.dirname(__file__), "BENCH_6.json")
+        bench = emit_bench6(out)
+        _print_rows(bench["quantized_ab"])
+        print(f"wrote {out}")
+    else:
+        main()

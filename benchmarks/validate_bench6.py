@@ -1,0 +1,47 @@
+"""CI gate for the quantized read-path A/B artifact (docs/DESIGN.md §12).
+
+    PYTHONPATH=src python benchmarks/validate_bench6.py [path]
+
+Checks that ``benchmarks/BENCH_6.json`` carries every key the memory-budget
+planner and the perf narrative depend on, that all three encodings are
+present, that :func:`repro.core.memory_budget.load_frontier` can re-order
+the frontier from it, and that the recorded cosine-family A/B clears the
+acceptance bars: int8 >= 3.5x fewer match-stage bytes within 0.02 recall@10
+of fp32, int4 >= 6x within 0.05.
+"""
+import json
+import sys
+
+from repro.core import memory_budget as mb
+
+REQUIRED_ROW_KEYS = {
+    "method", "postings", "build_s", "qps", "p50_ms", "p99_ms",
+    "recall_at_10", "match_recall_at_10", "match_mb",
+    "bytes_cut_vs_fp32", "recall_delta_vs_fp32",
+}
+
+
+def validate(path: str) -> None:
+    with open(path) as f:
+        bench = json.load(f)
+    rows = bench.get("quantized_ab")
+    assert rows, "no quantized_ab rows"
+    for row in rows:
+        missing = REQUIRED_ROW_KEYS - set(row)
+        assert not missing, f"row {row.get('method')}/{row.get('postings')} missing {missing}"
+    assert {r["postings"] for r in rows} == {"fp32", "int8", "int4"}
+    frontier = mb.load_frontier(path)
+    assert len(frontier) == len(mb.DEFAULT_FRONTIER), frontier
+    cos = {r["postings"]: r for r in rows if r["method"] == "bruteforce"}
+    assert cos, "no cosine-family (bruteforce) rows"
+    assert cos["int8"]["bytes_cut_vs_fp32"] >= 3.5, cos["int8"]
+    assert cos["int8"]["recall_delta_vs_fp32"] <= 0.02, cos["int8"]
+    assert cos["int4"]["bytes_cut_vs_fp32"] >= 6.0, cos["int4"]
+    assert cos["int4"]["recall_delta_vs_fp32"] <= 0.05, cos["int4"]
+    print(f"{path} ok: {len(rows)} A/B rows, "
+          f"int8 {cos['int8']['bytes_cut_vs_fp32']}x / "
+          f"int4 {cos['int4']['bytes_cut_vs_fp32']}x match-byte cut")
+
+
+if __name__ == "__main__":
+    validate(sys.argv[1] if len(sys.argv) > 1 else "benchmarks/BENCH_6.json")

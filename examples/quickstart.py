@@ -100,6 +100,24 @@ def main():
               f"monolithic build; gen {gen} still readable "
               f"({old.num_segments} segments, {old.del_count} deletes)")
 
+    # The quantized read path under a memory budget (docs/DESIGN.md §12):
+    # state ONE resident-bytes number and the planner picks the best-recall
+    # {fp32,int8,int4} postings x {exact,int8,none} rerank that fits —
+    # here ~3x below the fp32+exact footprint, so it lands on a quantized
+    # store with dequant fused into the score stage.
+    full = AnnIndex.build(corpus, cfg)  # fp32 postings + fp32 rerank store
+    budget = int(full.nbytes() / 3)
+    ann_q = AnnIndex.build(corpus, cfg, memory_budget_bytes=budget)
+    can_rerank = ann_q.index.vectors is not None or ann_q.index.vq is not None
+    _, ids_q = ann_q.search(
+        queries, params=SearchParams(k=10, depth=100, rerank=can_rerank))
+    r_q = float(ev.recall_at(gt, ids_q))
+    store = ("int" + str(ann_q.index.pq.bits)) if ann_q.index.pq is not None \
+        else "fp32"
+    print(f"memory_budget_bytes={budget/1e6:.1f}MB -> {store} postings, "
+          f"{ann_q.nbytes()/1e6:.1f}MB resident "
+          f"({full.nbytes()/1e6:.1f}MB unquantized), R@10={r_q:.3f}")
+
 
 if __name__ == "__main__":
     main()

@@ -80,6 +80,20 @@ def _block_reduce_max(x: jax.Array, block_size: int, pad_value=0) -> jax.Array:
     return jnp.max(x.reshape(-1, block_size, t), axis=1)
 
 
+def _dequantized_f32(pq) -> jax.Array:
+    """f32 effective per-element values of a packed postings store, matching
+    the score stage's arithmetic (docs/DESIGN.md §12): int8 contributes
+    ``scale * q`` as an exact f32 product; int4 contributes the bf16-cast
+    canonical dequant (the actual kernel operand), widened to f32.  Block
+    maxima over THESE values give admissible bounds on quantized scores."""
+    from repro.kernels import common
+
+    if pq.bits == 8:
+        return pq.q.astype(jnp.float32) * pq.scale
+    deq = common.dequant_int4(pq.q, pq.scale, pq.group, jnp.bfloat16)
+    return deq[:, : pq.cols].astype(jnp.float32)
+
+
 def _lsh_block_bitmap(sig: jax.Array, block_size: int) -> jax.Array:
     from repro.core import lexical_lsh
 
@@ -116,14 +130,38 @@ def build_blockmax(
             block_size=block_size, mode="lsh",
         )
     if mode is None:
-        mode = "classic" if index.scored is not None else "dot"
+        # A packed store alongside tf is quantized-classic (dot-int4 drops
+        # tf; dot-int8 stores quantized tf natively with no pq leaf).
+        classic = index.scored is not None or (
+            index.pq is not None and index.tf is not None
+        )
+        mode = "classic" if classic else "dot"
     if mode == "classic":
+        if index.pq is not None:
+            # Bounds from the DEQUANTIZED maxima, f32: per-doc/group scales
+            # vary inside a block, so max does not commute with dequant.
+            return BlockMaxIndex(
+                ub=_block_reduce_max(_dequantized_f32(index.pq), block_size),
+                block_size=block_size, mode="classic",
+            )
         assert index.scored is not None, "classic blockmax requires scored matrix"
         return BlockMaxIndex(
             ub=_block_reduce_max(index.scored, block_size),
             block_size=block_size, mode="classic",
         )
     assert mode == "dot", f"unknown blockmax mode {mode}"
+    if index.pq is not None:
+        deq = _dequantized_f32(index.pq)  # (N, m) signed or (N, 2m) split
+        if deq.shape[1] * 2 == index.df.shape[0]:
+            s = deq  # hand-built signed packed store, already (N, m)
+        else:
+            m = deq.shape[1] // 2
+            s = deq[:, :m] - deq[:, m:]
+        ub = jnp.concatenate(
+            [_block_reduce_max(s, block_size), _block_reduce_max(-s, block_size)],
+            axis=-1,
+        )
+        return BlockMaxIndex(ub=ub, block_size=block_size, mode="dot")
     tf = index.tf
     if signed_store:
         s = tf.astype(jnp.int8)
@@ -151,6 +189,12 @@ def block_bounds(bm: BlockMaxIndex, q: jax.Array) -> jax.Array:
             preferred_element_type=jnp.float32,
         )
     if bm.mode == "dot":
+        if jnp.issubdtype(bm.ub.dtype, jnp.floating):
+            # Quantized store: dequantized maxima are f32, not int8.
+            return jnp.einsum(
+                "bt,nt->bn", q.astype(jnp.float32), bm.ub,
+                preferred_element_type=jnp.float32,
+            )
         return jnp.einsum(
             "bt,nt->bn", q.astype(jnp.int32), bm.ub.astype(jnp.int32),
             preferred_element_type=jnp.int32,
@@ -167,12 +211,26 @@ def block_bounds(bm: BlockMaxIndex, q: jax.Array) -> jax.Array:
 def _stage2_operands(
     index: AnyBlockIndex, bm: BlockMaxIndex, q: jax.Array
 ) -> Tuple[jax.Array, jax.Array, str]:
-    """(query operand, stored matrix to gather from, kernel mode)."""
+    """(query operand, stored matrix to gather from, kernel mode).  With a
+    packed postings store the matrix slot carries the
+    :class:`repro.core.types.QuantizedPostings` itself and the mode is
+    "quantized" — stage 2 gathers packed rows + scales and dequantizes in
+    the score stage."""
+    pq = getattr(index, "pq", None)
     if bm.mode == "classic":
+        if pq is not None:
+            return q.astype(jnp.bfloat16), pq, "quantized"
         return q.astype(jnp.bfloat16), index.scored, "gemm"
     if bm.mode == "dot":
         m = bm.ub.shape[1] // 2
         u = fakewords.signed_query(q)
+        if pq is not None:
+            if pq.cols == m:  # signed store: packed matrix already (N, m)
+                return u.astype(jnp.bfloat16), pq, "quantized"
+            return (
+                jnp.concatenate([u, -u], axis=-1).astype(jnp.bfloat16),
+                pq, "quantized",
+            )
         if index.tf.shape[1] == m:  # signed store: tf already (N, m) signed
             return u.astype(jnp.int8), index.tf, "gemm"
         return jnp.concatenate([u, -u], axis=-1).astype(jnp.int8), index.tf, "gemm"
@@ -206,12 +264,24 @@ def pruned_topk(
     row_ids = keep_blocks[:, :, None] * bsz + jnp.arange(bsz)[None, None, :]
     row_ids = row_ids.reshape(b, -1).astype(jnp.int32)  # (B, n_keep*bsz)
     qv, mat, mode = _stage2_operands(index, bm, q)
-    rows = mat[jnp.minimum(row_ids, n_docs - 1)]  # (B, R, T)
-    if fused.resolve_use_kernel(use_kernel):
+    if mode == "quantized":
+        if fused.resolve_use_kernel(use_kernel):
+            d_s, d_i = fused.postings_topk_gathered(
+                mat, qv, row_ids, eff_depth, n_docs
+            )
+        else:
+            safe = jnp.minimum(row_ids, n_docs - 1)
+            d_s, d_i = fused_ref.quantized_gathered_topk_ref(
+                qv, mat.q[safe], mat.scale[safe], row_ids, eff_depth,
+                n_docs, mat.bits, mat.group,
+            )
+    elif fused.resolve_use_kernel(use_kernel):
+        rows = mat[jnp.minimum(row_ids, n_docs - 1)]  # (B, R, T)
         d_s, d_i = fused.fused_topk_gathered(
             qv, rows, row_ids, eff_depth, n_docs, mode=mode
         )
     else:
+        rows = mat[jnp.minimum(row_ids, n_docs - 1)]  # (B, R, T)
         d_s, d_i = fused_ref.gathered_topk_ref(
             qv, rows, row_ids, eff_depth, n_docs, mode=mode
         )

@@ -57,12 +57,23 @@ from repro.core.types import (
     KdTreeIndex,
     LexicalLshConfig,
     LshIndex,
+    QuantizedPostings,
     QuantizedStore,
 )
 
 AnyConfig = Union[FakeWordsConfig, LexicalLshConfig, KdTreeConfig, BruteForceConfig]
 
 RERANK_STORES = ("exact", "int8", "none")
+PRIMARY_POSTINGS = ("fp32", "int8", "int4")
+POSTINGS_GROUPS = (32, 64)
+
+_QUANT_POSTINGS_MSG = (
+    "quantized primary postings support fake-words (classic/dot) and "
+    "brute-force; the LSH signature store is categorical (uint32 MinHash "
+    "buckets — scaling them is meaningless) and the kd-tree reduced store "
+    "is already ~8 f32 columns with a mixed-magnitude L2-lift column, so "
+    "neither gains from int8/int4 packing (docs/DESIGN.md §12)"
+)
 
 _TREE_BUILD_MSG = (
     "kd-tree 'tree' backend builds host-side (numpy) and cannot shard on "
@@ -124,6 +135,78 @@ class IdentityTransform:
 
 
 # --------------------------------------------------------------------------
+# Primary-postings quantization (docs/DESIGN.md §12)
+# --------------------------------------------------------------------------
+
+
+def quantize_postings(
+    mat: jax.Array, bits: int = 8, group: int = 32
+) -> QuantizedPostings:
+    """Quantize a posting matrix row-locally (shards and segments freely).
+
+    bits=8: symmetric per-doc scale = max|row|/127, q = round(mat/scale)
+    int8.  Because the scale is constant per row it factorizes out of the
+    query dot, so dequantization is ONE multiply per (query, doc) after the
+    reduction — the fused kernel applies it at merge time.
+
+    bits=4: grouped scale over ``group`` consecutive columns (the term/dim
+    axis is zero-padded to a multiple of ``group`` first, so groups align);
+    scale = max|group|/7, nibble = clip(round(v/scale), -8, 7) + 8, adjacent
+    column pairs packed low|high into one uint8.  Zero pad columns encode as
+    nibble 8 and dequantize to exactly 0.  Per-element reconstruction error
+    is bounded by scale/2 (round-to-nearest within a covered range).
+    """
+    m = mat.astype(jnp.float32)
+    n, t = m.shape
+    if bits == 8:
+        amax = jnp.max(jnp.abs(m), axis=-1, keepdims=True)
+        scale = jnp.maximum(amax, 1e-12) / 127.0
+        q = jnp.round(m / scale).astype(jnp.int8)
+        return QuantizedPostings(q=q, scale=scale, bits=8, group=0, cols=t)
+    assert bits == 4, f"bits must be 8 or 4, got {bits}"
+    tg = ((t + group - 1) // group) * group
+    if tg != t:
+        m = jnp.pad(m, ((0, 0), (0, tg - t)))
+    grouped = m.reshape(n, tg // group, group)
+    amax = jnp.max(jnp.abs(grouped), axis=-1)
+    scale = jnp.maximum(amax, 1e-12) / 7.0  # (n, tg/group) f32
+    nib = jnp.clip(jnp.round(grouped / scale[:, :, None]), -8, 7) + 8
+    nib = nib.reshape(n, tg).astype(jnp.uint8)
+    packed = (nib[:, 0::2] | (nib[:, 1::2] << 4)).astype(jnp.uint8)
+    return QuantizedPostings(q=packed, scale=scale, bits=4, group=group, cols=t)
+
+
+def dequantize_postings(pq: QuantizedPostings, dtype=jnp.float32) -> jax.Array:
+    """Reconstruct the (N, cols) posting matrix in ``dtype``.
+
+    Runs the CANONICAL dequant ordering (``repro.kernels.common``) both the
+    Pallas kernel and the XLA reference scoring paths implement: f32
+    (nibble - 8) * group_scale (int4) / f32 value * doc_scale (int8), THEN
+    cast to the compute dtype.  Materializes the full matrix — for blockmax
+    bounds / tests / error analysis, never on the streaming read path.
+    """
+    from repro.kernels import common
+
+    if pq.bits == 8:
+        return (pq.q.astype(jnp.float32) * pq.scale).astype(dtype)
+    deq = common.dequant_int4(pq.q, pq.scale, pq.group, dtype)
+    return deq[:, : pq.cols]
+
+
+@dataclasses.dataclass(frozen=True)
+class PostingsQuantizer:
+    """BuildPipeline quantize stage: packs the method's match-stage posting
+    matrix (classic ``scored`` / dot ``tf`` / brute-force vectors) into a
+    :class:`QuantizedPostings` store.  Row-local, so it shards freely."""
+
+    bits: int = 8
+    group: int = 32
+
+    def __call__(self, mat: jax.Array) -> QuantizedPostings:
+        return quantize_postings(mat, self.bits, self.group)
+
+
+# --------------------------------------------------------------------------
 # Postings assembly
 # --------------------------------------------------------------------------
 
@@ -159,9 +242,17 @@ def classic_scored(tf: jax.Array, idf: jax.Array, norm: jax.Array) -> jax.Array:
 class FakeWordsPostings:
     """df/idf/norm statistics + optional precomputed classic scoring matrix.
     df is the ONE global statistic: psum'd under ``axes`` (integer sum, so
-    sharded idf/scored match the single-host build bit-for-bit)."""
+    sharded idf/scored match the single-host build bit-for-bit).
+
+    With a ``quantizer`` (docs/DESIGN.md §12) the match-stage store is
+    packed AFTER the statistics: classic quantizes the scored matrix (df/idf
+    are computed pre-quantization, so global scoring is unchanged) and drops
+    the bf16 ``scored`` leaf; dot int8 is a no-op (the native int8 ``tf`` IS
+    the int8 store); dot int4 packs ``tf`` and drops the leaf (``df`` then
+    freezes Lucene-style until a merge rebuilds it)."""
 
     config: FakeWordsConfig
+    quantizer: Optional[PostingsQuantizer] = None
 
     def __call__(self, tf, model, v, store, n_total, axes=None) -> FakeWordsIndex:
         df = live_df(tf)
@@ -170,11 +261,17 @@ class FakeWordsPostings:
         idf = idf_from_df(df, n_total)
         doc_len = jnp.sum(tf.astype(jnp.float32), axis=-1)
         norm = jax.lax.rsqrt(jnp.maximum(doc_len, 1.0))
-        scored = None
+        scored = pq = None
         if self.config.scoring == "classic":
             scored = classic_scored(tf, idf, norm)
+            if self.quantizer is not None:
+                pq = self.quantizer(scored)
+                scored = None
+        elif self.quantizer is not None and self.quantizer.bits == 4:
+            pq = self.quantizer(tf)
+            tf = None
         return FakeWordsIndex(
-            tf=tf, idf=idf, norm=norm, df=df, scored=scored, **store
+            tf=tf, idf=idf, norm=norm, df=df, scored=scored, pq=pq, **store
         )
 
 
@@ -222,10 +319,19 @@ class KdTreePostings:
 @dataclasses.dataclass(frozen=True)
 class FlatPostings:
     """Brute force: the normalized rows ARE the match operand, so the exact
-    fp32 vectors are kept regardless of the rerank-store choice."""
+    fp32 vectors are kept regardless of the rerank-store choice — unless a
+    ``quantizer`` replaces the match operand with packed int8/int4 postings
+    (docs/DESIGN.md §12), in which case the fp32 rows survive only if the
+    rerank store keeps them."""
+
+    quantizer: Optional[PostingsQuantizer] = None
 
     def __call__(self, rep, model, v, store, n_total, axes=None) -> FlatIndex:
-        return FlatIndex(vectors=v, vq=store["vq"])
+        if self.quantizer is None:
+            return FlatIndex(vectors=v, vq=store["vq"])
+        return FlatIndex(
+            vectors=store["vectors"], vq=store["vq"], pq=self.quantizer(v)
+        )
 
 
 # --------------------------------------------------------------------------
@@ -326,11 +432,13 @@ class BuildPipeline:
             v = v if normalized else bruteforce.l2_normalize(v)
             return self._assemble(v, n_total=n_total, axes=axes)
 
+        quantizer = getattr(self.postings, "quantizer", None)
         out_specs = distributed.config_pspec(
             self.config, axes,
             keep_vectors=isinstance(self.store, ExactRerankStore)
-            or isinstance(self.config, BruteForceConfig),
+            or (isinstance(self.config, BruteForceConfig) and quantizer is None),
             quantized_store=isinstance(self.store, QuantizedRerankStore),
+            postings_bits=quantizer.bits if quantizer is not None else 0,
         )
         # Replicated leaves (idf/df, reduction model) come out of psums the
         # static replication checker cannot always prove; disable it — the
@@ -374,22 +482,49 @@ class BuildPipeline:
 
 
 def make_build_pipeline(
-    config: AnyConfig, rerank_store: str = "exact"
+    config: AnyConfig,
+    rerank_store: str = "exact",
+    primary_postings: str = "fp32",
+    postings_group: int = 32,
 ) -> BuildPipeline:
     """Every method is a stage configuration (the build-side analog of
     ``pipeline.build_pipeline``).  ``rerank_store``: "exact" | "int8" |
-    "none"."""
+    "none".  ``primary_postings``: "fp32" (store the match operand as
+    built) | "int8" (per-doc scale) | "int4" (grouped scale, group size
+    ``postings_group`` in {32, 64}) — docs/DESIGN.md §12."""
     if rerank_store not in _STORES:
         raise ValueError(
             f"rerank_store must be one of {RERANK_STORES}, got {rerank_store!r}"
         )
+    if primary_postings not in PRIMARY_POSTINGS:
+        raise ValueError(
+            f"primary_postings must be one of {PRIMARY_POSTINGS}, "
+            f"got {primary_postings!r}"
+        )
     store = _STORES[rerank_store]
+    quantizer = None
+    if primary_postings != "fp32":
+        if isinstance(config, (LexicalLshConfig, KdTreeConfig)):
+            raise ValueError(_QUANT_POSTINGS_MSG)
+        if postings_group not in POSTINGS_GROUPS:
+            raise ValueError(
+                f"postings_group must be one of {POSTINGS_GROUPS}, "
+                f"got {postings_group}"
+            )
+        quantizer = PostingsQuantizer(
+            bits=8 if primary_postings == "int8" else 4, group=postings_group
+        )
     if isinstance(config, FakeWordsConfig):
-        return BuildPipeline(config, TfTransform(config), FakeWordsPostings(config), store)
+        return BuildPipeline(
+            config, TfTransform(config), FakeWordsPostings(config, quantizer),
+            store,
+        )
     if isinstance(config, LexicalLshConfig):
         return BuildPipeline(config, MinHashTransform(config), LshPostings(), store)
     if isinstance(config, KdTreeConfig):
         return BuildPipeline(config, ReductionTransform(config), KdTreePostings(config), store)
     if isinstance(config, BruteForceConfig):
-        return BuildPipeline(config, IdentityTransform(), FlatPostings(), store)
+        return BuildPipeline(
+            config, IdentityTransform(), FlatPostings(quantizer), store
+        )
     raise TypeError(f"unknown config {type(config)}")

@@ -29,6 +29,7 @@ its rows never leave the shard.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Optional, Sequence, Tuple
 
 import jax
@@ -85,10 +86,18 @@ def _pspec_tree(
     reduction_spec=None,
     lifted: bool = True,
     vq: bool = False,
+    tf: bool = True,
+    pq=None,
 ):
     """The one place the per-type doc-dimension spec trees are written;
     :func:`index_pspec` / :func:`config_pspec` just derive the presence
-    flags (from an instance or a config) and delegate here."""
+    flags (from an instance or a config) and delegate here.
+
+    ``pq`` is the spec placed at the quantized-postings slot: an exact
+    :class:`QuantizedPostings` spec (from an instance, static metadata
+    matching) or a bare prefix ``P`` that shard_map broadcasts over the
+    q/scale leaves (from a config, where the packed column counts are not
+    yet known)."""
     axes = tuple(axes)
     doc = P(axes, None)
     vec = doc if vectors else None
@@ -96,8 +105,8 @@ def _pspec_tree(
     vqs = QuantizedStore(q=doc, scale=P(axes)) if vq else None
     if kind == "fake-words":
         return FakeWordsIndex(
-            tf=doc, idf=P(), norm=P(axes), df=P(),
-            scored=doc if scored else None, vectors=vec, vq=vqs,
+            tf=doc if tf else None, idf=P(), norm=P(axes), df=P(),
+            scored=doc if scored else None, vectors=vec, vq=vqs, pq=pq,
         )
     if kind == "lexical-lsh":
         return LshIndex(sig=doc, vectors=vec, vq=vqs)
@@ -107,7 +116,7 @@ def _pspec_tree(
             lifted=doc if lifted else None, vectors=vec, vq=vqs,
         )
     if kind == "bruteforce":
-        return FlatIndex(vectors=doc, vq=vqs)
+        return FlatIndex(vectors=vec, vq=vqs, pq=pq)
     raise ValueError(f"unknown index kind {kind!r}")
 
 
@@ -120,12 +129,18 @@ _TREE_BACKEND_MSG = (
 def index_pspec(index, axes: Sequence[str]):
     """Doc-dimension sharding spec tree matching an index's present leaves.
     Works for every index type the pipeline serves."""
+    doc = P(tuple(axes), None)
     if isinstance(index, FakeWordsIndex):
         return _pspec_tree(
             "fake-words", axes,
             scored=index.scored is not None,
             vectors=index.vectors is not None,
             vq=index.vq is not None,
+            tf=index.tf is not None,
+            pq=(
+                dataclasses.replace(index.pq, q=doc, scale=doc)
+                if index.pq is not None else None
+            ),
         )
     if isinstance(index, LshIndex):
         return _pspec_tree(
@@ -143,7 +158,15 @@ def index_pspec(index, axes: Sequence[str]):
             vq=index.vq is not None,
         )
     if isinstance(index, FlatIndex):
-        return _pspec_tree("bruteforce", axes, vq=index.vq is not None)
+        return _pspec_tree(
+            "bruteforce", axes,
+            vectors=index.vectors is not None,
+            vq=index.vq is not None,
+            pq=(
+                dataclasses.replace(index.pq, q=doc, scale=doc)
+                if index.pq is not None else None
+            ),
+        )
     raise TypeError(f"unknown index {type(index)}")
 
 
@@ -152,16 +175,29 @@ def config_pspec(
     axes: Sequence[str],
     keep_vectors: bool = True,
     quantized_store: bool = False,
+    postings_bits: int = 0,
 ):
     """Spec tree from a method config (when no index instance is at hand —
     e.g. dryrun cells that eval_shape through the sharded search).
     ``quantized_store`` marks the int8 rerank store present (built with
-    ``rerank_store='int8'``, in which case fp32 vectors are absent)."""
+    ``rerank_store='int8'``, in which case fp32 vectors are absent).
+    ``postings_bits`` (0 | 8 | 4) marks the primary postings encoding
+    (docs/DESIGN.md §12); the packed-postings spec is a bare prefix ``P``
+    since the packed column counts depend on the data dims."""
+    doc = P(tuple(axes), None)
     if isinstance(config, FakeWordsConfig):
+        # dot-int8 stores quantized tf natively (no separate pq leaf);
+        # classic quantizes `scored` away; dot-int4 packs tf away.
+        quant = postings_bits > 0 and (
+            config.scoring == "classic" or postings_bits == 4
+        )
         return _pspec_tree(
             "fake-words", axes,
-            scored=config.scoring == "classic", vectors=keep_vectors,
+            scored=config.scoring == "classic" and postings_bits == 0,
+            vectors=keep_vectors,
             vq=quantized_store,
+            tf=not (config.scoring == "dot" and postings_bits == 4),
+            pq=doc if quant else None,
         )
     if isinstance(config, LexicalLshConfig):
         return _pspec_tree(
@@ -184,7 +220,14 @@ def config_pspec(
             vq=quantized_store,
         )
     if isinstance(config, BruteForceConfig):
-        return _pspec_tree("bruteforce", axes, vq=quantized_store)
+        # fp32 vectors stay unless quantized postings replace them and no
+        # exact rerank store asked to keep them (mirrors FlatPostings).
+        return _pspec_tree(
+            "bruteforce", axes,
+            vectors=postings_bits == 0 or keep_vectors,
+            vq=quantized_store,
+            pq=doc if postings_bits > 0 else None,
+        )
     raise TypeError(f"unknown config {type(config)}")
 
 
@@ -200,6 +243,8 @@ def build_sharded(
     axes: Sequence[str],
     keep_vectors: bool = True,
     rerank_store: Optional[str] = None,
+    primary_postings: str = "fp32",
+    postings_group: int = 32,
 ):
     """Build ANY encoding's index with its doc-sharded leaves distributed
     over ``axes`` — the pod-scale entry of the staged
@@ -213,12 +258,16 @@ def build_sharded(
     bit-for-bit (fp-tolerance for the eigendecomposed reduction).
 
     ``rerank_store``: "exact" | "int8" | "none" (None derives from
-    ``keep_vectors``)."""
+    ``keep_vectors``).  ``primary_postings``: "fp32" | "int8" | "int4" —
+    the packed primary-postings encoding, quantized row-locally per shard
+    (bitwise identical to the single-node build; docs/DESIGN.md §12)."""
     from repro.core import builder
 
     if rerank_store is None:
         rerank_store = "exact" if keep_vectors else "none"
-    bp = builder.make_build_pipeline(config, rerank_store)
+    bp = builder.make_build_pipeline(
+        config, rerank_store, primary_postings, postings_group
+    )
     return bp.build_sharded(mesh, vectors, tuple(axes))
 
 
@@ -253,6 +302,7 @@ def make_sharded_search(
     use_kernel: Optional[bool] = None,
     blockmax_keep: Optional[int] = None,
     rerank_store: Optional[str] = None,
+    postings_bits: int = 0,
 ):
     """Returns a jit-able ``search(index, q_rep, queries) -> (scores, ids)``
     closed over the mesh, for ANY method config (fake words / lexical LSH /
@@ -333,6 +383,7 @@ def make_sharded_search(
         config, axes,
         keep_vectors=rerank_store == "exact",
         quantized_store=rerank_store == "int8",
+        postings_bits=postings_bits,
     )
     if blockmax_keep is not None:
         # Prefix spec: BlockMaxIndex's one array leaf (ub) shards on the

@@ -110,7 +110,9 @@ def classic_query(
     of a :class:`repro.core.segments.SegmentedAnnIndex` masks against the
     GLOBAL live-doc count (its ``df`` leaf already holds the global df), not
     its own row count."""
-    assert index.scored is not None, "index was built with scoring='dot'"
+    assert index.scored is not None or index.pq is not None, (
+        "index was built with scoring='dot'"
+    )
     n = index.num_docs if num_docs is None else num_docs
     keep = df_prune_mask(index.df, n, df_max_ratio)
     return (q_tf * keep).astype(jnp.bfloat16)

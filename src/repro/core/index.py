@@ -47,6 +47,7 @@ from repro.core.types import (
     KdTreeIndex,
     LexicalLshConfig,
     LshIndex,
+    QuantizedPostings,
     QuantizedStore,
     SearchParams,
     next_epoch,
@@ -147,6 +148,9 @@ class AnnIndex:
         blockmax_keep: Optional[int] = None,
         blockmax_block_size: int = 256,
         rerank_store: Optional[str] = None,
+        primary_postings: Optional[str] = None,
+        postings_group: int = 32,
+        memory_budget_bytes: Optional[int] = None,
         mesh=None,
         shard_axes=("data",),
         normalized: bool = False,
@@ -163,12 +167,47 @@ class AnnIndex:
         "none".  ``normalized=True`` marks the rows as already
         unit-normalized (the segment-merge path rebuilds from stored
         normalized originals and must not renormalize — 1-ulp drift would
-        break segmented-vs-monolithic score parity)."""
+        break segmented-vs-monolithic score parity).
+
+        ``primary_postings``: "fp32" (default) | "int8" | "int4" — the
+        packed match-stage store with dequant fused into the score stage
+        (docs/DESIGN.md §12); ``postings_group`` is the int4 scale-group
+        width (32 or 64).  ``memory_budget_bytes`` picks the
+        {postings} x {rerank store} x {blockmax keep-fraction} read path
+        from the recall-ordered frontier table
+        (:mod:`repro.core.memory_budget`); knobs set explicitly alongside
+        it are pinned, the budget fills only the unset ones."""
         from repro.core import builder
 
+        if memory_budget_bytes is not None:
+            from repro.core import memory_budget as mb
+
+            n, dim = vectors.shape
+            plan = mb.plan_for_budget(
+                config, n, dim, memory_budget_bytes,
+                primary_postings=primary_postings,
+                rerank_store=(
+                    rerank_store if rerank_store is not None
+                    else (None if keep_vectors else "none")
+                ),
+                group=postings_group,
+            )
+            primary_postings = plan["primary_postings"]
+            rerank_store = plan["rerank_store"]
+            if (
+                blockmax_keep is None
+                and plan["keep_frac"] < 1.0
+                and isinstance(config, (FakeWordsConfig, LexicalLshConfig))
+            ):
+                n_blocks = -(-n // blockmax_block_size)
+                blockmax_keep = max(1, int(plan["keep_frac"] * n_blocks))
         if rerank_store is None:
             rerank_store = "exact" if keep_vectors else "none"
-        bp = builder.make_build_pipeline(config, rerank_store)
+        if primary_postings is None:
+            primary_postings = "fp32"
+        bp = builder.make_build_pipeline(
+            config, rerank_store, primary_postings, postings_group
+        )
         idx = bp.build(vectors, mesh=mesh, axes=shard_axes, normalized=normalized)
         return cls(
             config=config,
@@ -252,6 +291,11 @@ class AnnIndex:
             "blockmax_block_size": self.blockmax_block_size,
             "quantized_rerank": self.quantized_rerank,
         }
+        pq = getattr(self.index, "pq", None)
+        if pq is not None:
+            # Static (non-array) packed-store metadata; the q/scale leaves
+            # ride in the npz like every other array.
+            meta["pq"] = {"bits": pq.bits, "group": pq.group, "cols": pq.cols}
         with open(os.path.join(path, "config.json"), "w") as f:
             json.dump(meta, f, indent=2)
         np.savez_compressed(os.path.join(path, "index.npz"), **packed)
@@ -293,7 +337,7 @@ class AnnIndex:
             arrays = {
                 name: _from_numpy(z[name], meta["dtypes"][name]) for name in z.files
             }
-        index = _rebuild_index(meta["method"], config, arrays)
+        index = _rebuild_index(meta["method"], config, arrays, meta.get("pq"))
         knobs = {
             "use_kernel": meta.get("use_kernel"),
             "blockmax_keep": meta.get("blockmax_keep"),
@@ -380,15 +424,31 @@ def _rebuild_vq(arrays: Dict[str, jax.Array]) -> Optional[QuantizedStore]:
     return None
 
 
+def _rebuild_pq(
+    arrays: Dict[str, jax.Array], pq_meta: Optional[dict]
+) -> Optional[QuantizedPostings]:
+    if "pq.q" not in arrays:
+        return None
+    assert pq_meta is not None, "packed postings arrays without pq metadata"
+    return QuantizedPostings(
+        q=arrays["pq.q"], scale=arrays["pq.scale"],
+        bits=int(pq_meta["bits"]), group=int(pq_meta["group"]),
+        cols=int(pq_meta["cols"]),
+    )
+
+
 def _rebuild_index(
-    method: str, config: AnyConfig, arrays: Dict[str, jax.Array]
+    method: str, config: AnyConfig, arrays: Dict[str, jax.Array],
+    pq_meta: Optional[dict] = None,
 ) -> AnyIndex:
     g = arrays.get
     vq = _rebuild_vq(arrays)
+    pq = _rebuild_pq(arrays, pq_meta)
     if method == "fake-words":
         return FakeWordsIndex(
-            tf=arrays["tf"], idf=arrays["idf"], norm=arrays["norm"],
+            tf=g("tf"), idf=arrays["idf"], norm=arrays["norm"],
             df=arrays["df"], scored=g("scored"), vectors=g("vectors"), vq=vq,
+            pq=pq,
         )
     if method == "lexical-lsh":
         return LshIndex(sig=arrays["sig"], vectors=g("vectors"), vq=vq)
@@ -400,5 +460,5 @@ def _rebuild_index(
             lifted=g("lifted"), vectors=g("vectors"), vq=vq,
         )
     if method == "bruteforce":
-        return FlatIndex(vectors=arrays["vectors"], vq=vq)
+        return FlatIndex(vectors=g("vectors"), vq=vq, pq=pq)
     raise ValueError(f"unknown method {method!r}")

@@ -199,6 +199,26 @@ class FakeWordsMatcher:
             index.tf,
         )
 
+    def quantized_query(self, index, q_tf: jax.Array) -> jax.Array:
+        """bf16 query operand for the packed-postings path (docs/DESIGN.md
+        §12): both scoring modes dequantize the store to the query dtype in
+        the score stage, so the query itself must be float."""
+        from repro.core import fakewords
+
+        n = self.df_num_docs if self.df_num_docs is not None else index.num_docs
+        if self.scoring == "classic":
+            return fakewords.classic_query(
+                index, q_tf, self.df_max_ratio, num_docs=n)
+        if index.pq.cols * 2 == index.df.shape[0]:
+            # Genuinely signed packed store (N, m); the pipeline-built
+            # signed_store index still stores the sign-split 2m columns.
+            keep = fakewords.df_prune_mask(index.df, n, self.df_max_ratio)
+            m = index.pq.cols
+            keep_m = keep[:m] & keep[m:]
+            return (fakewords.signed_query(q_tf) * keep_m).astype(jnp.bfloat16)
+        return fakewords.dot_query(
+            index, q_tf, self.df_max_ratio, dtype=jnp.bfloat16, num_docs=n)
+
     def _dense_scores(self, qv: jax.Array, docs: jax.Array) -> jax.Array:
         if self.scoring == "classic":
             return jnp.einsum(
@@ -216,6 +236,20 @@ class FakeWordsMatcher:
         from repro.kernels.fused_topk import ops as fused
 
         d = min(depth, index.num_docs)
+        if index.pq is not None:
+            from repro.kernels.fused_topk import ref as fused_ref
+
+            qv = self.quantized_query(index, q_tf)
+            pq = index.pq
+            if _use_kernel(use_kernel):
+                return fused.postings_topk(pq, qv, d)
+            if self.score_tile is not None and index.num_docs > 2 * self.score_tile:
+                return fused_ref.streaming_topk_quantized_ref(
+                    qv, pq.q, pq.scale, d, pq.bits, pq.group,
+                    tile=self.score_tile,
+                )
+            return fused_ref.quantized_topk_ref(
+                qv, pq.q, pq.scale, d, pq.bits, pq.group)
         if _use_kernel(use_kernel):
             qv, docs = self.operands(index, q_tf, dtype=jnp.int8)
             return fused.fused_topk(qv, docs, d)
@@ -300,6 +334,15 @@ class CosineMatcher:
         from repro.kernels.fused_topk import ops as fused
 
         d = min(depth, index.num_docs)
+        if index.pq is not None:
+            from repro.kernels.fused_topk import ref as fused_ref
+
+            if _use_kernel(use_kernel):
+                return fused.postings_topk(index.pq, q_norm, d)
+            return fused_ref.quantized_topk_ref(
+                q_norm, index.pq.q, index.pq.scale, d,
+                index.pq.bits, index.pq.group,
+            )
         if _use_kernel(use_kernel):
             return fused.cosine_topk(index.vectors, q_norm, d)
         scores = q_norm @ index.vectors.T  # (B, N)

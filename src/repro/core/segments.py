@@ -125,11 +125,26 @@ class Segment:
     ``ann`` never changes after build (the Lucene segment invariant); all
     mutation is bit-flips in ``live`` (True = live).  ``name`` is the
     stable on-disk directory name assigned at flush time.
+
+    ``source`` holds the unit-normalized original rows host-side when the
+    index itself does not carry them (rerank_store "int8"/"none"): merges
+    rebuild from these and the kd-tree's global-stats refit reads them, so
+    the writer no longer forces rerank_store="exact".  None when
+    ``ann.index.vectors`` is present (no duplicate copy) — read through
+    :meth:`source_rows`.  Persisted once per segment as ``source.npz``.
     """
 
     ann: AnnIndex
     live: np.ndarray
     name: str
+    source: Optional[np.ndarray] = None
+
+    def source_rows(self) -> Optional[np.ndarray]:
+        """Unit-normalized original rows (merge/refit operand), whichever
+        store carries them; None if the segment kept neither."""
+        if self.ann.index.vectors is not None:
+            return np.asarray(self.ann.index.vectors)
+        return self.source
 
     @property
     def num_docs(self) -> int:
@@ -148,7 +163,10 @@ class Segment:
         """Point-in-time copy: shares the immutable index, copies the
         mutable live mask — later writer deletes don't leak into an open
         reader."""
-        return Segment(ann=self.ann, live=self.live.copy(), name=self.name)
+        return Segment(
+            ann=self.ann, live=self.live.copy(), name=self.name,
+            source=self.source,
+        )
 
 
 # --------------------------------------------------------------------------
@@ -324,8 +342,8 @@ class SegmentedAnnIndex:
         self.epoch = next_epoch() if epoch is None else epoch
         self.pipeline = pl.build_pipeline(config)
         # Quantized rerank iff every segment carries ONLY the int8 store
-        # (v1 read-compat of an int8-rerank index; writer segments always
-        # keep the fp32 originals).
+        # (writer segments built with rerank_store="int8", or v1
+        # read-compat of a monolithic int8-rerank index).
         self.quantized_rerank = bool(self.segments) and all(
             s.ann.index.vectors is None and s.ann.index.vq is not None
             for s in self.segments
@@ -395,33 +413,48 @@ class SegmentedAnnIndex:
         if isinstance(self.config, FakeWordsConfig):
             df = None
             for s, live in zip(segs, self._live_dev):
-                d = builder.live_df(s.ann.index.tf, live)
+                # dot-int4 packed tf away: its df freezes at the build-time
+                # count (Lucene-style) until a merge rebuilds the segment.
+                d = (
+                    builder.live_df(s.ann.index.tf, live)
+                    if s.ann.index.tf is not None else s.ann.index.df
+                )
                 df = d if df is None else df + d
             idf = builder.idf_from_df(df, self._n_live)
             views = []
             for s in segs:
                 idx = s.ann.index
-                scored = (
-                    builder.classic_scored(idx.tf, idf, idx.norm)
-                    if self.config.scoring == "classic" else None
-                )
-                views.append(
-                    dataclasses.replace(idx, df=df, idf=idf, scored=scored)
-                )
+                if self.config.scoring != "classic":
+                    views.append(dataclasses.replace(idx, df=df, idf=idf))
+                    continue
+                scored = builder.classic_scored(idx.tf, idf, idx.norm)
+                if idx.pq is not None:
+                    # Quantized-classic keeps tf precisely for this: rebuild
+                    # scores under GLOBAL stats, then re-quantize row-locally
+                    # — each row's scale/codes depend only on that row, so a
+                    # segment view is bitwise the monolithic quantized build.
+                    views.append(dataclasses.replace(
+                        idx, df=df, idf=idf, scored=None,
+                        pq=builder.quantize_postings(
+                            scored, idx.pq.bits, idx.pq.group or 32
+                        ),
+                    ))
+                else:
+                    views.append(
+                        dataclasses.replace(idx, df=df, idf=idf, scored=scored)
+                    )
             return views
         if isinstance(self.config, KdTreeConfig):
-            if any(s.ann.index.vectors is None for s in segs):
+            if any(s.source_rows() is None for s in segs):
                 raise ValueError(
                     "global-stats refresh for a segmented kd-tree "
                     + _NEEDS_VECTORS_MSG
-                    + "; pass global_stats=False to score each segment "
-                    "under its own fitted reduction"
+                    + " or a source sidecar; pass global_stats=False to "
+                    "score each segment under its own fitted reduction"
                 )
             from repro.kernels.fused_topk import ops as fused
 
-            live_rows = [
-                np.asarray(s.ann.index.vectors)[s.live] for s in segs
-            ]
+            live_rows = [s.source_rows()[s.live] for s in segs]
             v_live = jnp.asarray(np.concatenate(live_rows, axis=0))
             model, _ = pca.fit_reduction(
                 v_live, self.config.dims, self.config.reduction,
@@ -429,9 +462,9 @@ class SegmentedAnnIndex:
             )
             views = []
             for s in segs:
-                red = pca.apply_reduction(model, s.ann.index.vectors).astype(
-                    jnp.float32
-                )
+                red = pca.apply_reduction(
+                    model, jnp.asarray(s.source_rows())
+                ).astype(jnp.float32)
                 views.append(
                     dataclasses.replace(
                         s.ann.index, reduced=red, reduction=model,
@@ -566,7 +599,14 @@ class SegmentedAnnIndex:
                     live = z["live"].astype(bool)
             else:
                 live = np.ones(ann.num_docs, bool)
-            segments.append(Segment(ann=ann, live=live, name=e["name"]))
+            source = None
+            src_file = os.path.join(path, e["name"], "source.npz")
+            if ann.index.vectors is None and os.path.exists(src_file):
+                with np.load(src_file) as z:
+                    source = z["source"]
+            segments.append(
+                Segment(ann=ann, live=live, name=e["name"], source=source)
+            )
         return cls(
             config, segments,
             use_kernel=overrides.get("use_kernel", meta.get("use_kernel")),
@@ -593,10 +633,12 @@ class IndexWriter:
     advances only when something actually changed — an unchanged refresh
     returns the same snapshot, so serving caches stay warm.
 
-    Requires ``rerank_store="exact"``: merges rebuild from the stored fp32
-    normalized originals (dropping deleted rows bit-for-bit), and the
-    kd-tree's global-stats refit reads them too.  int8/none stores for
-    segments are a follow-up (ROADMAP).
+    Any ``rerank_store`` ("exact" | "int8" | "none") and any
+    ``primary_postings`` ("fp32" | "int8" | "int4") work: when the built
+    segment does not carry the fp32 originals, the writer keeps them as a
+    host-side ``Segment.source`` sidecar (normalized once, persisted as
+    ``source.npz``), so merges still rebuild live rows bit-for-bit and the
+    kd-tree's global-stats refit still reads them.
     """
 
     def __init__(
@@ -608,12 +650,11 @@ class IndexWriter:
         merge_policy: Optional[TieredMergePolicy] = TieredMergePolicy(),
         max_buffered_docs: Optional[int] = None,
         global_stats: bool = True,
+        primary_postings: str = "fp32",
+        postings_group: int = 32,
     ):
-        if rerank_store != "exact":
-            raise ValueError(
-                f"IndexWriter {_NEEDS_VECTORS_MSG}: merges rebuild segments "
-                f"from the stored originals; got rerank_store={rerank_store!r}"
-            )
+        if rerank_store not in ("exact", "int8", "none"):
+            raise ValueError(f"unknown rerank_store {rerank_store!r}")
         if isinstance(config, KdTreeConfig) and config.backend == "tree":
             raise ValueError(
                 "segmented kd-tree requires backend='scan' "
@@ -622,6 +663,8 @@ class IndexWriter:
         self.config = config
         self.path = path
         self.rerank_store = rerank_store
+        self.primary_postings = primary_postings
+        self.postings_group = postings_group
         self.use_kernel = use_kernel
         self.merge_policy = merge_policy
         self.max_buffered_docs = max_buffered_docs
@@ -646,6 +689,20 @@ class IndexWriter:
         reader = SegmentedAnnIndex.load(path)
         kwargs.setdefault("use_kernel", reader.use_kernel)
         kwargs.setdefault("global_stats", reader.global_stats)
+        if reader.segments:
+            # Continue the store choice the existing segments were built
+            # with, so new flushes/merges stay homogeneous.
+            idx = reader.segments[0].ann.index
+            if idx.vectors is not None:
+                kwargs.setdefault("rerank_store", "exact")
+            elif getattr(idx, "vq", None) is not None:
+                kwargs.setdefault("rerank_store", "int8")
+            else:
+                kwargs.setdefault("rerank_store", "none")
+            pq = getattr(idx, "pq", None)
+            if pq is not None:
+                kwargs.setdefault("primary_postings", f"int{pq.bits}")
+                kwargs.setdefault("postings_group", pq.group or 32)
         w = cls(reader.config, path=path, **kwargs)
         w._segments = reader.segments
         commits = find_commits(path)
@@ -738,17 +795,39 @@ class IndexWriter:
             return False
         rows = np.concatenate(self._buf, axis=0)
         live = np.concatenate(self._buf_live, axis=0)
-        ann = AnnIndex.build(
-            jnp.asarray(rows), self.config,
-            rerank_store=self.rerank_store, use_kernel=self.use_kernel,
-        )
+        ann = self._build_segment(jnp.asarray(rows), normalized=False)
         self._segments.append(
-            Segment(ann=ann, live=live, name=self._next_name())
+            Segment(
+                ann=ann, live=live, name=self._next_name(),
+                source=self._source_sidecar(ann, rows, normalized=False),
+            )
         )
         self._buf, self._buf_live = [], []
         self._changed = True
         self.maybe_merge()
         return True
+
+    def _build_segment(self, rows: jax.Array, normalized: bool) -> AnnIndex:
+        return AnnIndex.build(
+            rows, self.config,
+            rerank_store=self.rerank_store, use_kernel=self.use_kernel,
+            primary_postings=self.primary_postings,
+            postings_group=self.postings_group,
+            normalized=normalized,
+        )
+
+    @staticmethod
+    def _source_sidecar(
+        ann: AnnIndex, rows: np.ndarray, normalized: bool
+    ) -> Optional[np.ndarray]:
+        """Host-side normalized originals when the built index dropped them
+        (the exact rows a rerank_store='exact' build would have stored, so
+        merge results stay bitwise independent of the store choice)."""
+        if ann.index.vectors is not None:
+            return None
+        if not normalized:
+            rows = np.asarray(bruteforce.l2_normalize(jnp.asarray(rows)))
+        return np.asarray(rows, np.float32)
 
     # -- merging -----------------------------------------------------------
 
@@ -789,26 +868,24 @@ class IndexWriter:
         ids after the range remap, exactly like a Lucene merge."""
         group = self._segments[start:end]
         for s in group:
-            if s.ann.index.vectors is None:
+            if s.source_rows() is None:
                 raise ValueError(
                     "merging " + _NEEDS_VECTORS_MSG
-                    + f"; segment {s.name!r} has none"
+                    + f" or a source sidecar; segment {s.name!r} has neither"
                 )
         rows = np.concatenate(
-            [np.asarray(s.ann.index.vectors)[s.live] for s in group], axis=0
+            [s.source_rows()[s.live] for s in group], axis=0
         )
         if rows.shape[0] == 0:
             # Every row dead: drop the segments outright.
             del self._segments[start:end]
             self._changed = True
             return
-        ann = AnnIndex.build(
-            jnp.asarray(rows), self.config,
-            rerank_store=self.rerank_store, use_kernel=self.use_kernel,
-            normalized=True,
-        )
+        ann = self._build_segment(jnp.asarray(rows), normalized=True)
         merged = Segment(
-            ann=ann, live=np.ones(rows.shape[0], bool), name=self._next_name()
+            ann=ann, live=np.ones(rows.shape[0], bool),
+            name=self._next_name(),
+            source=self._source_sidecar(ann, rows, normalized=True),
         )
         self._segments[start:end] = [merged]
         self._changed = True
@@ -867,6 +944,10 @@ class IndexWriter:
             seg_dir = os.path.join(path, seg.name)
             if not os.path.exists(os.path.join(seg_dir, "config.json")):
                 seg.ann.save(seg_dir)
+            if seg.source is not None:
+                src_file = os.path.join(seg_dir, "source.npz")
+                if not os.path.exists(src_file):
+                    np.savez_compressed(src_file, source=seg.source)
             entry = {
                 "name": seg.name,
                 "num_docs": seg.num_docs,

@@ -187,6 +187,49 @@ class QuantizedStore:
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
+class QuantizedPostings:
+    """Packed int8/int4 primary postings + dequantization scales — the
+    match-stage analogue of :class:`QuantizedStore` (docs/DESIGN.md §12).
+
+    The fp32/bf16 posting matrix is quantized at build time and never
+    streamed again: the fused kernel unpacks and rescales tiles in VMEM.
+
+    bits == 8 (per-doc scale):
+      q:     (N, T) int8, q[d,t] = round(mat[d,t] / scale[d]).
+      scale: (N, 1) float32 per-doc scale = max_t |mat[d,t]| / 127.
+      Dequantization factorizes out of the dot (scale is constant per row),
+      so scores are computed as (q_query @ q.T) * scale — applied once per
+      (query, doc) AFTER the reduction, exactly like the kernel does.
+
+    bits == 4 (grouped scale, ``group`` columns per scale):
+      q:     (N, Tg/2) uint8; column pairs packed as low | (high << 4) with
+             Tg = round_up(T, group); nibble = clip(round(mat/gs), -8, 7)+8,
+             so the 0-pad columns encode as nibble 8 and dequantize to 0.
+      scale: (N, Tg/group) float32 per-group scale = max |group| / 7.
+      Dequantized value = (nibble - 8) * scale[d, t // group].
+
+    ``cols`` is the logical (pre-padding) column count T.  ``bits``,
+    ``group`` and ``cols`` are static pytree metadata (like
+    ``BlockMaxIndex.block_size``) so the container stays jit-traceable.
+    """
+
+    q: jax.Array
+    scale: jax.Array
+    bits: int = dataclasses.field(metadata=dict(static=True))
+    group: int = dataclasses.field(default=0, metadata=dict(static=True))
+    cols: int = dataclasses.field(default=0, metadata=dict(static=True))
+
+    @property
+    def num_docs(self) -> int:
+        return self.q.shape[0]
+
+    def nbytes(self) -> int:
+        return (self.q.size * self.q.dtype.itemsize
+                + self.scale.size * self.scale.dtype.itemsize)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
 class FakeWordsIndex:
     """Sign-split quantized term-frequency index.
 
@@ -197,28 +240,37 @@ class FakeWordsIndex:
              doc_len = sum_t tf(t, d).
     df:      (2m,) int32 document frequency per fake term.
     scored:  (N, 2m) bfloat16 precomputed sqrt(tf)*idf^2*norm (classic mode
-             scoring matrix) or None in dot mode.
+             scoring matrix) or None in dot mode / when the classic matrix
+             is stored quantized (``pq``).
     vectors: (N, dim) original float vectors kept for exact reranking, or
              None if reranking is disabled at build time.
     vq:      int8 :class:`QuantizedStore` rerank alternative (or None); built
              by the ``rerank_store="int8"`` BuildPipeline stage.
+    pq:      :class:`QuantizedPostings` primary-postings store (or None):
+             classic mode quantizes ``scored`` (which is then dropped);
+             dot mode's int8 store is the native int8 ``tf`` itself, and
+             int4 packs ``tf`` (the ``tf`` leaf is then dropped and ``df``
+             is frozen Lucene-style — docs/DESIGN.md §12).
+
+    ``tf`` may be None only when ``pq`` carries the dot-mode int4 store.
     """
 
-    tf: jax.Array
+    tf: Optional[jax.Array]
     idf: jax.Array
     norm: jax.Array
     df: jax.Array
     scored: Optional[jax.Array] = None
     vectors: Optional[jax.Array] = None
     vq: Optional[QuantizedStore] = None
+    pq: Optional[QuantizedPostings] = None
 
     @property
     def num_docs(self) -> int:
-        return self.tf.shape[0]
+        return self.norm.shape[0]
 
     @property
     def num_terms(self) -> int:
-        return self.tf.shape[1]
+        return self.idf.shape[0]
 
     def nbytes(self) -> int:
         total = 0
@@ -298,16 +350,22 @@ class FlatIndex:
     vectors: (N, dim) float32.  Exists so the exact-cosine oracle rides the
     same AnnIndex -> SearchPipeline -> AnnService path as the three paper
     encodings (one retrieval architecture for every method).  ``vectors``
-    stays mandatory (it IS the match operand); ``vq`` is the optional int8
-    rerank store so the quantized-rerank knob is uniform across methods.
+    is the match operand unless ``pq`` holds int8/int4 quantized postings
+    (docs/DESIGN.md §12), in which case the match stage streams the packed
+    store and ``vectors`` may be None (when the rerank store dropped the
+    originals too); ``vq`` is the optional int8 rerank store so the
+    quantized-rerank knob is uniform across methods.
     """
 
-    vectors: jax.Array
+    vectors: Optional[jax.Array]
     vq: Optional[QuantizedStore] = None
+    pq: Optional[QuantizedPostings] = None
 
     @property
     def num_docs(self) -> int:
-        return self.vectors.shape[0]
+        if self.vectors is not None:
+            return self.vectors.shape[0]
+        return self.pq.num_docs
 
     def nbytes(self) -> int:
         total = 0

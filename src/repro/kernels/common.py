@@ -50,6 +50,50 @@ def next_pow2(x: int) -> int:
     return 1 << max(0, (x - 1).bit_length())
 
 
+# --------------------------------------------------------------------------
+# Canonical int4 nibble unpack / grouped-scale dequantization
+# (docs/DESIGN.md §12).  Lives here — the dependency-free kernel utility
+# module — so the Pallas kernel tiles, the XLA reference scoring paths and
+# the build-time quantizer (core/builder.py) all run the EXACT same
+# operation sequence: bit-for-bit identical dequantized operands.
+# --------------------------------------------------------------------------
+
+
+def unpack_int4(packed: jax.Array) -> jax.Array:
+    """uint8 nibble pairs -> interleaved nibble columns (..., 2C) uint8.
+
+    Low nibble = even column, high nibble = odd column; interleaving is a
+    stack + reshape (pairwise, gather-free — the same trick as the bitonic
+    network's compare-exchange pairing)."""
+    import jax.numpy as jnp
+
+    lo = packed & jnp.uint8(0xF)
+    hi = packed >> 4
+    shape = packed.shape[:-1] + (2 * packed.shape[-1],)
+    return jnp.stack([lo, hi], axis=-1).reshape(shape)
+
+
+def expand_group_scale(scale: jax.Array, group: int) -> jax.Array:
+    """(..., G) per-group scales -> (..., G*group) per-column, via broadcast
+    + reshape (no gathers)."""
+    import jax.numpy as jnp
+
+    shape = scale.shape[:-1] + (scale.shape[-1], group)
+    return jnp.broadcast_to(scale[..., None], shape).reshape(
+        scale.shape[:-1] + (scale.shape[-1] * group,)
+    )
+
+
+def dequant_int4(packed: jax.Array, scale: jax.Array, group: int, dtype) -> jax.Array:
+    """THE canonical int4 grouped-scale dequant ordering: f32 (nibble - 8)
+    * group_scale, then ONE cast to the compute dtype.  (..., C) packed +
+    (..., 2C/group) scales -> (..., 2C) values."""
+    import jax.numpy as jnp
+
+    nib = unpack_int4(packed).astype(jnp.float32) - 8.0
+    return (nib * expand_group_scale(scale, group)).astype(dtype)
+
+
 def pad_dim(x: jax.Array, axis: int, multiple: int, value=0) -> jax.Array:
     """Zero-pad ``axis`` of x up to a multiple (kernels want aligned tiles)."""
     import jax.numpy as jnp

@@ -457,3 +457,314 @@ def fused_topk_gathered(
     scores = scores[:, :depth]
     ids = ids[:, :depth]
     return scores, jnp.where(scores == -jnp.inf, -1, ids)
+
+
+# --------------------------------------------------------------------------
+# Quantized-postings variants: dequantization fused into the score stage
+# (docs/DESIGN.md §12).  The packed int8/int4 store streams from HBM; tiles
+# are unpacked and rescaled in VMEM registers, so the fp32/bf16 posting
+# matrix never exists in HBM.
+#
+#   * bits=8 — the per-doc scale is constant along the reduce axis, so it
+#     factorizes out of the dot: the int8 tile is cast to the query dtype
+#     (exact: |q| <= 127 is representable in bf16), f32-accumulated across
+#     K tiles, and the scale is applied ONCE per (query, doc) at merge time.
+#   * bits=4 — nibbles are unpacked (``common.unpack_int4``) and rescaled
+#     per group (``common.dequant_int4``) IN REGISTERS before the tile dot;
+#     the canonical ordering (f32 (nibble-8) * group_scale, one cast to the
+#     query dtype) is shared bit-for-bit with the XLA references and the
+#     build-time ``dequantize_postings``.
+#
+# Padding invariants: packed pad byte 0x88 decodes to nibble 8 on both
+# halves -> dequantized 0; scale pads are 0 (so any stray nibble still
+# dequantizes to 0); query column pads are 0.  Padded doc ROWS are masked
+# to (-inf, BIG_ID) by the n_docs check like the fp paths.
+# --------------------------------------------------------------------------
+
+INT4_PAD_BYTE = np.uint8(0x88)
+
+
+def _dequant_tile(d, s, bits: int, group: int, q_dtype):
+    """Unpack + rescale one packed doc tile in registers.
+
+    bits=8: (bn, bk) int8 -> q_dtype (scale applied later, post-reduction).
+    bits=4: (bn, bk//2) packed + (bn, bk//group) scales -> (bn, bk) q_dtype.
+    """
+    if bits == 8:
+        return d.astype(q_dtype)
+    return common.dequant_int4(d, s, group, q_dtype)
+
+
+def _fused_topk_quantized_kernel(
+    q_ref, d_ref, s_ref, s_out_ref, i_out_ref, acc_ref, rs_ref, ri_ref,
+    *, n_j: int, n_k: int, n_docs: int, bn: int, depth: int, merge: str,
+    bits: int, group: int,
+):
+    j = pl.program_id(1)
+    k = pl.program_id(2)
+
+    @pl.when(jnp.logical_and(j == 0, k == 0))
+    def _init_running():
+        rs_ref[...] = jnp.full_like(rs_ref, -jnp.inf)
+        ri_ref[...] = jnp.full_like(ri_ref, BIG_ID)
+
+    @pl.when(k == 0)
+    def _init_acc():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[...]
+    d = _dequant_tile(d_ref[...], s_ref[...], bits, group, q.dtype)
+    acc_ref[...] += jnp.dot(q, d.T, preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _merge():
+        tile_s = acc_ref[...]
+        if bits == 8:
+            # Per-doc dequant applied once, after the full K reduction.
+            tile_s = tile_s * s_ref[...][:, 0][None, :]
+        ids = j * bn + jax.lax.broadcasted_iota(jnp.int32, tile_s.shape, 1)
+        valid = ids < n_docs
+        tile_s = jnp.where(valid, tile_s, -jnp.inf)
+        ids = jnp.where(valid, ids, BIG_ID)
+        _merge_if_improves(rs_ref, ri_ref, tile_s, ids, depth, merge,
+                           strict=True)
+
+    @pl.when(jnp.logical_and(j == n_j - 1, k == n_k - 1))
+    def _flush():
+        s_out_ref[...] = rs_ref[...]
+        i_out_ref[...] = ri_ref[...]
+
+
+def _quantized_operands(q, docs, scale, bits, group, bq, bn, bk):
+    """Pad the query / packed store / scales to tile multiples.
+
+    Returns (qp, dp, sp) plus the padded logical column count.  For int4 the
+    query pads to the PACKED width (2 * packed cols per bk block); packed
+    pads with 0x88 and scales with 0 so padding always dequantizes to 0."""
+    qp = common.pad_dim(common.pad_dim(q, 0, bq), 1, bk)
+    if bits == 8:
+        dp = common.pad_dim(common.pad_dim(docs, 0, bn), 1, bk)
+        sp = common.pad_dim(scale, 0, bn)  # (N', 1) f32
+        assert dp.shape[1] == qp.shape[1], (dp.shape, qp.shape)
+        return qp, dp, sp
+    dp = common.pad_dim(
+        common.pad_dim(docs, 0, bn, value=INT4_PAD_BYTE),
+        1, bk // 2, value=INT4_PAD_BYTE,
+    )
+    sp = common.pad_dim(common.pad_dim(scale, 0, bn), 1, bk // group)
+    assert 2 * dp.shape[1] == qp.shape[1], (dp.shape, qp.shape)
+    assert sp.shape[1] * group == qp.shape[1], (sp.shape, qp.shape)
+    return qp, dp, sp
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "depth", "bits", "group", "merge", "bq", "bn", "bk", "interpret"
+    ),
+)
+def fused_topk_quantized(
+    q: jax.Array,  # (B, T) bf16 / f32 query operand
+    docs: jax.Array,  # (N, T) int8 | (N, Tg/2) uint8 packed nibbles
+    scale: jax.Array,  # (N, 1) | (N, Tg/group) f32 dequant scales
+    depth: int,
+    bits: int = 8,
+    group: int = 0,
+    merge: str = "bitonic",
+    bq: int | None = None,
+    bn: int | None = None,
+    bk: int | None = None,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Streaming top-``depth`` of q @ dequant(docs, scale).T with the
+    dequantization fused into the score stage — only the packed store and
+    the scales ever stream from HBM.  Same output contract as
+    :func:`fused_topk`."""
+    if interpret is None:
+        interpret = common.INTERPRET
+    bq, bn, bk = bq or 128, bn or 512, bk or 512
+    b, t = q.shape
+    n = docs.shape[0]
+    assert depth <= n, f"depth {depth} > corpus size {n}"
+    bq = min(bq, common.round_up(b, 8))
+    bn = min(bn, common.round_up(n, common.LANE))
+    bk = min(bk, common.round_up(t, common.LANE))
+    if bits == 4:
+        assert group and bk % group == 0, (
+            f"doc-tile reduce width {bk} must be a multiple of the int4 "
+            f"scale group {group}"
+        )
+    qp, dp, sp = _quantized_operands(q, docs, scale, bits, group, bq, bn, bk)
+    dpad = _depth_pad(depth, merge)
+    grid = (qp.shape[0] // bq, dp.shape[0] // bn, qp.shape[1] // bk)
+
+    if bits == 8:
+        d_spec = pl.BlockSpec((bn, bk), lambda i, j, k: (j, k))
+        s_spec = pl.BlockSpec((bn, 1), lambda i, j, k: (j, 0))
+    else:
+        d_spec = pl.BlockSpec((bn, bk // 2), lambda i, j, k: (j, k))
+        s_spec = pl.BlockSpec((bn, bk // group), lambda i, j, k: (j, k))
+
+    scores, ids = pl.pallas_call(
+        functools.partial(
+            _fused_topk_quantized_kernel,
+            n_j=grid[1], n_k=grid[2], n_docs=n, bn=bn, depth=depth,
+            merge=merge, bits=bits, group=group,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bq, bk), lambda i, j, k: (i, k)),
+            d_spec,
+            s_spec,
+        ],
+        out_specs=[
+            pl.BlockSpec((bq, dpad), lambda i, j, k: (i, 0)),
+            pl.BlockSpec((bq, dpad), lambda i, j, k: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((qp.shape[0], dpad), jnp.float32),
+            jax.ShapeDtypeStruct((qp.shape[0], dpad), jnp.int32),
+        ],
+        scratch_shapes=[
+            common.MemorySpace.VMEM((bq, bn), jnp.float32),
+            common.MemorySpace.VMEM((bq, dpad), jnp.float32),
+            common.MemorySpace.VMEM((bq, dpad), jnp.int32),
+        ],
+        compiler_params=common.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(qp, dp, sp)
+    scores = scores[:b, :depth]
+    ids = ids[:b, :depth]
+    return scores, jnp.where(scores == -jnp.inf, -1, ids)
+
+
+def _fused_gathered_quantized_kernel(
+    q_ref, d_ref, s_ref, rid_ref, s_out_ref, i_out_ref, acc_ref, rs_ref,
+    ri_ref, *, n_j: int, n_k: int, n_docs: int, depth: int, merge: str,
+    bits: int, group: int,
+):
+    j = pl.program_id(1)
+    k = pl.program_id(2)
+
+    @pl.when(jnp.logical_and(j == 0, k == 0))
+    def _init_running():
+        rs_ref[...] = jnp.full_like(rs_ref, -jnp.inf)
+        ri_ref[...] = jnp.full_like(ri_ref, BIG_ID)
+
+    @pl.when(k == 0)
+    def _init_acc():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[...]
+    d = _dequant_tile(d_ref[0], s_ref[0], bits, group, q.dtype)
+    acc_ref[...] += jnp.dot(q, d.T, preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _merge():
+        tile_s = acc_ref[...]  # (1, bn)
+        if bits == 8:
+            tile_s = tile_s * s_ref[0][:, 0][None, :]
+        ids = rid_ref[...]
+        valid = ids < n_docs
+        tile_s = jnp.where(valid, tile_s, -jnp.inf)
+        ids = jnp.where(valid, ids, BIG_ID)
+        _merge_if_improves(rs_ref, ri_ref, tile_s, ids, depth, merge,
+                           strict=False)
+
+    @pl.when(jnp.logical_and(j == n_j - 1, k == n_k - 1))
+    def _flush():
+        s_out_ref[...] = rs_ref[...]
+        i_out_ref[...] = ri_ref[...]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "depth", "n_docs", "bits", "group", "merge", "bn", "bk", "interpret"
+    ),
+)
+def fused_topk_gathered_quantized(
+    q: jax.Array,  # (B, T)
+    docs: jax.Array,  # (B, R, T) int8 | (B, R, Tg/2) packed candidate rows
+    scale: jax.Array,  # (B, R, 1) | (B, R, Tg/group) f32 scales
+    row_ids: jax.Array,  # (B, R) int32 global doc ids; >= n_docs = padding
+    depth: int,
+    n_docs: int,
+    bits: int = 8,
+    group: int = 0,
+    merge: str = "bitonic",
+    bn: int = 512,
+    bk: int = 512,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Quantized-store variant of :func:`fused_topk_gathered` (blockmax
+    stage 2): per-query gathered packed rows + scales are dequantized in
+    registers and streamed through the same running top-``depth`` merge on
+    GLOBAL doc ids."""
+    if interpret is None:
+        interpret = common.INTERPRET
+    b, r, tc = docs.shape
+    t = q.shape[1]
+    assert depth <= r, f"depth {depth} > candidate count {r}"
+    bn = min(bn, common.round_up(r, common.LANE))
+    bk = min(bk, common.round_up(t, common.LANE))
+    if bits == 4:
+        assert group and bk % group == 0, (
+            f"doc-tile reduce width {bk} must be a multiple of the int4 "
+            f"scale group {group}"
+        )
+    qp = common.pad_dim(q, 1, bk)
+    if bits == 8:
+        dp = common.pad_dim(common.pad_dim(docs, 1, bn), 2, bk)
+        sp = common.pad_dim(scale, 1, bn)
+        d_spec = pl.BlockSpec((1, bn, bk), lambda i, j, k: (i, j, k))
+        s_spec = pl.BlockSpec((1, bn, 1), lambda i, j, k: (i, j, 0))
+    else:
+        dp = common.pad_dim(
+            common.pad_dim(docs, 1, bn, value=INT4_PAD_BYTE),
+            2, bk // 2, value=INT4_PAD_BYTE,
+        )
+        sp = common.pad_dim(common.pad_dim(scale, 1, bn), 2, bk // group)
+        assert 2 * dp.shape[2] == qp.shape[1], (dp.shape, qp.shape)
+        d_spec = pl.BlockSpec((1, bn, bk // 2), lambda i, j, k: (i, j, k))
+        s_spec = pl.BlockSpec((1, bn, bk // group), lambda i, j, k: (i, j, k))
+    rp = common.pad_dim(row_ids.astype(jnp.int32), 1, bn, value=BIG_ID)
+    dpad = _depth_pad(depth, merge)
+    grid = (b, dp.shape[1] // bn, qp.shape[1] // bk)
+
+    scores, ids = pl.pallas_call(
+        functools.partial(
+            _fused_gathered_quantized_kernel,
+            n_j=grid[1], n_k=grid[2], n_docs=n_docs, depth=depth,
+            merge=merge, bits=bits, group=group,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bk), lambda i, j, k: (i, k)),
+            d_spec,
+            s_spec,
+            pl.BlockSpec((1, bn), lambda i, j, k: (i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, dpad), lambda i, j, k: (i, 0)),
+            pl.BlockSpec((1, dpad), lambda i, j, k: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, dpad), jnp.float32),
+            jax.ShapeDtypeStruct((b, dpad), jnp.int32),
+        ],
+        scratch_shapes=[
+            common.MemorySpace.VMEM((1, bn), jnp.float32),
+            common.MemorySpace.VMEM((1, dpad), jnp.float32),
+            common.MemorySpace.VMEM((1, dpad), jnp.int32),
+        ],
+        compiler_params=common.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(qp, dp, sp, rp)
+    scores = scores[:, :depth]
+    ids = ids[:, :depth]
+    return scores, jnp.where(scores == -jnp.inf, -1, ids)

@@ -15,7 +15,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import common
-from repro.kernels.fused_topk.kernel import fused_topk, fused_topk_gathered
+from repro.kernels.fused_topk.kernel import (
+    fused_topk,
+    fused_topk_gathered,
+    fused_topk_gathered_quantized,
+    fused_topk_quantized,
+)
 
 __all__ = [
     "resolve_use_kernel",
@@ -26,6 +31,10 @@ __all__ = [
     "scan_l2_topk",
     "fused_topk",
     "fused_topk_gathered",
+    "fused_topk_quantized",
+    "fused_topk_gathered_quantized",
+    "postings_topk",
+    "postings_topk_gathered",
 ]
 
 
@@ -71,6 +80,34 @@ def lsh_topk(
 ) -> Tuple[jax.Array, jax.Array]:
     """Fused MinHash collision-count top-depth (VPU compare+reduce stage)."""
     return fused_topk(sig_q, sig_d, depth, mode="lsh", interpret=interpret)
+
+
+def postings_topk(
+    pq, qv: jax.Array, depth: int, interpret: bool | None = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Fused top-depth over a packed :class:`repro.core.types.
+    QuantizedPostings` store — dequantization happens in VMEM registers
+    (docs/DESIGN.md §12).  ``qv`` is the mode's float query operand."""
+    return fused_topk_quantized(
+        qv, pq.q, pq.scale, depth, bits=pq.bits, group=pq.group,
+        interpret=interpret,
+    )
+
+
+def postings_topk_gathered(
+    pq, qv: jax.Array, row_ids: jax.Array, depth: int, n_docs: int,
+    interpret: bool | None = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Fused gathered-candidates top-depth over packed rows of a
+    :class:`repro.core.types.QuantizedPostings` store (blockmax stage 2).
+    Gathers the packed rows + scales here so callers stay one-liners."""
+    import jax.numpy as jnp
+
+    safe = jnp.minimum(row_ids, pq.num_docs - 1)
+    return fused_topk_gathered_quantized(
+        qv, pq.q[safe], pq.scale[safe], row_ids, depth, n_docs,
+        bits=pq.bits, group=pq.group, interpret=interpret,
+    )
 
 
 def lift_l2(points: jax.Array) -> jax.Array:

@@ -15,6 +15,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import common
+
 LSH_SENTINEL = np.uint32(0xFFFFFFFF)
 
 
@@ -74,6 +76,133 @@ def gathered_topk_ref(
     scores = jnp.where(valid, gathered_scores_ref(q, docs, mode), -jnp.inf)
     ids = jnp.where(valid, row_ids, np.int32(2**30))
     return topk_by_id_ref(scores, ids, depth)
+
+
+# --------------------------------------------------------------------------
+# Quantized-postings references (docs/DESIGN.md §12).  These implement the
+# EXACT dequant ordering the fused kernels run — int8: cast-to-query-dtype
+# dot, per-doc scale applied AFTER the reduction; int4: the canonical
+# ``common.dequant_int4`` sequence (f32 (nibble-8) * group_scale, one cast
+# to the query dtype) before the dot — so the dequantized operands match
+# bit-for-bit and scores agree to f32 summation order.
+# --------------------------------------------------------------------------
+
+
+def quantized_scores_ref(
+    q: jax.Array, docs: jax.Array, scale: jax.Array, bits: int, group: int = 0
+) -> jax.Array:
+    """Dense (B, N) f32 scores over a packed int8/int4 postings store."""
+    if bits == 8:
+        out = jnp.einsum(
+            "bt,nt->bn", q, docs.astype(q.dtype),
+            preferred_element_type=jnp.float32,
+        )
+        return out * scale[:, 0][None, :]
+    deq = common.dequant_int4(docs, scale, group, q.dtype)  # (N, Tg)
+    return jnp.einsum(
+        "bt,nt->bn", q, deq[:, : q.shape[1]],
+        preferred_element_type=jnp.float32,
+    )
+
+
+def quantized_topk_ref(
+    q: jax.Array, docs: jax.Array, scale: jax.Array, depth: int,
+    bits: int, group: int = 0,
+) -> Tuple[jax.Array, jax.Array]:
+    """Unfused quantized reference: dense scores + ``jax.lax.top_k``."""
+    return jax.lax.top_k(quantized_scores_ref(q, docs, scale, bits, group), depth)
+
+
+def quantized_gathered_scores_ref(
+    q: jax.Array, docs: jax.Array, scale: jax.Array, bits: int, group: int = 0
+) -> jax.Array:
+    """Dense (B, R) f32 scores over per-query gathered packed rows."""
+    if bits == 8:
+        out = jnp.einsum(
+            "bt,brt->br", q, docs.astype(q.dtype),
+            preferred_element_type=jnp.float32,
+        )
+        return out * scale[:, :, 0]
+    deq = common.dequant_int4(docs, scale, group, q.dtype)  # (B, R, Tg)
+    return jnp.einsum(
+        "bt,brt->br", q, deq[:, :, : q.shape[1]],
+        preferred_element_type=jnp.float32,
+    )
+
+
+def quantized_gathered_topk_ref(
+    q: jax.Array,
+    docs: jax.Array,
+    scale: jax.Array,
+    row_ids: jax.Array,
+    depth: int,
+    n_docs: int,
+    bits: int,
+    group: int = 0,
+) -> Tuple[jax.Array, jax.Array]:
+    """Unfused quantized blockmax stage-2 reference (global-id ties)."""
+    valid = row_ids < n_docs
+    scores = jnp.where(
+        valid, quantized_gathered_scores_ref(q, docs, scale, bits, group),
+        -jnp.inf,
+    )
+    ids = jnp.where(valid, row_ids, np.int32(2**30))
+    return topk_by_id_ref(scores, ids, depth)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("depth", "bits", "group", "tile")
+)
+def streaming_topk_quantized_ref(
+    q: jax.Array,
+    docs: jax.Array,
+    scale: jax.Array,
+    depth: int,
+    bits: int,
+    group: int = 0,
+    tile: int = 4096,
+) -> Tuple[jax.Array, jax.Array]:
+    """XLA online-reduction equivalent over a packed store: scan doc tiles,
+    dequantize each tile transiently, merge a running top-``depth``.  The
+    dequantized matrix is only ever (tile, T) — the timeable stand-in for
+    :func:`..kernel.fused_topk_quantized` off-TPU, and the XLA path for
+    corpora too large for a dense (B, N) score matrix."""
+    n = docs.shape[0]
+    b = q.shape[0]
+    pad = (-n) % tile
+    if pad:
+        docs = jnp.concatenate(
+            [docs, jnp.zeros((pad, docs.shape[1]), docs.dtype)], axis=0
+        )
+        scale = jnp.concatenate(
+            [scale, jnp.zeros((pad, scale.shape[1]), scale.dtype)], axis=0
+        )
+    d_tiles = docs.reshape(-1, tile, docs.shape[1])
+    s_tiles = scale.reshape(-1, tile, scale.shape[1])
+
+    init_s = jnp.full((b, depth), -jnp.inf, jnp.float32)
+    init_i = jnp.full((b, depth), -1, jnp.int32)
+
+    def body(carry, xs):
+        best_s, best_i = carry
+        t_idx, d_tile, s_tile = xs
+        s = quantized_scores_ref(q, d_tile, s_tile, bits, group)
+        ids = t_idx * tile + jnp.arange(tile, dtype=jnp.int32)[None, :]
+        valid = ids < n
+        s = jnp.where(valid, s, -jnp.inf)
+        loc_s, pos = jax.lax.top_k(s, min(depth, tile))
+        loc_i = jnp.take_along_axis(jnp.broadcast_to(ids, s.shape), pos, axis=-1)
+        all_s = jnp.concatenate([best_s, loc_s], axis=-1)
+        all_i = jnp.concatenate([best_i, loc_i], axis=-1)
+        top_s, top_pos = jax.lax.top_k(all_s, depth)
+        return (top_s, jnp.take_along_axis(all_i, top_pos, axis=-1)), None
+
+    (best_s, best_i), _ = jax.lax.scan(
+        body,
+        (init_s, init_i),
+        (jnp.arange(d_tiles.shape[0], dtype=jnp.int32), d_tiles, s_tiles),
+    )
+    return best_s, best_i
 
 
 @functools.partial(jax.jit, static_argnames=("depth", "tile", "mode"))

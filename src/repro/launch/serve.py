@@ -73,7 +73,11 @@ def serve_segmented(args, corpus, queries) -> dict:
     end, with recall measured against the final live corpus."""
     rng = np.random.default_rng(0)
     config = make_config(args)
-    writer = IndexWriter(config)
+    writer = IndexWriter(
+        config,
+        rerank_store="int8" if args.quantized_rerank else "exact",
+        primary_postings=args.postings or "fp32",
+    )
     chunks = np.array_split(np.asarray(corpus), args.segments)
     t0 = time.time()
     writer.add(chunks[0])
@@ -159,6 +163,19 @@ def main(argv=None) -> dict:
              "of fp32 originals (~4x fewer rerank gather bytes)",
     )
     ap.add_argument(
+        "--postings", choices=("fp32", "int8", "int4"), default=None,
+        help="primary postings encoding: int8 (per-doc scale) or int4 "
+             "(grouped scales), dequantized inside the fused score stage "
+             "(docs/DESIGN.md §12); default fp32 unless --memory-budget "
+             "picks otherwise",
+    )
+    ap.add_argument(
+        "--memory-budget", type=float, default=None, metavar="MB",
+        help="resident index budget in MB; picks the best-recall "
+             "{postings, rerank store, blockmax keep} that fits "
+             "(core/memory_budget.py); knobs set explicitly are pinned",
+    )
+    ap.add_argument(
         "--segments", type=int, default=0,
         help="ingest the corpus ONLINE in this many chunks through the "
              "Lucene-style IndexWriter (segmented NRT serving with "
@@ -180,11 +197,10 @@ def main(argv=None) -> dict:
                 "--save-index; use writer.commit(path) / "
                 "SegmentedAnnIndex.load(path)"
             )
-        if args.quantized_rerank:
+        if args.memory_budget is not None:
             raise SystemExit(
-                "--segments requires the exact rerank store (merges "
-                "rebuild from stored originals); --quantized-rerank is "
-                "unsupported there"
+                "--memory-budget plans a monolithic build; with --segments "
+                "pass --postings/--quantized-rerank explicitly"
             )
         return serve_segmented(args, corpus, queries)
 
@@ -200,11 +216,16 @@ def main(argv=None) -> dict:
         mesh = jax.make_mesh((args.shards,), ("data",))
 
     config = make_config(args)
-    rerank_store = "int8" if args.quantized_rerank else "exact"
+    rerank_store = "int8" if args.quantized_rerank else (
+        None if args.memory_budget is not None else "exact")
+    budget = (int(args.memory_budget * 1e6)
+              if args.memory_budget is not None else None)
     t0 = time.time()
     ann = AnnIndex.build(
         jnp.asarray(corpus), config,
         rerank_store=rerank_store, mesh=mesh, shard_axes=("data",),
+        primary_postings=args.postings,
+        memory_budget_bytes=budget,
     )
     jax.block_until_ready(jax.tree_util.tree_leaves(ann.index))
     build_s = time.time() - t0
@@ -225,8 +246,14 @@ def main(argv=None) -> dict:
         ann = AnnIndex.load(args.save_index)
         print(f"[serve] round-tripped index through {args.save_index}")
 
+    # A budget plan may select rerank_store="none"; serving then runs
+    # match-only regardless of --rerank.
+    do_rerank = args.rerank and (
+        ann.index.vectors is not None
+        or getattr(ann.index, "vq", None) is not None
+    )
     svc = AnnService(ann, AnnServiceConfig(
-        k=args.k, depth=args.depth, rerank=args.rerank, max_batch=args.batch,
+        k=args.k, depth=args.depth, rerank=do_rerank, max_batch=args.batch,
         blockmax_keep=args.blockmax_keep),
         mesh=mesh, shard_axes=("data",) if mesh is not None else ())
 

@@ -187,12 +187,16 @@ class AnnService:
                 rs = "int8"
             else:
                 rs = "exact" if ann.index.vectors is not None else "none"
+            # Quantized primary postings change the index spec tree: the
+            # sharded search must shard the packed store + scales too.
+            pq = getattr(ann.index, "pq", None)
             self._search = distributed.make_sharded_search(
                 self.mesh, ann.config, self.shard_axes,
                 k=self.scfg.k, depth=self.scfg.depth, rerank=self.scfg.rerank,
                 use_kernel=self._uk,
                 blockmax_keep=self._bm_keep,
                 rerank_store=rs,
+                postings_bits=pq.bits if pq is not None else 0,
             )
         else:
             self._search = None

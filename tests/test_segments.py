@@ -513,7 +513,7 @@ def test_format_version_is_validated(rng, tmp_path):
 def test_writer_guard_rails(rng):
     a, _ = _corpora(rng)
     with pytest.raises(ValueError, match="rerank_store"):
-        IndexWriter(BruteForceConfig(), rerank_store="int8")
+        IndexWriter(BruteForceConfig(), rerank_store="fp16")
     with pytest.raises(ValueError, match="backend='scan'"):
         IndexWriter(KdTreeConfig(dims=8, backend="tree"))
     w = IndexWriter(BruteForceConfig(), merge_policy=None)
