@@ -456,6 +456,193 @@ def quantized_ab(
     return rows, summary
 
 
+def filtered_ab(
+    n_docs: int, dim: int, batch: int, depth: int = 100, k: int = 10,
+    ratios: Tuple[float, ...] = (0.01, 0.1, 0.5), n_calls: int = 20,
+) -> Tuple[List[Dict], Dict]:
+    """Filtered vs unfiltered serving A/B (docs/DESIGN.md §13): QPS,
+    p50/p99 latency, and recall@10 at 1% / 10% / 50% selectivity for the
+    classic fake-words path over fp32 / int8 / int4 primary postings.
+
+    The filter is applied INSIDE the match stage (one kernel pass — the
+    bitmap operand masks scores to -inf in the tile loop), so filtered
+    latency must track unfiltered latency, not the depth-inflated
+    post-filter cost.  Recall is scored against the exact oracle over the
+    kept sub-corpus (mapped back to global ids), so every tier's number is
+    a true filtered recall, comparable across selectivities."""
+    from repro.core import eval as ev
+
+    rng = np.random.default_rng(0)
+    vecs = jnp.asarray(rng.normal(size=(n_docs, dim)).astype(np.float32))
+    queries = vecs[:batch] + 0.01 * jnp.asarray(
+        rng.normal(size=(batch, dim)).astype(np.float32))
+    uk = None if jax.default_backend() == "tpu" else False
+    rows: List[Dict] = []
+    summary: Dict = {"depth": depth, "k": k, "ratios": list(ratios)}
+
+    def truth_under(mask: np.ndarray) -> jax.Array:
+        kept = np.flatnonzero(mask)
+        _, gi = bruteforce.exact_topk(vecs[kept], queries, k, use_kernel=uk)
+        return jnp.asarray(kept[np.asarray(gi)])
+
+    masks = {}
+    for ratio in ratios:
+        m = (np.random.default_rng(int(ratio * 1000) + 7).random(n_docs)
+             < ratio).astype(np.int32)
+        m[: 2 * depth] = 1  # degenerate-draw floor: >= depth survivors
+        masks[ratio] = m
+
+    cfg = FakeWordsConfig(quantization=50)
+    for pp in ("fp32", "int8", "int4"):
+        ann = AnnIndex.build(vecs, cfg, rerank_store="int8",
+                             primary_postings=pp, use_kernel=uk)
+
+        def timed(filt):
+            f = lambda: ann.search(queries, k=k, depth=depth, rerank=True,
+                                   filt=filt)
+            jax.block_until_ready(f())  # compile
+            lat = []
+            for _ in range(n_calls):
+                t0 = time.perf_counter()
+                jax.block_until_ready(f())
+                lat.append(time.perf_counter() - t0)
+            lat_ms = np.asarray(lat, np.float64) * 1e3
+            _, ids = f()
+            return lat_ms, ids
+
+        lat_ms, ids = timed(None)
+        _, gt = bruteforce.exact_topk(vecs, queries, k, use_kernel=uk)
+        base = {
+            "postings": pp, "selectivity": 1.0,
+            "qps": round(batch / float(np.percentile(lat_ms, 50)) * 1e3, 1),
+            "p50_ms": round(float(np.percentile(lat_ms, 50)), 3),
+            "p99_ms": round(float(np.percentile(lat_ms, 99)), 3),
+            "recall_at_10": round(float(ev.recall_at(gt, ids)), 4),
+        }
+        rows.append(base)
+        for ratio in ratios:
+            m = masks[ratio]
+            lat_ms, ids = timed(jnp.asarray(m))
+            assert ((np.asarray(ids) < 0)
+                    | (m[np.maximum(np.asarray(ids), 0)] != 0)).all()
+            p50 = float(np.percentile(lat_ms, 50))
+            rows.append({
+                "postings": pp, "selectivity": ratio,
+                "qps": round(batch / p50 * 1e3, 1),
+                "p50_ms": round(p50, 3),
+                "p99_ms": round(float(np.percentile(lat_ms, 99)), 3),
+                "recall_at_10": round(
+                    float(ev.recall_at(truth_under(m), ids)), 4),
+                "p50_vs_unfiltered": round(p50 / base["p50_ms"], 2),
+            })
+        summary[pp] = {
+            "unfiltered_p50_ms": base["p50_ms"],
+            "max_filtered_overhead": max(
+                r["p50_vs_unfiltered"] for r in rows
+                if r["postings"] == pp and r["selectivity"] < 1.0),
+        }
+    return rows, summary
+
+
+def hybrid_ab(
+    n_docs: int = 20_000, dim: int = 100, n_queries: int = 128,
+    k: int = 10, k_sub: int = 30, depth: int = 100, n_calls: int = 10,
+) -> Tuple[List[Dict], Dict]:
+    """Hybrid lexical+dense fusion vs each retriever alone: RRF over the
+    classic fake-words retriever (lexical surrogate) and the dot-scoring
+    retriever (dense inner-product), k_sub-deep sub-lists fused to k
+    (docs/DESIGN.md §13).  The acceptance gate — RRF recall@10 >= the best
+    single retriever — needs k_sub well past k: RRF promotes docs that rank
+    moderately in BOTH lists, which a k-deep sub-list truncates away.
+
+    Runs on the word2vec-like synthetic corpus (queries are corpus words,
+    the paper's setup) so the two retrievers make DIFFERENT mistakes —
+    fusion has signal to exploit; on pure-noise corpora the lists correlate
+    and RRF can only tie."""
+    from repro.core import eval as ev
+    from repro.core import plan as qp
+    from repro.data import embeddings
+
+    corpus = embeddings.make_corpus(
+        embeddings.CorpusConfig(n_vectors=n_docs, dim=dim))
+    queries, _ = embeddings.make_queries(corpus, n_queries)
+    vecs = jnp.asarray(corpus)
+    qs = jnp.asarray(queries)
+    uk = None if jax.default_backend() == "tpu" else False
+    _, gt = bruteforce.exact_topk(vecs, qs, k, use_kernel=uk)
+
+    lex = AnnIndex.build(vecs, FakeWordsConfig(quantization=30), use_kernel=uk)
+    dense = AnnIndex.build(
+        vecs, FakeWordsConfig(quantization=30, scoring="dot"), use_kernel=uk)
+    plans = (
+        qp.QueryPlan(search=lambda q: lex.search(q, k=k_sub, depth=depth),
+                     label="classic"),
+        qp.QueryPlan(search=lambda q: dense.search(q, k=k_sub, depth=depth),
+                     label="dense-dot"),
+    )
+    stage = qp.FusionStage(plans=plans, k=k)
+
+    def timed(f):
+        jax.block_until_ready(f())
+        lat = []
+        for _ in range(n_calls):
+            t0 = time.perf_counter()
+            jax.block_until_ready(f())
+            lat.append(time.perf_counter() - t0)
+        lat_ms = np.asarray(lat, np.float64) * 1e3
+        _, ids = f()
+        return lat_ms, ids
+
+    rows: List[Dict] = []
+    for label, f in (
+        ("classic", lambda: lex.search(qs, k=k, depth=depth)),
+        ("dense-dot", lambda: dense.search(qs, k=k, depth=depth)),
+        ("rrf-fusion", lambda: stage.run(qs)),
+    ):
+        lat_ms, ids = timed(f)
+        p50 = float(np.percentile(lat_ms, 50))
+        rows.append({
+            "retriever": label,
+            "qps": round(n_queries / p50 * 1e3, 1),
+            "p50_ms": round(p50, 3),
+            "p99_ms": round(float(np.percentile(lat_ms, 99)), 3),
+            "recall_at_10": round(float(ev.recall_at(gt, ids[:, :k])), 4),
+        })
+    by = {r["retriever"]: r["recall_at_10"] for r in rows}
+    summary = {
+        "k": k, "k_sub": k_sub, "depth": depth,
+        "classic": by["classic"], "dense": by["dense-dot"],
+        "rrf": by["rrf-fusion"],
+        "gate_rrf_ge_max": by["rrf-fusion"] >= max(by["classic"],
+                                                   by["dense-dot"]),
+    }
+    return rows, summary
+
+
+def emit_bench7(
+    path: str, n_docs: int = 20_000, dim: int = 300, batch: int = 64,
+) -> Dict:
+    """Write the filtered + hybrid A/B artifact validated in CI
+    (benchmarks/validate_bench7.py): filtered-vs-unfiltered serving at
+    1%/10%/50% selectivity and RRF(classic, dense) vs each alone."""
+    f_rows, f_summary = filtered_ab(n_docs, dim, batch)
+    h_rows, h_summary = hybrid_ab()
+    bench = {
+        "bench": 7,
+        "backend": jax.default_backend(),
+        "n_docs": n_docs,
+        "dim": dim,
+        "batch": batch,
+        "filtered_ab": f_rows,
+        "hybrid_ab": h_rows,
+        "summary": {"filtered": f_summary, "hybrid": h_summary},
+    }
+    with open(path, "w") as f:
+        json.dump(bench, f, indent=2)
+        f.write("\n")
+    return bench
+
+
 def emit_bench6(
     path: str, n_docs: int = 20_000, dim: int = 300, batch: int = 64,
 ) -> Dict:
@@ -602,6 +789,15 @@ if __name__ == "__main__":
         out = os.path.join(os.path.dirname(__file__), "BENCH_6.json")
         bench = emit_bench6(out)
         _print_rows(bench["quantized_ab"])
+        print(f"wrote {out}")
+    elif "--bench7" in sys.argv:
+        out = os.path.join(os.path.dirname(__file__), "BENCH_7.json")
+        bench = emit_bench7(out)
+        _print_rows(bench["filtered_ab"])
+        _print_rows(bench["hybrid_ab"])
+        h = bench["summary"]["hybrid"]
+        print(f"hybrid: rrf {h['rrf']} vs classic {h['classic']} / "
+              f"dense {h['dense']} (gate {h['gate_rrf_ge_max']})")
         print(f"wrote {out}")
     else:
         main()

@@ -1,0 +1,66 @@
+"""CI gate for the filtered + hybrid A/B artifact (docs/DESIGN.md §13).
+
+    PYTHONPATH=src python benchmarks/validate_bench7.py [path]
+
+Checks that ``benchmarks/BENCH_7.json`` carries the filtered-vs-unfiltered
+serving rows at every selectivity tier (1% / 10% / 50%) for every postings
+encoding, that filtered recall@10 holds up against the filtered oracle
+(>= the unfiltered baseline minus 0.05 — the one-pass in-match filter must
+not silently degrade into a lossy post-filter), that filtered p50 stays
+within 1.5x of unfiltered (one kernel pass, not depth inflation), and the
+hybrid acceptance bar: RRF(classic, dense) recall@10 >= the best single
+retriever alone.
+"""
+import json
+import sys
+
+RATIOS = (0.01, 0.1, 0.5)
+FILTERED_KEYS = {"postings", "selectivity", "qps", "p50_ms", "p99_ms",
+                 "recall_at_10"}
+HYBRID_KEYS = {"retriever", "qps", "p50_ms", "p99_ms", "recall_at_10"}
+
+
+def validate(path: str) -> None:
+    with open(path) as f:
+        bench = json.load(f)
+    assert bench.get("bench") == 7, bench.get("bench")
+
+    rows = bench.get("filtered_ab")
+    assert rows, "no filtered_ab rows"
+    for row in rows:
+        missing = FILTERED_KEYS - set(row)
+        assert not missing, f"filtered row {row} missing {missing}"
+        assert row["qps"] > 0 and row["p50_ms"] > 0
+        assert 0.0 <= row["recall_at_10"] <= 1.0
+    by_pp = {}
+    for row in rows:
+        by_pp.setdefault(row["postings"], {})[row["selectivity"]] = row
+    assert set(by_pp) == {"fp32", "int8", "int4"}, sorted(by_pp)
+    for pp, tiers in by_pp.items():
+        assert set(tiers) == {1.0, *RATIOS}, (pp, sorted(tiers))
+        base = tiers[1.0]
+        for ratio in RATIOS:
+            r = tiers[ratio]
+            assert r["recall_at_10"] >= base["recall_at_10"] - 0.05, (pp, r)
+            assert r["p50_ms"] <= 1.5 * base["p50_ms"], (pp, r)
+
+    h_rows = bench.get("hybrid_ab")
+    assert h_rows, "no hybrid_ab rows"
+    for row in h_rows:
+        missing = HYBRID_KEYS - set(row)
+        assert not missing, f"hybrid row {row} missing {missing}"
+    by_r = {r["retriever"]: r for r in h_rows}
+    assert set(by_r) == {"classic", "dense-dot", "rrf-fusion"}, sorted(by_r)
+    rrf = by_r["rrf-fusion"]["recall_at_10"]
+    best = max(by_r["classic"]["recall_at_10"],
+               by_r["dense-dot"]["recall_at_10"])
+    assert rrf >= best, f"hybrid gate: rrf {rrf} < best single {best}"
+    assert bench["summary"]["hybrid"]["gate_rrf_ge_max"] is True
+
+    print(f"{path} ok: {len(rows)} filtered rows "
+          f"({len(by_pp)} encodings x {1 + len(RATIOS)} tiers), "
+          f"hybrid rrf {rrf} >= best single {best}")
+
+
+if __name__ == "__main__":
+    validate(sys.argv[1] if len(sys.argv) > 1 else "benchmarks/BENCH_7.json")

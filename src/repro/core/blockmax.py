@@ -244,13 +244,20 @@ def pruned_topk(
     n_keep: int,
     depth: int,
     use_kernel: Optional[bool] = None,
+    filt: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, jax.Array]:
     """Two-stage blockmax search core (un-jitted: usable inside shard_map).
 
     ``n_keep`` is clamped to the block count and ``depth`` to the gathered
     candidate count (the former crashed ``lax.top_k`` and the latter the
     gathered top-k before); when clamped, the output is padded back to the
-    requested ``depth`` with (-inf, -1) so shapes stay caller-visible."""
+    requested ``depth`` with (-inf, -1) so shapes stay caller-visible.
+
+    ``filt`` is a per-doc predicate bitmap ((N,) | (B, N), nonzero = keep)
+    masked inside the stage-2 gathered score pass.  Stage-1 bounds stay
+    UNfiltered: filtering only removes docs, so an unfiltered block maximum
+    remains an admissible overestimate — at beta=1.0 every block is kept
+    and the filtered result equals the dense filtered paths exactly."""
     from repro.kernels.fused_topk import ops as fused
     from repro.kernels.fused_topk import ref as fused_ref
 
@@ -267,23 +274,26 @@ def pruned_topk(
     if mode == "quantized":
         if fused.resolve_use_kernel(use_kernel):
             d_s, d_i = fused.postings_topk_gathered(
-                mat, qv, row_ids, eff_depth, n_docs
+                mat, qv, row_ids, eff_depth, n_docs, filt=filt
             )
         else:
             safe = jnp.minimum(row_ids, n_docs - 1)
             d_s, d_i = fused_ref.quantized_gathered_topk_ref(
                 qv, mat.q[safe], mat.scale[safe], row_ids, eff_depth,
                 n_docs, mat.bits, mat.group,
+                filt=fused.gather_filt(filt, row_ids, n_docs),
             )
     elif fused.resolve_use_kernel(use_kernel):
         rows = mat[jnp.minimum(row_ids, n_docs - 1)]  # (B, R, T)
         d_s, d_i = fused.fused_topk_gathered(
-            qv, rows, row_ids, eff_depth, n_docs, mode=mode
+            qv, rows, row_ids, eff_depth, n_docs, mode=mode,
+            filt=fused.gather_filt(filt, row_ids, n_docs),
         )
     else:
         rows = mat[jnp.minimum(row_ids, n_docs - 1)]  # (B, R, T)
         d_s, d_i = fused_ref.gathered_topk_ref(
-            qv, rows, row_ids, eff_depth, n_docs, mode=mode
+            qv, rows, row_ids, eff_depth, n_docs, mode=mode,
+            filt=fused.gather_filt(filt, row_ids, n_docs),
         )
     if eff_depth < depth:
         pad = depth - eff_depth
@@ -304,6 +314,7 @@ def pruned_search(
     n_keep: int,
     depth: int,
     use_kernel: Optional[bool] = None,
+    filt: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, jax.Array]:
     """Two-stage blockmax search: upper-bound pass -> keep n_keep blocks ->
     exact scoring on the gathered rows.  Returns (scores, doc_ids) at depth;
@@ -317,4 +328,4 @@ def pruned_search(
 
     (:class:`repro.core.pipeline.BlockMaxMatcher` is the same two-stage
     match as a pipeline stage; this wrapper is the jitted standalone form.)"""
-    return pruned_topk(index, bm, q_tf, n_keep, depth, use_kernel)
+    return pruned_topk(index, bm, q_tf, n_keep, depth, use_kernel, filt=filt)

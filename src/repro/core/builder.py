@@ -50,6 +50,7 @@ import numpy as np
 from repro.core import bruteforce, pca
 from repro.core.types import (
     BruteForceConfig,
+    DocMetadata,
     FakeWordsConfig,
     FakeWordsIndex,
     FlatIndex,
@@ -332,6 +333,31 @@ class FlatPostings:
         return FlatIndex(
             vectors=store["vectors"], vq=store["vq"], pq=self.quantizer(v)
         )
+
+
+# --------------------------------------------------------------------------
+# Metadata stage (docs/DESIGN.md §13)
+# --------------------------------------------------------------------------
+
+
+def build_metadata(metadata, n_docs: int) -> Optional[DocMetadata]:
+    """Normalize the build-time ``metadata=`` argument into a
+    :class:`repro.core.types.DocMetadata` store: ``None`` passes through, a
+    ``{field: (N,) ints}`` mapping stacks into the (N, F) matrix, an
+    existing DocMetadata is validated.  Row-local (doc-axis only), so it
+    shards and segments exactly like the rerank stores."""
+    if metadata is None:
+        return None
+    md = (
+        metadata
+        if isinstance(metadata, DocMetadata)
+        else DocMetadata.from_fields(metadata)
+    )
+    if md.num_docs != n_docs:
+        raise ValueError(
+            f"metadata has {md.num_docs} rows but the corpus has {n_docs}"
+        )
+    return md
 
 
 # --------------------------------------------------------------------------

@@ -303,6 +303,7 @@ def make_sharded_search(
     blockmax_keep: Optional[int] = None,
     rerank_store: Optional[str] = None,
     postings_bits: int = 0,
+    filtered: bool = False,
 ):
     """Returns a jit-able ``search(index, q_rep, queries) -> (scores, ids)``
     closed over the mesh, for ANY method config (fake words / lexical LSH /
@@ -332,7 +333,14 @@ def make_sharded_search(
     ``keep_vectors``) must name the store the index was built with: with
     "int8" the local rerank gathers from the int8
     :class:`repro.core.types.QuantizedStore` (~4x fewer HBM gather bytes
-    per shard, docs/DESIGN.md §8) instead of the fp32 originals."""
+    per shard, docs/DESIGN.md §8) instead of the fp32 originals.
+
+    ``filtered=True`` appends a trailing ``filt`` argument — a (N,) per-doc
+    predicate bitmap (nonzero = keep) sharded WITH the postings on the doc
+    dimension (``P(axes)``): each shard slices its own bits and threads
+    them into the matcher's single in-kernel filtered pass
+    (docs/DESIGN.md §13), so the bitmap never replicates and no
+    cross-shard traffic is added beyond the existing (score, id) gather."""
     axes = tuple(axes)
     from repro.kernels.fused_topk import ops as fused
 
@@ -364,18 +372,20 @@ def make_sharded_search(
         top_i = jnp.take_along_axis(all_i, pos, axis=-1)
         return top_s, top_i
 
-    def local_search(index, q_rep, queries):
-        loc_s, loc_i = matcher(index, q_rep, depth, use_kernel=kernel_local)
+    def local_search(index, q_rep, queries, filt=None):
+        loc_s, loc_i = matcher(
+            index, q_rep, depth, use_kernel=kernel_local, filt=filt
+        )
         return merge_global(index, loc_s, loc_i, queries)
 
-    def local_search_blockmax(index, bm, q_rep, queries):
+    def local_search_blockmax(index, bm, q_rep, queries, filt=None):
         n_keep = min(blockmax_keep, bm.num_blocks)
         # Cap on gathered candidates, NOT n_local: a ragged shard whose kept
         # blocks carry padded rows legitimately returns -1 slots when depth
         # exceeds its valid candidate count (merge_global masks them).
         d_local = min(depth, n_keep * bm.block_size)
         loc_s, loc_i = pl.BlockMaxMatcher(n_keep=n_keep)(
-            index, q_rep, d_local, bm=bm, use_kernel=kernel_local
+            index, q_rep, d_local, bm=bm, use_kernel=kernel_local, filt=filt
         )
         return merge_global(index, loc_s, loc_i, queries)
 
@@ -393,6 +403,9 @@ def make_sharded_search(
     else:
         in_specs = (index_spec, P(), P())
         body = local_search
+    if filtered:
+        # The (N,) bitmap shards exactly like the doc rows it annotates.
+        in_specs = in_specs + (P(axes),)
     # After the full all-gather + top_k the outputs are bitwise-replicated,
     # but the static VMA checker cannot prove it; disable the check.
     fn = compat.shard_map(

@@ -5,14 +5,33 @@ import jax
 import jax.numpy as jnp
 
 
-def recall_at(truth_ids: jax.Array, retrieved_ids: jax.Array) -> jax.Array:
+def recall_at(
+    truth_ids: jax.Array, retrieved_ids: jax.Array, filter_mask=None
+) -> jax.Array:
     """R@(k,d): fraction of the true top-k (truth_ids: (B,k)) present among
     the retrieved top-d (retrieved_ids: (B,d)), averaged over queries.
     Ground truth comes from exact brute force (paper §3); -1 ids are padding
     and are excluded from BOTH the hit count and the denominator (dividing
     by the row width would understate recall on padded truth rows).
+
+    ``filter_mask`` ((N,) or (B, N), nonzero = keep) restates the ground
+    truth over the *filtered* corpus: truth entries a filtered search could
+    never return are treated exactly like -1 padding (out of hit count AND
+    denominator) — otherwise filtered A/Bs understate recall the same way
+    padded truth rows used to (the PR 2 fix, generalized).  For honest
+    filtered recall the truth should already be filtered-exact top-k;
+    this parameter additionally makes UNfiltered truth usable as a
+    conservative proxy by scoring only its in-filter entries.
     """
     valid = truth_ids >= 0
+    if filter_mask is not None:
+        mask = jnp.asarray(filter_mask)
+        safe = jnp.maximum(truth_ids, 0)
+        if mask.ndim == 1:
+            bits = mask[safe]
+        else:
+            bits = jnp.take_along_axis(mask, safe, axis=1)
+        valid = valid & (bits != 0)
     hits = (truth_ids[:, :, None] == retrieved_ids[:, None, :]) & valid[:, :, None]
     n_valid = jnp.maximum(jnp.sum(valid, axis=-1), 1)
     per_query = jnp.sum(jnp.any(hits, axis=-1), axis=-1) / n_valid

@@ -40,6 +40,7 @@ from repro.core import pipeline as pl
 from repro.core.blockmax import BlockMaxIndex, build_blockmax
 from repro.core.types import (
     BruteForceConfig,
+    DocMetadata,
     FakeWordsConfig,
     FakeWordsIndex,
     FlatIndex,
@@ -109,6 +110,9 @@ class AnnIndex:
     # int8 store (built with rerank_store="int8").
     quantized_rerank: Optional[bool] = None
     epoch: Optional[int] = None
+    # Per-doc predicate source for filtered search (docs/DESIGN.md §13).
+    # Masks built from it ((N,) / (B, N) nonzero = keep) feed search(filt=).
+    metadata: Optional[DocMetadata] = None
 
     def __post_init__(self):
         if self.epoch is None:
@@ -154,6 +158,7 @@ class AnnIndex:
         mesh=None,
         shard_axes=("data",),
         normalized: bool = False,
+        metadata=None,
     ) -> "AnnIndex":
         """Build any encoding through the staged
         :class:`repro.core.builder.BuildPipeline` (docs/DESIGN.md §8) — the
@@ -176,7 +181,12 @@ class AnnIndex:
         {postings} x {rerank store} x {blockmax keep-fraction} read path
         from the recall-ordered frontier table
         (:mod:`repro.core.memory_budget`); knobs set explicitly alongside
-        it are pinned, the budget fills only the unset ones."""
+        it are pinned, the budget fills only the unset ones.
+
+        ``metadata``: per-doc structured fields for filtered search — a
+        ``{field: (N,) ints}`` mapping or a prebuilt
+        :class:`repro.core.types.DocMetadata`; predicate bitmaps built from
+        it (``idx.metadata.eq_mask(...)`` etc.) feed ``search(filt=)``."""
         from repro.core import builder
 
         if memory_budget_bytes is not None:
@@ -216,6 +226,7 @@ class AnnIndex:
             blockmax_keep=blockmax_keep,
             blockmax_block_size=blockmax_block_size,
             quantized_rerank=rerank_store == "int8",
+            metadata=builder.build_metadata(metadata, vectors.shape[0]),
         )
 
     @property
@@ -254,16 +265,21 @@ class AnnIndex:
         rerank: bool = False,
         params: Optional[SearchParams] = None,
         use_kernel: Optional[bool] = None,
+        filt: Optional[jax.Array] = None,
     ) -> Tuple[jax.Array, jax.Array]:
         """Staged search: encode -> match [-> prune] -> optional rerank.
         ``params`` takes precedence WHOLESALE over the ``k``/``depth``/
         ``rerank`` kwargs (pass one style or the other, not both);
         ``use_kernel`` overrides the index-level kernel routing for this
-        call."""
+        call.  ``filt`` ((N,) or (B, N), nonzero = keep) restricts the match
+        stage to the bitmap's docs in the same single kernel pass
+        (docs/DESIGN.md §13) — typically built from ``self.metadata``."""
         p = params if params is not None else SearchParams(k=k, depth=depth, rerank=rerank)
         uk = self.use_kernel if use_kernel is None else use_kernel
         pipe = dataclasses.replace(self.pipeline, matcher=self._matcher())
-        return pipe.search(self.index, queries, p, bm=self.bm, use_kernel=uk)
+        return pipe.search(
+            self.index, queries, p, bm=self.bm, use_kernel=uk, filt=filt
+        )
 
     # ----------------------------------------------------------------------
     # Persistence: npz (all array leaves) + JSON (config + serving knobs)
@@ -296,6 +312,11 @@ class AnnIndex:
             # Static (non-array) packed-store metadata; the q/scale leaves
             # ride in the npz like every other array.
             meta["pq"] = {"bits": pq.bits, "group": pq.group, "cols": pq.cols}
+        if self.metadata is not None:
+            # Same split as pq: field names in the JSON, the (N, F) value
+            # matrix in the npz under a reserved dotted name.
+            meta["metadata"] = {"field_names": list(self.metadata.field_names)}
+            packed["metadata.values"] = np.asarray(self.metadata.values)
         with open(os.path.join(path, "config.json"), "w") as f:
             json.dump(meta, f, indent=2)
         np.savez_compressed(os.path.join(path, "index.npz"), **packed)
@@ -334,11 +355,20 @@ class AnnIndex:
             )
         config = _config_from_json(meta["method"], meta["config"])
         with np.load(os.path.join(path, "index.npz")) as z:
+            metadata = None
+            if "metadata" in meta:
+                metadata = DocMetadata(
+                    values=jnp.asarray(z["metadata.values"]),
+                    field_names=tuple(meta["metadata"]["field_names"]),
+                )
             arrays = {
-                name: _from_numpy(z[name], meta["dtypes"][name]) for name in z.files
+                name: _from_numpy(z[name], meta["dtypes"][name])
+                for name in z.files
+                if name != "metadata.values"
             }
         index = _rebuild_index(meta["method"], config, arrays, meta.get("pq"))
         knobs = {
+            "metadata": metadata,
             "use_kernel": meta.get("use_kernel"),
             "blockmax_keep": meta.get("blockmax_keep"),
             "blockmax_block_size": meta.get("blockmax_block_size", 256),

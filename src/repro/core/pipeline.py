@@ -110,9 +110,46 @@ def _use_kernel(use_kernel: Optional[bool]) -> bool:
     return fused.resolve_use_kernel(use_kernel)
 
 
+def lookup_filt_bits(mask: jax.Array, ids: jax.Array) -> jax.Array:
+    """Per-candidate keep bits of a per-doc bitmap ((N,) shared or (B, N)
+    per-query) at candidate id positions; id -1 slots read doc 0 (callers
+    AND with ``ids >= 0``)."""
+    safe = jnp.maximum(ids, 0)
+    bits = mask[safe] if mask.ndim == 1 else jnp.take_along_axis(mask, safe, axis=1)
+    return bits != 0
+
+
+def mask_and_topk(
+    s: jax.Array, i: jax.Array, keep: jax.Array, depth: int, n: int
+) -> Tuple[jax.Array, jax.Array]:
+    """THE shared mask-then-re-reduce tail of every post-hoc candidate
+    filter (deletes AND predicate bitmaps): kept slots retain the inner
+    stage's (score, id); dropped slots become (-inf, -1); the survivors
+    re-reduce to the top ``min(depth, n)``.  Equal-score ties keep the
+    inner stage's lowest-doc-id order (``lax.top_k`` is stable)."""
+    s = jnp.where(keep, s, -jnp.inf)
+    i = jnp.where(keep, i, -1)
+    d_out = min(depth, n)
+    top_s, pos = jax.lax.top_k(s, d_out)
+    return top_s, jnp.take_along_axis(i, pos, axis=-1)
+
+
+def _dense_filtered_topk(
+    scores: jax.Array, depth: int, filt: Optional[jax.Array]
+) -> Tuple[jax.Array, jax.Array]:
+    """Dense-matrix XLA top-k with the kernel's filter contract: masked
+    slots take (-inf, -1).  ``filt=None`` is exactly ``jax.lax.top_k``."""
+    from repro.kernels.fused_topk import ref as fused_ref
+
+    if filt is None:
+        return jax.lax.top_k(scores, depth)
+    s, i = jax.lax.top_k(fused_ref.apply_filt(scores, filt), depth)
+    return s, jnp.where(s == -jnp.inf, -1, i)
+
+
 def _streaming_topk_tiled(
     score_tile_fn, n_local: int, batch: int, depth: int, tile: int,
-    unroll: bool = False,
+    unroll: bool = False, filt: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, jax.Array]:
     """Streaming top-d over document tiles with a running merge: the
     (B, n_local) score matrix never materializes in HBM (§Perf C2).  The XLA
@@ -127,6 +164,14 @@ def _streaming_topk_tiled(
     d = min(depth, tile)
     init_s = jnp.full((batch, depth), -jnp.inf, jnp.float32)
     init_i = jnp.full((batch, depth), -1, jnp.int32)
+    if filt is not None:
+        f_full = filt if filt.ndim == 2 else filt[None, :]
+        pad = n_tiles * tile - f_full.shape[1]
+        if pad:  # pre-pad so per-tile slices never clamp
+            f_full = jnp.concatenate(
+                [f_full, jnp.zeros((f_full.shape[0], pad), f_full.dtype)],
+                axis=1,
+            )
 
     def body(carry, t_idx):
         best_s, best_i = carry
@@ -134,9 +179,14 @@ def _streaming_topk_tiled(
         s = score_tile_fn(start).astype(jnp.float32)  # (B, tile)
         ids = start + jnp.arange(tile, dtype=jnp.int32)[None, :]
         valid = ids < n_local
+        if filt is not None:
+            f_tile = jax.lax.dynamic_slice_in_dim(f_full, start, tile, axis=1)
+            valid = valid & (f_tile != 0)
         s = jnp.where(valid, s, -jnp.inf)
         loc_s, pos = jax.lax.top_k(s, d)
         loc_i = jnp.take_along_axis(jnp.broadcast_to(ids, s.shape), pos, axis=-1)
+        if filt is not None:
+            loc_i = jnp.where(loc_s == -jnp.inf, -1, loc_i)
         all_s = jnp.concatenate([best_s, loc_s], axis=-1)
         all_i = jnp.concatenate([best_i, loc_i], axis=-1)
         top_s, top_pos = jax.lax.top_k(all_s, depth)
@@ -232,6 +282,7 @@ class FakeWordsMatcher:
     def __call__(
         self, index, q_tf: jax.Array, depth: int,
         bm=None, use_kernel: Optional[bool] = None,
+        filt: Optional[jax.Array] = None,
     ) -> Tuple[jax.Array, jax.Array]:
         from repro.kernels.fused_topk import ops as fused
 
@@ -242,17 +293,17 @@ class FakeWordsMatcher:
             qv = self.quantized_query(index, q_tf)
             pq = index.pq
             if _use_kernel(use_kernel):
-                return fused.postings_topk(pq, qv, d)
+                return fused.postings_topk(pq, qv, d, filt=filt)
             if self.score_tile is not None and index.num_docs > 2 * self.score_tile:
                 return fused_ref.streaming_topk_quantized_ref(
                     qv, pq.q, pq.scale, d, pq.bits, pq.group,
-                    tile=self.score_tile,
+                    tile=self.score_tile, filt=filt,
                 )
             return fused_ref.quantized_topk_ref(
-                qv, pq.q, pq.scale, d, pq.bits, pq.group)
+                qv, pq.q, pq.scale, d, pq.bits, pq.group, filt=filt)
         if _use_kernel(use_kernel):
             qv, docs = self.operands(index, q_tf, dtype=jnp.int8)
-            return fused.fused_topk(qv, docs, d)
+            return fused.fused_topk(qv, docs, d, filt=filt)
         qv, docs = self.operands(index, q_tf, dtype=jnp.int32)
         if self.score_tile is not None and index.num_docs > 2 * self.score_tile:
             def tile_scores(start):
@@ -262,9 +313,9 @@ class FakeWordsMatcher:
 
             return _streaming_topk_tiled(
                 tile_scores, index.num_docs, q_tf.shape[0], d,
-                self.score_tile, unroll=self.tile_unroll,
+                self.score_tile, unroll=self.tile_unroll, filt=filt,
             )
-        return jax.lax.top_k(self._dense_scores(qv, docs), d)
+        return _dense_filtered_topk(self._dense_scores(qv, docs), d, filt)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -274,15 +325,16 @@ class LshMatcher:
     def __call__(
         self, index, sig_q: jax.Array, depth: int,
         bm=None, use_kernel: Optional[bool] = None,
+        filt: Optional[jax.Array] = None,
     ) -> Tuple[jax.Array, jax.Array]:
         from repro.core import lexical_lsh
         from repro.kernels.fused_topk import ops as fused
 
         d = min(depth, index.num_docs)
         if _use_kernel(use_kernel):
-            return fused.lsh_topk(sig_q, index.sig, d)
+            return fused.lsh_topk(sig_q, index.sig, d, filt=filt)
         scores = lexical_lsh.match_scores(sig_q, index.sig).astype(jnp.float32)
-        return jax.lax.top_k(scores, d)
+        return _dense_filtered_topk(scores, d, filt)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -293,6 +345,7 @@ class KdScanMatcher:
     def __call__(
         self, index, q_reduced: jax.Array, depth: int,
         bm=None, use_kernel: Optional[bool] = None,
+        filt: Optional[jax.Array] = None,
     ) -> Tuple[jax.Array, jax.Array]:
         from repro.kernels.fused_topk import ops as fused
 
@@ -302,11 +355,11 @@ class KdScanMatcher:
                 index.lifted if index.lifted is not None
                 else fused.lift_l2(index.reduced)
             )
-            return fused.scan_l2_topk(lifted, q_reduced, d)
+            return fused.scan_l2_topk(lifted, q_reduced, d, filt=filt)
         d_norm2 = jnp.sum(index.reduced**2, axis=-1)  # (N,)
         dots = q_reduced @ index.reduced.T  # (B, N)
         neg_d2 = 2.0 * dots - d_norm2[None, :]
-        return jax.lax.top_k(neg_d2, d)
+        return _dense_filtered_topk(neg_d2, d, filt)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -317,10 +370,19 @@ class KdTreeMatcher:
     def __call__(
         self, index, q_reduced: jax.Array, depth: int,
         bm=None, use_kernel: Optional[bool] = None,
+        filt: Optional[jax.Array] = None,
     ) -> Tuple[jax.Array, jax.Array]:
         from repro.core import kdtree
 
-        return kdtree.tree_search(index, q_reduced, min(depth, index.num_docs))
+        n = index.num_docs
+        s, i = kdtree.tree_search(index, q_reduced, min(depth, n))
+        if filt is None:
+            return s, i
+        # The host DFS cannot thread a bitmap through its visit order; mask
+        # its depth candidates post-hoc (best-effort, like a post-filter —
+        # use the scan backend for exact filtered kd search).
+        keep = (i >= 0) & lookup_filt_bits(filt, i)
+        return mask_and_topk(s, i, keep, min(depth, n), n)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -330,6 +392,7 @@ class CosineMatcher:
     def __call__(
         self, index, q_norm: jax.Array, depth: int,
         bm=None, use_kernel: Optional[bool] = None,
+        filt: Optional[jax.Array] = None,
     ) -> Tuple[jax.Array, jax.Array]:
         from repro.kernels.fused_topk import ops as fused
 
@@ -338,15 +401,15 @@ class CosineMatcher:
             from repro.kernels.fused_topk import ref as fused_ref
 
             if _use_kernel(use_kernel):
-                return fused.postings_topk(index.pq, q_norm, d)
+                return fused.postings_topk(index.pq, q_norm, d, filt=filt)
             return fused_ref.quantized_topk_ref(
                 q_norm, index.pq.q, index.pq.scale, d,
-                index.pq.bits, index.pq.group,
+                index.pq.bits, index.pq.group, filt=filt,
             )
         if _use_kernel(use_kernel):
-            return fused.cosine_topk(index.vectors, q_norm, d)
+            return fused.cosine_topk(index.vectors, q_norm, d, filt=filt)
         scores = q_norm @ index.vectors.T  # (B, N)
-        return jax.lax.top_k(scores, d)
+        return _dense_filtered_topk(scores, d, filt)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -361,52 +424,70 @@ class BlockMaxMatcher:
     def __call__(
         self, index, q_rep: jax.Array, depth: int,
         bm=None, use_kernel: Optional[bool] = None,
+        filt: Optional[jax.Array] = None,
     ) -> Tuple[jax.Array, jax.Array]:
         from repro.core import blockmax
 
         assert bm is not None, "BlockMaxMatcher needs a BlockMaxIndex (bm=)"
         return blockmax.pruned_topk(
-            index, bm, q_rep, self.n_keep, depth, use_kernel=use_kernel
+            index, bm, q_rep, self.n_keep, depth, use_kernel=use_kernel,
+            filt=filt,
         )
 
 
 @dataclasses.dataclass(frozen=True)
-class LiveDocsMatcher:
-    """Lucene liveDocs as a match-stage wrapper (docs/DESIGN.md §11).
+class FilterMask:
+    """Per-doc predicate masking as a match-stage wrapper — Lucene liveDocs
+    generalized to arbitrary bitmaps (docs/DESIGN.md §11, §13).
 
-    Deleted docs are masked to ``(-inf, -1)`` INSIDE the match stage — not
-    post-filtered from its output — so ``depth`` semantics survive: the
-    stage asks the inner matcher for ``depth + extra`` candidates (``extra``
-    is a bucketed upper bound on the segment's deleted-doc count, so at
-    least ``depth`` live candidates are present whenever the segment holds
-    that many) and re-reduces to the top ``depth`` live docs.  Equal-score
-    ties keep the inner matcher's lowest-doc-id order (``lax.top_k`` is
-    stable), so a segment with deletes returns exactly what a segment never
-    containing the dead rows would.
+    Masked docs come back as ``(-inf, -1)`` INSIDE the match stage — never
+    post-filtered from its output — so ``depth`` semantics survive.  Two
+    realizations, selected per call:
 
-    ``live`` is an explicit ``(N,)`` bool operand (True = live) rather than
-    an index leaf: the segment index stays immutable while its live-docs
-    mask mutates, exactly like Lucene's sidecar ``.liv`` bitsets.  ``extra``
-    is bucketed (next power of two) by the caller so a delete stream does
-    not recompile per delete.
+      * ``native=True`` — the bitmap threads straight into the inner
+        matcher's score stage (the kernels' ``filt`` operand / the XLA
+        refs' pre-top-k mask): ONE kernel pass, exact at any selectivity.
+        This is the predicate-filter path.
+      * ``native=False`` (default) — depth inflation: ask the inner matcher
+        for ``depth + extra`` candidates (``extra`` is a bucketed upper
+        bound on the masked-out count, so at least ``depth`` kept
+        candidates are present whenever that many exist) and re-reduce to
+        the top ``depth`` kept docs via :func:`mask_and_topk`.  This is the
+        historical liveDocs/deletes path, kept because the delete stream
+        mutates the mask without re-specializing the inner match.
+
+    Equal-score ties keep the inner matcher's lowest-doc-id order
+    (``lax.top_k`` is stable), so a segment with deletes returns exactly
+    what a segment never containing the dead rows would.
+
+    ``mask`` is an explicit ``(N,)`` (or per-query ``(B, N)``) bool/int
+    operand (nonzero = keep) rather than an index leaf: the segment index
+    stays immutable while its mask mutates, exactly like Lucene's sidecar
+    ``.liv`` bitsets.  ``extra`` is bucketed (next power of two) by the
+    caller so a delete stream does not recompile per delete.
     """
 
     inner: Any
     extra: int = 0
 
     def __call__(
-        self, index, q_rep: jax.Array, depth: int, live: jax.Array,
-        bm=None, use_kernel: Optional[bool] = None,
+        self, index, q_rep: jax.Array, depth: int, mask: jax.Array,
+        bm=None, use_kernel: Optional[bool] = None, native: bool = False,
     ) -> Tuple[jax.Array, jax.Array]:
         n = index.num_docs
+        if native:
+            return self.inner(
+                index, q_rep, min(depth, n), bm=bm, use_kernel=use_kernel,
+                filt=mask,
+            )
         d_in = min(depth + self.extra, n)
         s, i = self.inner(index, q_rep, d_in, bm=bm, use_kernel=use_kernel)
-        alive = (i >= 0) & live[jnp.maximum(i, 0)]
-        s = jnp.where(alive, s, -jnp.inf)
-        i = jnp.where(alive, i, -1)
-        d_out = min(depth, n)
-        top_s, pos = jax.lax.top_k(s, d_out)
-        return top_s, jnp.take_along_axis(i, pos, axis=-1)
+        keep = (i >= 0) & lookup_filt_bits(mask, i)
+        return mask_and_topk(s, i, keep, depth, n)
+
+
+# Backwards-compatible name for the deletes-only wrapper this generalizes.
+LiveDocsMatcher = FilterMask
 
 
 # --------------------------------------------------------------------------
@@ -509,10 +590,13 @@ class SearchPipeline:
         params: SearchParams = SearchParams(),
         bm=None,
         use_kernel: Optional[bool] = None,
+        filt: Optional[jax.Array] = None,
     ) -> Tuple[jax.Array, jax.Array]:
-        """End-to-end staged search (jitted; pipeline and params static)."""
+        """End-to-end staged search (jitted; pipeline and params static).
+        ``filt`` is a per-doc predicate bitmap ((N,) or (B, N), nonzero =
+        keep) applied INSIDE the match stage's score pass."""
         q_norm = bruteforce.l2_normalize(jnp.asarray(queries))
-        return _pipeline_search(self, index, q_norm, params, bm, use_kernel)
+        return _pipeline_search(self, index, q_norm, params, bm, use_kernel, filt)
 
 
 @functools.partial(
@@ -525,10 +609,13 @@ def _pipeline_search(
     params: SearchParams,
     bm=None,
     use_kernel: Optional[bool] = None,
+    filt: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, jax.Array]:
     q_rep = pipe.encoder(index, q_norm)
     matcher = pipe.matcher
-    d_s, d_i = matcher(index, q_rep, params.depth, bm=bm, use_kernel=use_kernel)
+    d_s, d_i = matcher(
+        index, q_rep, params.depth, bm=bm, use_kernel=use_kernel, filt=filt
+    )
     if not params.rerank:
         return d_s[:, : params.k], d_i[:, : params.k]
     return pipe.reranker(index, q_norm, d_i, params.k)
@@ -549,12 +636,16 @@ def match_rerank(
     bm=None,
     use_kernel: Optional[bool] = None,
     reranker=None,
+    filt: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, jax.Array]:
     """Match + optional exact rerank from an already-encoded query — the
     shared tail of every per-method ``search()`` wrapper (queries must be
     unit-normalized when reranking).  ``reranker`` defaults to the store
-    the index carries (fp32 originals, else the int8 quantized store)."""
-    d_s, d_i = matcher(index, q_rep, depth, bm=bm, use_kernel=use_kernel)
+    the index carries (fp32 originals, else the int8 quantized store).
+    ``filt`` masks inside the match stage (one pass); rerank only re-scores
+    survivors, so filtered docs can never resurface."""
+    d_s, d_i = matcher(index, q_rep, depth, bm=bm, use_kernel=use_kernel,
+                       filt=filt)
     if not rerank:
         return d_s[:, :k], d_i[:, :k]
     assert queries is not None

@@ -1,0 +1,177 @@
+"""Composable query plans over the match stage (docs/DESIGN.md §13).
+
+Three pieces, each usable on its own:
+
+* :func:`combine_by_id` — the shared running-merge primitive: given (B, M)
+  candidate ids with one value per entry, combine entries that share a doc
+  id (sum or max), dedup keep-first, and re-reduce to top-k.  Both fusion
+  and multi-vector aggregation are this one operation with different
+  per-entry values.
+* :func:`fuse` / :class:`FusionStage` — merge the top-k of N sub-plans on
+  global doc ids.  ``rrf`` scores each entry w_p / (rrf_k + rank_p) from
+  its *rank* (scale-free, the hybrid default); ``wsum`` sums w_p * score_p
+  (only meaningful when the sub-plans' scores are commensurable).
+* :func:`aggregate_by_doc` / :class:`MultiVectorPlan` — multi-vector docs:
+  the index stores one row per *vector*, ``doc_map`` sends vector ids to
+  doc ids, and the depth-level candidates aggregate per doc (``max`` =
+  max-sim, ``sum``) inside the merge before the final top-k — not as a
+  post-hoc pass over an already-truncated k.
+
+Plans are plain frozen dataclasses; a leaf :class:`QueryPlan` wraps any
+``search(queries) -> (scores, ids)`` callable returning *global* doc ids,
+so the same tree runs over flat, segmented, and sharded indexes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "combine_by_id",
+    "fuse",
+    "aggregate_by_doc",
+    "QueryPlan",
+    "FusionStage",
+    "MultiVectorPlan",
+]
+
+DEFAULT_RRF_K = 60.0
+
+
+def combine_by_id(
+    ids: jax.Array, vals: jax.Array, k: int, agg: str = "sum"
+) -> Tuple[jax.Array, jax.Array]:
+    """Combine (B, M) per-entry values by doc id, then top-k.
+
+    Entries with id -1 are padding: they contribute nothing and can never
+    surface (their combined value is pinned to -inf).  Duplicate ids keep
+    the combined value on their *first* occurrence; later occurrences are
+    pinned to -inf so each doc appears at most once in the output.  O(M^2)
+    per query — M here is a handful of top-k lists, not the corpus.
+    """
+    ids = jnp.asarray(ids)
+    vals = jnp.asarray(vals, jnp.float32)
+    n_entries = ids.shape[1]
+    valid = ids >= 0
+    same = (ids[:, :, None] == ids[:, None, :]) & valid[:, :, None] & valid[:, None, :]
+    if agg == "sum":
+        total = jnp.sum(jnp.where(same, vals[:, None, :], 0.0), axis=-1)
+    elif agg == "max":
+        total = jnp.max(jnp.where(same, vals[:, None, :], -jnp.inf), axis=-1)
+    else:
+        raise ValueError(f"unknown agg {agg!r} (expected 'sum' or 'max')")
+    earlier = jnp.tril(jnp.ones((n_entries, n_entries), bool), k=-1)
+    is_dup = jnp.any(same & earlier[None, :, :], axis=-1)
+    total = jnp.where(valid & ~is_dup, total, -jnp.inf)
+    top_s, pos = jax.lax.top_k(total, min(k, n_entries))
+    top_i = jnp.take_along_axis(ids, pos, axis=1)
+    top_i = jnp.where(top_s == -jnp.inf, -1, top_i)
+    return top_s, top_i
+
+
+def fuse(
+    results: Sequence[Tuple[jax.Array, jax.Array]],
+    k: int,
+    method: str = "rrf",
+    weights: Optional[Sequence[float]] = None,
+    rrf_k: float = DEFAULT_RRF_K,
+) -> Tuple[jax.Array, jax.Array]:
+    """Fuse N (scores, ids) result lists (each (B, k_p), rank-ordered as
+    top_k emits them) into one (B, k) list on shared doc ids.
+
+    rrf:  score(doc) = sum_p  w_p / (rrf_k + rank_p(doc)),  rank from 1.
+    wsum: score(doc) = sum_p  w_p * score_p(doc).
+    A doc missing from a sub-plan's list simply contributes no term.
+    """
+    if not results:
+        raise ValueError("fuse() needs at least one sub-result")
+    if weights is None:
+        weights = [1.0] * len(results)
+    all_ids, all_vals = [], []
+    for (s, i), w in zip(results, weights):
+        if method == "rrf":
+            ranks = jnp.arange(1, i.shape[1] + 1, dtype=jnp.float32)
+            v = jnp.broadcast_to((w / (rrf_k + ranks))[None, :], i.shape)
+        elif method == "wsum":
+            v = w * jnp.asarray(s, jnp.float32)
+        else:
+            raise ValueError(f"unknown fusion method {method!r}")
+        all_ids.append(jnp.asarray(i))
+        all_vals.append(jnp.where(i >= 0, v, 0.0))
+    return combine_by_id(
+        jnp.concatenate(all_ids, axis=1),
+        jnp.concatenate(all_vals, axis=1),
+        k,
+        agg="sum",
+    )
+
+
+def aggregate_by_doc(
+    scores: jax.Array,
+    vec_ids: jax.Array,
+    doc_map: jax.Array,
+    k: int,
+    agg: str = "max",
+) -> Tuple[jax.Array, jax.Array]:
+    """Multi-vector aggregation: map (B, D) vector-level candidates through
+    ``doc_map`` ((N_vec,) int32, vector id -> doc id) and combine per doc —
+    ``max`` is max-sim, ``sum`` adds all matching vectors' scores.  Runs on
+    the *depth*-level candidates so a doc whose best vector ranks below k
+    can still win after aggregation."""
+    doc_map = jnp.asarray(doc_map)
+    vec_ids = jnp.asarray(vec_ids)
+    safe = jnp.maximum(vec_ids, 0)
+    doc_ids = jnp.where(vec_ids >= 0, doc_map[safe], -1)
+    return combine_by_id(doc_ids, scores, k, agg=agg)
+
+
+@dataclasses.dataclass(frozen=True)
+class QueryPlan:
+    """Leaf plan: any ``search(queries) -> (scores, ids)`` callable that
+    returns global doc ids (a bound AnnIndex/SegmentedAnnIndex search, a
+    sharded search closure, ...), plus the weight its results carry in an
+    enclosing :class:`FusionStage`."""
+
+    search: Callable[[Any], Tuple[jax.Array, jax.Array]]
+    weight: float = 1.0
+    label: str = ""
+
+    def run(self, queries) -> Tuple[jax.Array, jax.Array]:
+        return self.search(queries)
+
+
+@dataclasses.dataclass(frozen=True)
+class FusionStage:
+    """Fusion node: run every sub-plan on the same queries and merge their
+    top-k lists with :func:`fuse`."""
+
+    plans: Tuple[Any, ...]
+    k: int = 10
+    method: str = "rrf"
+    rrf_k: float = DEFAULT_RRF_K
+
+    def run(self, queries) -> Tuple[jax.Array, jax.Array]:
+        results = [p.run(queries) for p in self.plans]
+        weights = [getattr(p, "weight", 1.0) for p in self.plans]
+        return fuse(
+            results, self.k, method=self.method, weights=weights,
+            rrf_k=self.rrf_k,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class MultiVectorPlan:
+    """Multi-vector node: run the inner plan in vector-id space, then
+    aggregate to doc ids with :func:`aggregate_by_doc`."""
+
+    inner: Any
+    doc_map: Any
+    k: int = 10
+    agg: str = "max"
+
+    def run(self, queries) -> Tuple[jax.Array, jax.Array]:
+        s, i = self.inner.run(queries)
+        return aggregate_by_doc(s, i, self.doc_map, self.k, agg=self.agg)

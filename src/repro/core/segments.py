@@ -74,6 +74,7 @@ from repro.core import index as index_mod
 from repro.core import pipeline as pl
 from repro.core.index import AnnIndex, AnyConfig
 from repro.core.types import (
+    DocMetadata,
     FakeWordsConfig,
     KdTreeConfig,
     SearchParams,
@@ -108,9 +109,37 @@ def find_commits(path: str) -> List[Tuple[int, str]]:
 
 def _bucket(n: int) -> int:
     """Round a deleted-doc count up to the next power of two so the
-    LiveDocsMatcher's static depth inflation doesn't recompile per
-    delete."""
+    FilterMask's static depth inflation doesn't recompile per delete."""
     return 0 if n <= 0 else 1 << (n - 1).bit_length()
+
+
+def _concat_metadata(
+    parts: Sequence[Optional[DocMetadata]], rows_kept=None
+) -> Optional[DocMetadata]:
+    """Concatenate per-chunk metadata (flush: buffered adds; merge: the
+    merged segments' live rows via ``rows_kept`` boolean selectors).  All
+    chunks must agree on presence and field set — metadata over part of a
+    segment cannot answer a predicate over all of it."""
+    parts = list(parts)
+    if all(p is None for p in parts):
+        return None
+    if any(p is None for p in parts):
+        raise ValueError(
+            "metadata must cover either all rows or none (some adds/"
+            "segments carry metadata and some do not)"
+        )
+    names = parts[0].field_names
+    if any(p.field_names != names for p in parts):
+        raise ValueError(
+            f"inconsistent metadata fields: {[p.field_names for p in parts]}"
+        )
+    if rows_kept is None:
+        vals = [np.asarray(p.values) for p in parts]
+    else:
+        vals = [np.asarray(p.values)[k] for p, k in zip(parts, rows_kept)]
+    return DocMetadata(
+        values=jnp.asarray(np.concatenate(vals, axis=0)), field_names=names
+    )
 
 
 # --------------------------------------------------------------------------
@@ -230,20 +259,25 @@ class TieredMergePolicy:
 
 
 @functools.partial(
-    jax.jit, static_argnames=("matcher", "depth", "use_kernel")
+    jax.jit, static_argnames=("matcher", "depth", "use_kernel", "native")
 )
 def _segment_match(
-    matcher: pl.LiveDocsMatcher,
+    matcher: pl.FilterMask,
     view,
     live: jax.Array,
     base: jax.Array,
     q_rep: jax.Array,
     depth: int,
     use_kernel: Optional[bool],
+    native: bool = False,
 ):
-    """One segment's contribution: live-masked match (the method's own
-    matcher stage inside a LiveDocsMatcher) on global ids."""
-    s, i = matcher(view, q_rep, depth, live, use_kernel=use_kernel)
+    """One segment's contribution: mask-restricted match (the method's own
+    matcher stage inside a FilterMask) on global ids.  ``native=False`` is
+    the historical deletes path (depth inflation + re-reduce, bitwise what
+    shipped); ``native=True`` threads the mask into the score stage as the
+    kernels' in-tile filter operand — ONE kernel pass, used whenever a
+    predicate bitmap is composed in (docs/DESIGN.md §13)."""
+    s, i = matcher(view, q_rep, depth, live, use_kernel=use_kernel, native=native)
     return s, jnp.where(i >= 0, i + base, -1)
 
 
@@ -392,7 +426,7 @@ class SegmentedAnnIndex:
 
     # -- global collection statistics (Lucene IndexSearcher-level) ---------
 
-    def _ensure_views(self) -> Tuple[List[Any], List[pl.LiveDocsMatcher]]:
+    def _ensure_views(self) -> Tuple[List[Any], List[pl.FilterMask]]:
         if self._views is None:
             self._live_dev = [jnp.asarray(s.live) for s in self.segments]
             self._views = (
@@ -403,10 +437,37 @@ class SegmentedAnnIndex:
         if self.global_stats and isinstance(base, pl.FakeWordsMatcher):
             base = dataclasses.replace(base, df_num_docs=self._n_live)
         matchers = [
-            pl.LiveDocsMatcher(inner=base, extra=_bucket(s.del_count))
+            pl.FilterMask(inner=base, extra=_bucket(s.del_count))
             for s in self.segments
         ]
         return self._views, matchers
+
+    # -- metadata (predicate source for filtered search) --------------------
+
+    def global_metadata(self) -> Optional[DocMetadata]:
+        """The segments' per-doc metadata concatenated in global-id order
+        (deleted rows included, so row g answers for global doc id g) —
+        build predicate bitmaps from it and pass them to
+        ``search(filter_mask=)``.  None when no segment carries metadata;
+        mixed coverage raises (a predicate over half the corpus is a bug)."""
+        mds = [s.ann.metadata for s in self.segments]
+        if all(md is None for md in mds):
+            return None
+        if any(md is None for md in mds):
+            raise ValueError(
+                "some segments carry doc metadata and some do not; "
+                "metadata-filtered search needs every segment covered"
+            )
+        names = mds[0].field_names
+        if any(md.field_names != names for md in mds):
+            raise ValueError(
+                f"segments carry inconsistent metadata fields: "
+                f"{[md.field_names for md in mds]}"
+            )
+        return DocMetadata(
+            values=jnp.concatenate([md.values for md in mds], axis=0),
+            field_names=names,
+        )
 
     def _stat_views(self) -> List[Any]:
         segs = self.segments
@@ -492,13 +553,21 @@ class SegmentedAnnIndex:
         rerank: bool = False,
         params: Optional[SearchParams] = None,
         use_kernel: Optional[bool] = None,
+        filter_mask: Optional[jax.Array] = None,
     ) -> Tuple[jax.Array, jax.Array]:
         """Multi-segment staged search: encode once (the global-stats view
         carries any fitted model) -> per-segment live-masked match [+ local
         rerank gather] -> merge on global ids.  Same signature and — for a
         healthy snapshot — bitwise the same results as ``AnnIndex.search``
         over the equivalent live corpus (ids mapped through
-        :meth:`live_global_ids`)."""
+        :meth:`live_global_ids`).
+
+        ``filter_mask`` ((max_doc,) or (B, max_doc), nonzero = keep,
+        indexed by GLOBAL doc id — e.g. built from
+        :meth:`global_metadata`): each segment slices its own rows,
+        composes liveDocs ∧ predicate into ONE mask, and runs a single
+        in-kernel filtered pass (docs/DESIGN.md §13).  A mask that filters
+        every doc returns padded (-inf, -1) rows, never NaNs."""
         p = params if params is not None else SearchParams(k=k, depth=depth, rerank=rerank)
         if self._n_live == 0:
             raise ValueError("segmented index has no live docs to search")
@@ -508,13 +577,29 @@ class SegmentedAnnIndex:
         q_rep = self.pipeline.encoder(views[0], q_norm)
         d_eff = min(p.depth, self._n_live)
         k_eff = min(p.k, d_eff)
+        fm = None
+        if filter_mask is not None:
+            fm = jnp.asarray(filter_mask)
+            if fm.shape[-1] != self.max_doc:
+                raise ValueError(
+                    f"filter_mask covers {fm.shape[-1]} docs but the index "
+                    f"has max_doc={self.max_doc} (masks index GLOBAL ids, "
+                    "deleted rows included)"
+                )
         parts_s, parts_i, stores, bases = [], [], [], []
         base = 0
         for seg, view, live, matcher in zip(
             self.segments, views, self._live_dev, matchers
         ):
+            if fm is None:
+                seg_mask, native = live, False
+            else:
+                pred = fm[..., base : base + seg.num_docs] != 0
+                seg_mask = pred & (live if pred.ndim == 1 else live[None, :])
+                native = True
             s, gid = _segment_match(
-                matcher, view, live, jnp.int32(base), q_rep, p.depth, uk
+                matcher, view, seg_mask, jnp.int32(base), q_rep, p.depth, uk,
+                native=native,
             )
             parts_s.append(s)
             parts_i.append(gid)
@@ -672,6 +757,7 @@ class IndexWriter:
         self._segments: List[Segment] = []
         self._buf: List[np.ndarray] = []
         self._buf_live: List[np.ndarray] = []
+        self._buf_md: List[Optional[DocMetadata]] = []
         self._seg_counter = 0
         self._changed = False
         self._reader: Optional[SegmentedAnnIndex] = None
@@ -737,17 +823,26 @@ class IndexWriter:
 
     # -- mutation ----------------------------------------------------------
 
-    def add(self, vectors) -> np.ndarray:
+    def add(self, vectors, metadata=None) -> np.ndarray:
         """Buffer rows; returns their assigned global doc ids.  Buffered
-        rows become searchable at the next flush/refresh/commit."""
+        rows become searchable at the next flush/refresh/commit.
+
+        ``metadata``: per-row structured fields for filtered search — a
+        ``{field: (n,) ints}`` mapping or a prebuilt
+        :class:`repro.core.types.DocMetadata` with one row per added
+        vector.  All adds into one flush (and, via merges, one index) must
+        agree on the field set; rows ride into the built segment's
+        ``AnnIndex.metadata`` and survive flush/merge/commit."""
         rows = np.asarray(vectors, np.float32)
         if rows.ndim == 1:
             rows = rows[None, :]
         if rows.ndim != 2 or rows.shape[0] == 0:
             raise ValueError(f"add expects (n, dim) rows, got {rows.shape}")
+        md = builder.build_metadata(metadata, rows.shape[0])
         start = self.total_docs
         self._buf.append(rows)
         self._buf_live.append(np.ones(rows.shape[0], bool))
+        self._buf_md.append(md)
         if (
             self.max_buffered_docs is not None
             and self.buffered_docs >= self.max_buffered_docs
@@ -795,25 +890,29 @@ class IndexWriter:
             return False
         rows = np.concatenate(self._buf, axis=0)
         live = np.concatenate(self._buf_live, axis=0)
-        ann = self._build_segment(jnp.asarray(rows), normalized=False)
+        md = _concat_metadata(self._buf_md)
+        ann = self._build_segment(jnp.asarray(rows), normalized=False, metadata=md)
         self._segments.append(
             Segment(
                 ann=ann, live=live, name=self._next_name(),
                 source=self._source_sidecar(ann, rows, normalized=False),
             )
         )
-        self._buf, self._buf_live = [], []
+        self._buf, self._buf_live, self._buf_md = [], [], []
         self._changed = True
         self.maybe_merge()
         return True
 
-    def _build_segment(self, rows: jax.Array, normalized: bool) -> AnnIndex:
+    def _build_segment(
+        self, rows: jax.Array, normalized: bool, metadata=None
+    ) -> AnnIndex:
         return AnnIndex.build(
             rows, self.config,
             rerank_store=self.rerank_store, use_kernel=self.use_kernel,
             primary_postings=self.primary_postings,
             postings_group=self.postings_group,
             normalized=normalized,
+            metadata=metadata,
         )
 
     @staticmethod
@@ -881,7 +980,10 @@ class IndexWriter:
             del self._segments[start:end]
             self._changed = True
             return
-        ann = self._build_segment(jnp.asarray(rows), normalized=True)
+        md = _concat_metadata(
+            [s.ann.metadata for s in group], rows_kept=[s.live for s in group]
+        )
+        ann = self._build_segment(jnp.asarray(rows), normalized=True, metadata=md)
         merged = Segment(
             ann=ann, live=np.ones(rows.shape[0], bool),
             name=self._next_name(),

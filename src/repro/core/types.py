@@ -164,6 +164,70 @@ class SearchParams:
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
+class DocMetadata:
+    """Per-document structured metadata — the predicate source for filtered
+    kNN (docs/DESIGN.md §13).
+
+    values:      (N, F) int32; column f holds field ``field_names[f]``.
+                 Integer-coded by the caller (categorical codes, bucketed
+                 timestamps, price cents, ...); a (N,) per-field layout
+                 would fragment the gather, one matrix keeps it a slice.
+    field_names: static tuple of F field names (pytree metadata, like
+                 ``QuantizedPostings.bits``), so the container stays
+                 jit-traceable and save/load can persist names without an
+                 array sidecar.
+
+    The ``*_mask`` helpers build (N,) bool predicate bitmaps that feed the
+    match stage's ``filt`` operand (kernels mask them to -inf inside the
+    tile loop); compose predicates with ``&`` / ``|`` on the bitmaps.
+    """
+
+    values: jax.Array
+    field_names: Tuple[str, ...] = dataclasses.field(metadata=dict(static=True))
+
+    @classmethod
+    def from_fields(cls, fields) -> "DocMetadata":
+        """Build from a ``{field_name: (N,) int array}`` mapping (insertion
+        order fixes the column order)."""
+        names = tuple(fields.keys())
+        cols = [jnp.asarray(fields[n]).astype(jnp.int32) for n in names]
+        return cls(values=jnp.stack(cols, axis=1), field_names=names)
+
+    @property
+    def num_docs(self) -> int:
+        return self.values.shape[0]
+
+    def _col(self, field: str) -> jax.Array:
+        return self.values[:, self.field_names.index(field)]
+
+    def eq_mask(self, field: str, value) -> jax.Array:
+        """(N,) bool: field == value."""
+        return self._col(field) == jnp.int32(value)
+
+    def in_mask(self, field: str, values) -> jax.Array:
+        """(N,) bool: field in values (small static value set)."""
+        col = self._col(field)
+        out = jnp.zeros(col.shape, bool)
+        for v in values:
+            out = out | (col == jnp.int32(v))
+        return out
+
+    def range_mask(self, field: str, lo=None, hi=None) -> jax.Array:
+        """(N,) bool: lo <= field < hi (either bound optional)."""
+        col = self._col(field)
+        out = jnp.ones(col.shape, bool)
+        if lo is not None:
+            out = out & (col >= jnp.int32(lo))
+        if hi is not None:
+            out = out & (col < jnp.int32(hi))
+        return out
+
+    def nbytes(self) -> int:
+        return self.values.size * self.values.dtype.itemsize
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
 class QuantizedStore:
     """int8 symmetric per-doc quantized rerank store (docs/DESIGN.md §8).
 

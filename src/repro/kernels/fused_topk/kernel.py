@@ -215,10 +215,15 @@ def _score_tile(q, d, mode: str, acc_dtype):
 
 
 def _fused_topk_kernel(
-    q_ref, d_ref, s_ref, i_ref, acc_ref, rs_ref, ri_ref,
-    *, n_j: int, n_k: int, n_docs: int, bn: int, depth: int, mode: str,
-    merge: str, acc_dtype,
+    q_ref, d_ref, *refs,
+    n_j: int, n_k: int, n_docs: int, bn: int, depth: int, mode: str,
+    merge: str, acc_dtype, has_filt: bool = False,
 ):
+    if has_filt:
+        f_ref, s_ref, i_ref, acc_ref, rs_ref, ri_ref = refs
+    else:
+        f_ref = None
+        s_ref, i_ref, acc_ref, rs_ref, ri_ref = refs
     j = pl.program_id(1)
     k = pl.program_id(2)
 
@@ -238,6 +243,11 @@ def _fused_topk_kernel(
         tile_s = acc_ref[...].astype(jnp.float32)
         ids = j * bn + jax.lax.broadcasted_iota(jnp.int32, tile_s.shape, 1)
         valid = ids < n_docs  # ragged N: padded docs can never rank
+        if has_filt:
+            # Predicate bitmap applied INSIDE the streaming merge: filtered
+            # docs score but can never rank, so the (B, N) matrix still
+            # never exists and filtering costs one extra VPU AND per tile.
+            valid = valid & (f_ref[...] != 0)
         tile_s = jnp.where(valid, tile_s, -jnp.inf)
         ids = jnp.where(valid, ids, BIG_ID)
         _merge_if_improves(rs_ref, ri_ref, tile_s, ids, depth, merge,
@@ -247,6 +257,19 @@ def _fused_topk_kernel(
     def _flush():
         s_ref[...] = rs_ref[...]
         i_ref[...] = ri_ref[...]
+
+
+def _filt_operand(filt, bq: int, bn: int):
+    """Normalize a per-doc predicate bitmap to a padded int32 kernel operand
+    plus its BlockSpec.  Accepts (N,) (shared across the batch) or (B, N)
+    (per-query); padding docs get 0 (already masked by the n_docs check,
+    but keep the invariant anyway)."""
+    f = filt.astype(jnp.int32)
+    if f.ndim == 1:
+        fp = common.pad_dim(f[None, :], 1, bn)
+        return fp, pl.BlockSpec((1, bn), lambda i, j, k: (0, j))
+    fp = common.pad_dim(common.pad_dim(f, 0, bq), 1, bn)
+    return fp, pl.BlockSpec((bq, bn), lambda i, j, k: (i, j))
 
 
 def _depth_pad(depth: int, merge: str) -> int:
@@ -270,12 +293,18 @@ def fused_topk(
     bn: int | None = None,
     bk: int | None = None,
     interpret: bool | None = None,
+    filt: jax.Array | None = None,  # (N,) | (B, N) predicate bitmap
 ) -> tuple[jax.Array, jax.Array]:
     """Streaming top-``depth`` of q @ docs.T (or LSH collision counts).
 
     Returns (scores f32 (B, depth), ids int32 (B, depth)), sorted descending
     with ``jax.lax.top_k`` tie semantics; id -1 marks empty (-inf) slots.
     The (B, N) score matrix never exists in HBM.
+
+    ``filt`` (optional): per-doc predicate bitmap, (N,) shared or (B, N)
+    per-query; nonzero = keep.  Applied as -inf inside the tile merge, so
+    filtered search stays one kernel pass.  ``filt=None`` dispatches the
+    exact unfiltered call graph (bitwise identical to not having the arg).
     """
     if interpret is None:
         interpret = common.INTERPRET
@@ -304,18 +333,25 @@ def fused_topk(
         acc_dtype = jnp.int32 if q.dtype in _INT_DTYPES else jnp.float32
     dpad = _depth_pad(depth, merge)
     grid = (qp.shape[0] // bq, dp.shape[0] // bn, qp.shape[1] // bk)
+    operands = [qp, dp]
+    in_specs = [
+        pl.BlockSpec((bq, bk), lambda i, j, k: (i, k)),
+        pl.BlockSpec((bn, bk), lambda i, j, k: (j, k)),
+    ]
+    if filt is not None:
+        fp, f_spec = _filt_operand(filt, bq, bn)
+        operands.append(fp)
+        in_specs.append(f_spec)
 
     scores, ids = pl.pallas_call(
         functools.partial(
             _fused_topk_kernel,
             n_j=grid[1], n_k=grid[2], n_docs=n, bn=bn, depth=depth,
             mode=mode, merge=merge, acc_dtype=acc_dtype,
+            has_filt=filt is not None,
         ),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((bq, bk), lambda i, j, k: (i, k)),
-            pl.BlockSpec((bn, bk), lambda i, j, k: (j, k)),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((bq, dpad), lambda i, j, k: (i, 0)),
             pl.BlockSpec((bq, dpad), lambda i, j, k: (i, 0)),
@@ -333,7 +369,7 @@ def fused_topk(
             dimension_semantics=("parallel", "arbitrary", "arbitrary"),
         ),
         interpret=interpret,
-    )(qp, dp)
+    )(*operands)
     scores = scores[:b, :depth]
     ids = ids[:b, :depth]
     return scores, jnp.where(scores == -jnp.inf, -1, ids)
@@ -392,6 +428,7 @@ def fused_topk_gathered(
     bn: int = 512,
     bk: int = 512,
     interpret: bool | None = None,
+    filt: jax.Array | None = None,  # (B, R) keep-bitmap aligned with row_ids
 ) -> tuple[jax.Array, jax.Array]:
     """Per-query streaming top-``depth`` over gathered candidate matrices
     (blockmax stage 2: each query scores only its own kept blocks' rows).
@@ -402,10 +439,18 @@ def fused_topk_gathered(
     padded / -inf slots.  Ties break on the lowest GLOBAL doc id, matching
     the dense reference paths.  The (B, R) stage-2 score matrix never exists
     in HBM.
+
+    ``filt`` (optional): (B, R) keep-bitmap aligned with ``row_ids``.  The
+    mask folds into the row-id operand (filtered rows take the same
+    out-of-range id the in-kernel padding mask drops), so filtering rides
+    the existing merge-time mask — still one kernel pass, and ``filt=None``
+    leaves the call graph untouched.
     """
     if interpret is None:
         interpret = common.INTERPRET
     b, r, t = docs.shape
+    if filt is not None:
+        row_ids = jnp.where(filt != 0, row_ids.astype(jnp.int32), BIG_ID)
     assert depth <= r, f"depth {depth} > candidate count {r}"
     bn = min(bn, common.round_up(r, common.LANE))
     bk = min(bk, common.round_up(t, common.LANE))
@@ -496,10 +541,15 @@ def _dequant_tile(d, s, bits: int, group: int, q_dtype):
 
 
 def _fused_topk_quantized_kernel(
-    q_ref, d_ref, s_ref, s_out_ref, i_out_ref, acc_ref, rs_ref, ri_ref,
-    *, n_j: int, n_k: int, n_docs: int, bn: int, depth: int, merge: str,
-    bits: int, group: int,
+    q_ref, d_ref, s_ref, *refs,
+    n_j: int, n_k: int, n_docs: int, bn: int, depth: int, merge: str,
+    bits: int, group: int, has_filt: bool = False,
 ):
+    if has_filt:
+        f_ref, s_out_ref, i_out_ref, acc_ref, rs_ref, ri_ref = refs
+    else:
+        f_ref = None
+        s_out_ref, i_out_ref, acc_ref, rs_ref, ri_ref = refs
     j = pl.program_id(1)
     k = pl.program_id(2)
 
@@ -524,6 +574,8 @@ def _fused_topk_quantized_kernel(
             tile_s = tile_s * s_ref[...][:, 0][None, :]
         ids = j * bn + jax.lax.broadcasted_iota(jnp.int32, tile_s.shape, 1)
         valid = ids < n_docs
+        if has_filt:
+            valid = valid & (f_ref[...] != 0)
         tile_s = jnp.where(valid, tile_s, -jnp.inf)
         ids = jnp.where(valid, ids, BIG_ID)
         _merge_if_improves(rs_ref, ri_ref, tile_s, ids, depth, merge,
@@ -575,11 +627,12 @@ def fused_topk_quantized(
     bn: int | None = None,
     bk: int | None = None,
     interpret: bool | None = None,
+    filt: jax.Array | None = None,  # (N,) | (B, N) predicate bitmap
 ) -> tuple[jax.Array, jax.Array]:
     """Streaming top-``depth`` of q @ dequant(docs, scale).T with the
     dequantization fused into the score stage — only the packed store and
-    the scales ever stream from HBM.  Same output contract as
-    :func:`fused_topk`."""
+    the scales ever stream from HBM.  Same output contract (and ``filt``
+    semantics) as :func:`fused_topk`."""
     if interpret is None:
         interpret = common.INTERPRET
     bq, bn, bk = bq or 128, bn or 512, bk or 512
@@ -604,19 +657,25 @@ def fused_topk_quantized(
     else:
         d_spec = pl.BlockSpec((bn, bk // 2), lambda i, j, k: (j, k))
         s_spec = pl.BlockSpec((bn, bk // group), lambda i, j, k: (j, k))
+    operands = [qp, dp, sp]
+    in_specs = [
+        pl.BlockSpec((bq, bk), lambda i, j, k: (i, k)),
+        d_spec,
+        s_spec,
+    ]
+    if filt is not None:
+        fp, f_spec = _filt_operand(filt, bq, bn)
+        operands.append(fp)
+        in_specs.append(f_spec)
 
     scores, ids = pl.pallas_call(
         functools.partial(
             _fused_topk_quantized_kernel,
             n_j=grid[1], n_k=grid[2], n_docs=n, bn=bn, depth=depth,
-            merge=merge, bits=bits, group=group,
+            merge=merge, bits=bits, group=group, has_filt=filt is not None,
         ),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((bq, bk), lambda i, j, k: (i, k)),
-            d_spec,
-            s_spec,
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((bq, dpad), lambda i, j, k: (i, 0)),
             pl.BlockSpec((bq, dpad), lambda i, j, k: (i, 0)),
@@ -634,7 +693,7 @@ def fused_topk_quantized(
             dimension_semantics=("parallel", "arbitrary", "arbitrary"),
         ),
         interpret=interpret,
-    )(qp, dp, sp)
+    )(*operands)
     scores = scores[:b, :depth]
     ids = ids[:b, :depth]
     return scores, jnp.where(scores == -jnp.inf, -1, ids)
@@ -698,14 +757,18 @@ def fused_topk_gathered_quantized(
     bn: int = 512,
     bk: int = 512,
     interpret: bool | None = None,
+    filt: jax.Array | None = None,  # (B, R) keep-bitmap aligned with row_ids
 ) -> tuple[jax.Array, jax.Array]:
     """Quantized-store variant of :func:`fused_topk_gathered` (blockmax
     stage 2): per-query gathered packed rows + scales are dequantized in
     registers and streamed through the same running top-``depth`` merge on
-    GLOBAL doc ids."""
+    GLOBAL doc ids.  ``filt`` folds into the row-id operand exactly like
+    :func:`fused_topk_gathered`."""
     if interpret is None:
         interpret = common.INTERPRET
     b, r, tc = docs.shape
+    if filt is not None:
+        row_ids = jnp.where(filt != 0, row_ids.astype(jnp.int32), BIG_ID)
     t = q.shape[1]
     assert depth <= r, f"depth {depth} > candidate count {r}"
     bn = min(bn, common.round_up(r, common.LANE))

@@ -30,11 +30,26 @@ def scores_ref(q: jax.Array, docs: jax.Array, mode: str = "gemm") -> jax.Array:
     return out.astype(jnp.float32)
 
 
+def apply_filt(scores: jax.Array, filt) -> jax.Array:
+    """Mask a dense (B, N) score matrix with a predicate bitmap ((N,) shared
+    or (B, N) per-query; nonzero = keep) — the XLA realization of the
+    kernel's merge-time mask.  ``filt=None`` is the identity."""
+    if filt is None:
+        return scores
+    f = filt if filt.ndim == 2 else filt[None, :]
+    return jnp.where(f != 0, scores, -jnp.inf)
+
+
 def fused_topk_ref(
-    q: jax.Array, docs: jax.Array, depth: int, mode: str = "gemm"
+    q: jax.Array, docs: jax.Array, depth: int, mode: str = "gemm",
+    filt=None,
 ) -> Tuple[jax.Array, jax.Array]:
-    """Unfused reference: full score matrix + ``jax.lax.top_k``."""
-    return jax.lax.top_k(scores_ref(q, docs, mode), depth)
+    """Unfused reference: full score matrix + ``jax.lax.top_k``.  With
+    ``filt``, masked slots follow the kernel contract (-inf score, id -1)."""
+    if filt is None:
+        return jax.lax.top_k(scores_ref(q, docs, mode), depth)
+    s, i = jax.lax.top_k(apply_filt(scores_ref(q, docs, mode), filt), depth)
+    return s, jnp.where(s == -jnp.inf, -1, i)
 
 
 def gathered_scores_ref(
@@ -68,11 +83,15 @@ def gathered_topk_ref(
     depth: int,
     n_docs: int,
     mode: str = "gemm",
+    filt=None,
 ) -> Tuple[jax.Array, jax.Array]:
     """Unfused blockmax stage-2 reference (mirrors core.blockmax).  Ties
     break on the lowest GLOBAL doc id (not gathered position), matching the
-    dense reference paths."""
+    dense reference paths.  ``filt`` is a (B, R) keep-bitmap aligned with
+    ``row_ids`` (like the gathered kernel's)."""
     valid = row_ids < n_docs
+    if filt is not None:
+        valid = valid & (filt != 0)
     scores = jnp.where(valid, gathered_scores_ref(q, docs, mode), -jnp.inf)
     ids = jnp.where(valid, row_ids, np.int32(2**30))
     return topk_by_id_ref(scores, ids, depth)
@@ -107,10 +126,14 @@ def quantized_scores_ref(
 
 def quantized_topk_ref(
     q: jax.Array, docs: jax.Array, scale: jax.Array, depth: int,
-    bits: int, group: int = 0,
+    bits: int, group: int = 0, filt=None,
 ) -> Tuple[jax.Array, jax.Array]:
     """Unfused quantized reference: dense scores + ``jax.lax.top_k``."""
-    return jax.lax.top_k(quantized_scores_ref(q, docs, scale, bits, group), depth)
+    scores = quantized_scores_ref(q, docs, scale, bits, group)
+    if filt is None:
+        return jax.lax.top_k(scores, depth)
+    s, i = jax.lax.top_k(apply_filt(scores, filt), depth)
+    return s, jnp.where(s == -jnp.inf, -1, i)
 
 
 def quantized_gathered_scores_ref(
@@ -139,15 +162,31 @@ def quantized_gathered_topk_ref(
     n_docs: int,
     bits: int,
     group: int = 0,
+    filt=None,
 ) -> Tuple[jax.Array, jax.Array]:
-    """Unfused quantized blockmax stage-2 reference (global-id ties)."""
+    """Unfused quantized blockmax stage-2 reference (global-id ties).
+    ``filt`` is a (B, R) keep-bitmap aligned with ``row_ids``."""
     valid = row_ids < n_docs
+    if filt is not None:
+        valid = valid & (filt != 0)
     scores = jnp.where(
         valid, quantized_gathered_scores_ref(q, docs, scale, bits, group),
         -jnp.inf,
     )
     ids = jnp.where(valid, row_ids, np.int32(2**30))
     return topk_by_id_ref(scores, ids, depth)
+
+
+def _filt_tiles(filt, n: int, tile: int) -> jax.Array:
+    """Predicate bitmap as per-doc-tile scan slices: (n_tiles, 1|B, tile)
+    int32, padded tail = 0 (already dropped by the ragged-N mask)."""
+    f = filt.astype(jnp.int32)
+    if f.ndim == 1:
+        f = f[None, :]
+    pad = (-n) % tile
+    if pad:
+        f = jnp.concatenate([f, jnp.zeros((f.shape[0], pad), f.dtype)], axis=1)
+    return jnp.moveaxis(f.reshape(f.shape[0], -1, tile), 1, 0)
 
 
 @functools.partial(
@@ -161,6 +200,7 @@ def streaming_topk_quantized_ref(
     bits: int,
     group: int = 0,
     tile: int = 4096,
+    filt=None,
 ) -> Tuple[jax.Array, jax.Array]:
     """XLA online-reduction equivalent over a packed store: scan doc tiles,
     dequantize each tile transiently, merge a running top-``depth``.  The
@@ -185,23 +225,30 @@ def streaming_topk_quantized_ref(
 
     def body(carry, xs):
         best_s, best_i = carry
-        t_idx, d_tile, s_tile = xs
+        if filt is None:
+            t_idx, d_tile, s_tile = xs
+        else:
+            t_idx, d_tile, s_tile, f_tile = xs
         s = quantized_scores_ref(q, d_tile, s_tile, bits, group)
         ids = t_idx * tile + jnp.arange(tile, dtype=jnp.int32)[None, :]
         valid = ids < n
+        if filt is not None:
+            valid = valid & (f_tile != 0)
         s = jnp.where(valid, s, -jnp.inf)
         loc_s, pos = jax.lax.top_k(s, min(depth, tile))
         loc_i = jnp.take_along_axis(jnp.broadcast_to(ids, s.shape), pos, axis=-1)
+        if filt is not None:
+            # All-filtered tiles must pad with -1, never a masked doc's id.
+            loc_i = jnp.where(loc_s == -jnp.inf, -1, loc_i)
         all_s = jnp.concatenate([best_s, loc_s], axis=-1)
         all_i = jnp.concatenate([best_i, loc_i], axis=-1)
         top_s, top_pos = jax.lax.top_k(all_s, depth)
         return (top_s, jnp.take_along_axis(all_i, top_pos, axis=-1)), None
 
-    (best_s, best_i), _ = jax.lax.scan(
-        body,
-        (init_s, init_i),
-        (jnp.arange(d_tiles.shape[0], dtype=jnp.int32), d_tiles, s_tiles),
-    )
+    xs = (jnp.arange(d_tiles.shape[0], dtype=jnp.int32), d_tiles, s_tiles)
+    if filt is not None:
+        xs = xs + (_filt_tiles(filt, n, tile),)
+    (best_s, best_i), _ = jax.lax.scan(body, (init_s, init_i), xs)
     return best_s, best_i
 
 
@@ -212,6 +259,7 @@ def streaming_topk_ref(
     depth: int,
     tile: int = 4096,
     mode: str = "gemm",
+    filt=None,
 ) -> Tuple[jax.Array, jax.Array]:
     """XLA online-reduction equivalent: scan doc tiles, merge a running
     top-``depth``.  Peak live scores are O(B * (tile + depth)), never (B, N)."""
@@ -230,21 +278,27 @@ def streaming_topk_ref(
 
     def body(carry, xs):
         best_s, best_i = carry
-        t_idx, d_tile = xs
+        if filt is None:
+            t_idx, d_tile = xs
+        else:
+            t_idx, d_tile, f_tile = xs
         s = scores_ref(q, d_tile, mode)
         ids = t_idx * tile + jnp.arange(tile, dtype=jnp.int32)[None, :]
         valid = ids < n
+        if filt is not None:
+            valid = valid & (f_tile != 0)
         s = jnp.where(valid, s, -jnp.inf)
         loc_s, pos = jax.lax.top_k(s, min(depth, tile))
         loc_i = jnp.take_along_axis(jnp.broadcast_to(ids, s.shape), pos, axis=-1)
+        if filt is not None:
+            loc_i = jnp.where(loc_s == -jnp.inf, -1, loc_i)
         all_s = jnp.concatenate([best_s, loc_s], axis=-1)
         all_i = jnp.concatenate([best_i, loc_i], axis=-1)
         top_s, top_pos = jax.lax.top_k(all_s, depth)
         return (top_s, jnp.take_along_axis(all_i, top_pos, axis=-1)), None
 
-    (best_s, best_i), _ = jax.lax.scan(
-        body,
-        (init_s, init_i),
-        (jnp.arange(tiles.shape[0], dtype=jnp.int32), tiles),
-    )
+    xs = (jnp.arange(tiles.shape[0], dtype=jnp.int32), tiles)
+    if filt is not None:
+        xs = xs + (_filt_tiles(filt, n, tile),)
+    (best_s, best_i), _ = jax.lax.scan(body, (init_s, init_i), xs)
     return best_s, best_i

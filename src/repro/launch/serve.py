@@ -130,6 +130,92 @@ def serve_segmented(args, corpus, queries) -> dict:
     return out
 
 
+def serve_filtered(args, svc, corpus, queries, ratios, unfiltered) -> list:
+    """Filtered smoke: replay the SAME query stream under random predicate
+    bitmaps at each selectivity, through the match stage's single in-kernel
+    filtered pass (docs/DESIGN.md §13).  Recall is measured against exact
+    brute force over the FILTERED corpus; latency percentiles print next to
+    the unfiltered ones from the main replay."""
+    rng = np.random.default_rng(7)
+    results = []
+    for ratio in ratios:
+        mask = rng.random(args.n_docs) < ratio
+        if mask.sum() < args.k:  # degenerate draw at tiny selectivity
+            mask[rng.choice(args.n_docs, size=args.k, replace=False)] = True
+        filt = mask.astype(np.int32)
+        svc.search_batch(queries[: args.batch], filter=filt)  # compile
+        svc.reset_latency()
+        ids_all = []
+        for i in range(0, len(queries), args.batch):
+            _, ids = svc.search_batch(queries[i : i + args.batch], filter=filt)
+            ids_all.append(ids)
+        ids_all = np.concatenate(ids_all)
+        kept = np.flatnonzero(mask)
+        _, gt_i = bruteforce.exact_topk(
+            jnp.asarray(np.asarray(corpus)[kept]), jnp.asarray(queries), args.k
+        )
+        gt_global = kept[np.asarray(gt_i)]
+        recall = float(
+            ev.recall_at(jnp.asarray(gt_global), jnp.asarray(ids_all))
+        )
+        stats = svc.stats()
+        row = {
+            "selectivity": ratio,
+            "recall@k": round(recall, 4),
+            "p50_ms_per_batch": stats["lat_p50_ms"],
+            "p99_ms_per_batch": stats["lat_p99_ms"],
+        }
+        results.append(row)
+        print(
+            f"[serve] filtered {ratio:.0%}: recall@k {row['recall@k']} "
+            f"p50 {row['p50_ms_per_batch']}ms p99 {row['p99_ms_per_batch']}ms"
+            f" (unfiltered: p50 {unfiltered['p50_ms_per_batch']}ms "
+            f"p99 {unfiltered['p99_ms_per_batch']}ms)"
+        )
+    return results
+
+
+def serve_hybrid(args, ann, corpus, queries) -> dict:
+    """Hybrid smoke: RRF-fuse a lexical classic fake-words retriever with a
+    dense kd-scan retriever over the same corpus (core/plan.py FusionStage)
+    and report recall@k of the fusion next to each retriever alone."""
+    from repro.core import plan as qplan
+
+    cv = jnp.asarray(corpus)
+    lex = (
+        ann
+        if isinstance(ann.config, FakeWordsConfig)
+        and ann.config.scoring == "classic"
+        else AnnIndex.build(cv, FakeWordsConfig(quantization=args.q))
+    )
+    dense = AnnIndex.build(cv, KdTreeConfig(dims=8, backend="scan"))
+    sub = {
+        "classic": qplan.QueryPlan(
+            search=lambda q: lex.search(q, k=args.k, depth=args.depth),
+            label="classic",
+        ),
+        "dense": qplan.QueryPlan(
+            search=lambda q: dense.search(q, k=args.k, depth=args.depth),
+            label="dense",
+        ),
+    }
+    fusion = qplan.FusionStage(plans=tuple(sub.values()), k=args.k)
+    qv = jnp.asarray(queries)
+    _, gt_i = bruteforce.exact_topk(cv, qv, args.k)
+    gt = jnp.asarray(np.asarray(gt_i))
+    rec = {
+        name: round(float(ev.recall_at(gt, p.run(qv)[1])), 4)
+        for name, p in sub.items()
+    }
+    _, fused_i = fusion.run(qv)
+    rec["hybrid_rrf"] = round(float(ev.recall_at(gt, fused_i)), 4)
+    print(
+        f"[serve] hybrid recall@{args.k}: classic {rec['classic']} "
+        f"dense {rec['dense']} rrf {rec['hybrid_rrf']}"
+    )
+    return rec
+
+
 def main(argv=None) -> dict:
     ap = argparse.ArgumentParser()
     ap.add_argument("--n-docs", type=int, default=100_000)
@@ -181,6 +267,21 @@ def main(argv=None) -> dict:
              "Lucene-style IndexWriter (segmented NRT serving with "
              "deletes + a forced merge; docs/DESIGN.md §11)",
     )
+    ap.add_argument(
+        "--filter-ratio", type=float, nargs="*", default=None,
+        metavar="RATIO",
+        help="filtered-search smoke: replay the query stream under random "
+             "predicate bitmaps at these selectivities (bare flag = "
+             "1%%/10%%/50%%), logging filtered p50/p99 and recall next to "
+             "the unfiltered numbers (docs/DESIGN.md §13)",
+    )
+    ap.add_argument(
+        "--hybrid", action="store_true",
+        help="hybrid smoke: RRF-fuse the lexical classic fake-words "
+             "retriever with a dense kd-scan retriever over the same "
+             "corpus (core/plan.py FusionStage) and log recall@k of the "
+             "fusion next to each retriever alone",
+    )
     args = ap.parse_args(argv)
 
     corpus = embeddings.make_corpus(
@@ -191,6 +292,12 @@ def main(argv=None) -> dict:
     if args.segments:
         if args.shards:
             raise SystemExit("--segments and --shards are mutually exclusive")
+        if args.filter_ratio is not None or args.hybrid:
+            raise SystemExit(
+                "--filter-ratio/--hybrid smoke modes run on the monolithic "
+                "serving path; drop --segments (segmented filtering is "
+                "exercised by tests/test_filtered.py)"
+            )
         if args.save_index:
             raise SystemExit(
                 "--segments persists via IndexWriter.commit, not "
@@ -279,6 +386,14 @@ def main(argv=None) -> dict:
         "queries": int(svc.queries_served),
     }
     print(f"[serve] {out}")
+
+    if args.filter_ratio is not None:
+        ratios = args.filter_ratio if args.filter_ratio else [0.01, 0.1, 0.5]
+        out["filtered"] = serve_filtered(
+            args, svc, corpus, queries, ratios, out
+        )
+    if args.hybrid:
+        out["hybrid"] = serve_hybrid(args, ann, corpus, queries)
     return out
 
 

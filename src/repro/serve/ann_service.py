@@ -159,6 +159,7 @@ class AnnService:
                 )
             self._bm = None
             self._search = None
+            self._search_filtered = None
             return
         self._bm = None
         if self._bm_keep is not None:
@@ -190,16 +191,26 @@ class AnnService:
             # Quantized primary postings change the index spec tree: the
             # sharded search must shard the packed store + scales too.
             pq = getattr(ann.index, "pq", None)
-            self._search = distributed.make_sharded_search(
-                self.mesh, ann.config, self.shard_axes,
+            sharded_args = dict(
                 k=self.scfg.k, depth=self.scfg.depth, rerank=self.scfg.rerank,
                 use_kernel=self._uk,
                 blockmax_keep=self._bm_keep,
                 rerank_store=rs,
                 postings_bits=pq.bits if pq is not None else 0,
             )
+            self._search = distributed.make_sharded_search(
+                self.mesh, ann.config, self.shard_axes, **sharded_args
+            )
+            # The filtered variant takes a trailing doc-sharded bitmap
+            # operand (docs/DESIGN.md §13); built eagerly but compiled only
+            # on the first filtered query.
+            self._search_filtered = distributed.make_sharded_search(
+                self.mesh, ann.config, self.shard_axes, filtered=True,
+                **sharded_args,
+            )
         else:
             self._search = None
+            self._search_filtered = None
 
     # -- online index updates ----------------------------------------------
 
@@ -232,51 +243,105 @@ class AnnService:
         """The effective match stage for single-device serving."""
         return self.ann.matcher_for(self._bm, self._bm_keep)
 
-    def _cache_key(self, q_rep, q) -> bytes:
+    def _cache_key(self, q_rep, q, filt=None) -> bytes:
         """Result-cache key: the encoded query representation's bytes plus
         every knob that changes the result — INCLUDING the index epoch, so
         a swapped/refreshed index can never serve a stale entry.  When
         reranking, the raw normalized queries join the hash — distinct
         queries can collide on a quantized rep (tf row / signature), and
-        their exact rerank scores would differ.  Note np.asarray(q_rep)
-        blocks on the (tiny) encoder before the search dispatch; that host
-        sync is the price of rep-level keying and only paid when the cache
-        is enabled."""
+        their exact rerank scores would differ.  A filter bitmap's bytes
+        join the hash too (plus a presence flag in the knob tuple, so an
+        all-ones mask can never alias the unfiltered entry).  Note
+        np.asarray(q_rep) blocks on the (tiny) encoder before the search
+        dispatch; that host sync is the price of rep-level keying and only
+        paid when the cache is enabled."""
         h = hashlib.sha1(np.asarray(q_rep).tobytes())
         if self.scfg.rerank and q is not None:
             h.update(np.asarray(q).tobytes())
+        if filt is not None:
+            h.update(np.asarray(filt).tobytes())
         h.update(
             repr((self.scfg.k, self.scfg.depth, self.scfg.rerank,
                   self._bm_keep, self._bm_block, self._uk,
-                  getattr(self.ann, "epoch", 0))).encode()
+                  getattr(self.ann, "epoch", 0), filt is not None)).encode()
         )
         return h.digest()
 
-    def search_batch(self, queries: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    def search_batch(
+        self,
+        queries: np.ndarray,
+        filter: Optional[np.ndarray] = None,
+        plan=None,
+    ) -> Tuple[np.ndarray, np.ndarray]:
         """(B, dim) -> (scores (B,k), ids (B,k)); pads to max_batch so the
-        jit cache holds exactly one entry."""
+        jit cache holds exactly one entry.
+
+        ``filter``: per-doc predicate bitmap (nonzero = keep) applied
+        inside the match stage's single kernel pass (docs/DESIGN.md §13) —
+        (N,) shared across the batch, or (B, N) per query (single-device
+        and segmented; the sharded path takes the shared (N,) form, which
+        shards with the postings).  Segmented indexes take GLOBAL doc ids
+        (max_doc space, e.g. from ``ann.global_metadata()``).  Filter bytes
+        join the result-cache key, so filtered and unfiltered streams cache
+        independently.
+
+        ``plan``: a composed query plan (:mod:`repro.core.plan` —
+        FusionStage / MultiVectorPlan / QueryPlan) run as ONE batch in
+        place of this service's own index search; sub-plan leaves carry
+        their own filters and indexes.  Plan results bypass the result
+        cache (a plan's identity isn't hashable state)."""
         b = queries.shape[0]
+        if plan is not None:
+            if filter is not None:
+                raise ValueError(
+                    "pass filters on the plan's leaves, not alongside plan="
+                )
+            t0 = time.perf_counter()
+            s, ids = plan.run(jnp.asarray(queries))
+            s_np, i_np = np.asarray(s), np.asarray(ids)
+            self.batches += 1
+            self._lat_s.append(time.perf_counter() - t0)
+            self.queries_served += b
+            return s_np, i_np
         mb = self.scfg.max_batch
         pad = (-b) % mb
         if pad:
             queries = np.concatenate(
                 [queries, np.zeros((pad, queries.shape[1]), queries.dtype)], 0
             )
+        fm = None
+        if filter is not None:
+            fm = np.asarray(filter)
+            if fm.ndim == 2:
+                if self.mesh is not None:
+                    raise ValueError(
+                        "sharded filtered serving takes a shared (N,) mask "
+                        "(it shards with the postings); per-query (B, N) "
+                        "masks are single-device/segmented only"
+                    )
+                if pad:
+                    # Padded queries get all-zero mask rows; their padded
+                    # (-inf, -1) results are trimmed with the batch below.
+                    fm = np.concatenate(
+                        [fm, np.zeros((pad, fm.shape[1]), fm.dtype)], 0
+                    )
         use_cache = self.scfg.cache_size > 0
         out_s, out_i = [], []
         for i in range(0, queries.shape[0], mb):
             t0 = time.perf_counter()
             q_np = queries[i : i + mb]
+            fl = fm if fm is None or fm.ndim == 1 else fm[i : i + mb]
+            fl_dev = jnp.asarray(fl) if fl is not None else None
             if self._segmented:
                 # The segmented reader encodes per search (its global-stats
                 # view owns any fitted model), so key on the raw query
                 # bytes; the epoch in the key still pins the snapshot.
-                key = self._cache_key(q_np, None) if use_cache else None
+                key = self._cache_key(q_np, None, fl) if use_cache else None
                 q = q_rep = None
             else:
                 q = bruteforce.l2_normalize(jnp.asarray(q_np))
                 q_rep = self.ann.pipeline.encoder(self.ann.index, q)
-                key = self._cache_key(q_rep, q) if use_cache else None
+                key = self._cache_key(q_rep, q, fl) if use_cache else None
             if use_cache and key in self._cache:
                 self._cache.move_to_end(key)
                 s_np, i_np = self._cache[key]
@@ -286,19 +351,23 @@ class AnnService:
                     s, ids = self.ann.search(
                         jnp.asarray(q_np), k=self.scfg.k,
                         depth=self.scfg.depth, rerank=self.scfg.rerank,
-                        use_kernel=self._uk,
+                        use_kernel=self._uk, filter_mask=fl_dev,
                     )
                 elif self._search is not None:
-                    if self._bm is not None:
-                        s, ids = self._search(self.ann.index, self._bm, q_rep, q)
+                    args = (self.ann.index,) + (
+                        (self._bm,) if self._bm is not None else ()
+                    ) + (q_rep, q)
+                    if fl_dev is not None:
+                        s, ids = self._search_filtered(*args, fl_dev)
                     else:
-                        s, ids = self._search(self.ann.index, q_rep, q)
+                        s, ids = self._search(*args)
                 else:
                     s, ids = pl.match_rerank(
                         self._matcher(), self.ann.index, q_rep, q,
                         self.scfg.k, self.scfg.depth, self.scfg.rerank,
                         bm=self._bm, use_kernel=self._uk,
                         reranker=self.ann.pipeline.reranker,
+                        filt=fl_dev,
                     )
                 s_np = np.asarray(s)   # np.asarray blocks: wall time
                 i_np = np.asarray(ids)  # below covers device compute
@@ -313,6 +382,10 @@ class AnnService:
             self._lat_s.append(time.perf_counter() - t0)
         self.queries_served += b
         return np.concatenate(out_s)[:b], np.concatenate(out_i)[:b]
+
+    # ``search`` is the public name (filter= / plan= per docs/DESIGN.md
+    # §13); ``search_batch`` predates it and stays as the primary def.
+    search = search_batch
 
     def reset_latency(self) -> None:
         """Drop recorded batch latencies (e.g. after a warmup/compile batch,

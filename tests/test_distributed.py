@@ -106,6 +106,48 @@ def test_sharded_blockmax_search_and_rerank_padding_mask():
     """)
 
 
+def test_sharded_filtered_search_equals_local_filtered():
+    run_subprocess("""
+    from repro.core import bruteforce, distributed, fakewords
+    from repro.core import pipeline as pl
+    from repro.core.types import FakeWordsConfig
+    rng = np.random.default_rng(5)
+    vecs = jnp.asarray(rng.normal(size=(1024, 32)).astype(np.float32))
+    qs = vecs[:8]
+    cfg = FakeWordsConfig(quantization=50)
+    mesh = jax.make_mesh((8,), ("data",))
+    idx_sh = distributed.build_sharded(mesh, vecs, cfg, ("data",))
+    search = distributed.make_sharded_search(
+        mesh, cfg, ("data",), k=10, depth=64, rerank=True, filtered=True)
+    qn = bruteforce.l2_normalize(qs)
+    q_tf = fakewords.encode_queries(qn, cfg)
+    idx = fakewords.build(vecs, cfg)
+    matcher = pl.make_matcher(cfg)
+    for ratio in (0.01, 0.1, 0.5):
+        m = (rng.random(1024) < ratio).astype(np.int32)
+        m[:16] = 1  # guarantee >= k survivors
+        filt = jnp.asarray(m)
+        s_sh, i_sh = search(idx_sh, q_tf, qn, filt)
+        # local reference: the same one-pass in-match filter
+        s_l, i_l = pl.match_rerank(matcher, idx, q_tf, qn, k=10, depth=64,
+                                   rerank=True, filt=filt)
+        np.testing.assert_array_equal(np.asarray(i_sh), np.asarray(i_l))
+        assert ((np.asarray(i_sh) < 0) |
+                (m[np.maximum(np.asarray(i_sh), 0)] != 0)).all()
+    # all-ones == the unfiltered sharded search bit-for-bit
+    plain = distributed.make_sharded_search(
+        mesh, cfg, ("data",), k=10, depth=64, rerank=True)
+    s0, i0 = plain(idx_sh, q_tf, qn)
+    s1, i1 = search(idx_sh, q_tf, qn, jnp.ones((1024,), jnp.int32))
+    np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+    np.testing.assert_array_equal(np.asarray(s0), np.asarray(s1))
+    # all-zeros: padded, never NaN
+    s2, i2 = search(idx_sh, q_tf, qn, jnp.zeros((1024,), jnp.int32))
+    assert (np.asarray(i2) == -1).all() and not np.isnan(np.asarray(s2)).any()
+    print("sharded filtered ok")
+    """)
+
+
 def test_sharded_gnn_full_graph_equals_single_device():
     run_subprocess("""
     from repro.models import gnn

@@ -1,0 +1,377 @@
+"""FilterMask / QueryPlan coverage (docs/DESIGN.md §13): predicate bitmaps
+masked INSIDE the match stage, kernel==XLA exact-id parity at every
+selectivity tier (including quantized postings and blockmax), degenerate
+all-filtered padding, deletes∧predicate composition, and fusion math.
+
+The no-filter paths must stay bitwise identical to pre-filter main: the
+``filt=None`` dispatch shares the exact unfiltered kernels, asserted here by
+comparing all-ones-mask output against the unfiltered call.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import bruteforce, eval as ev, plan
+from repro.core import pipeline as pl
+from repro.core.index import AnnIndex
+from repro.core.segments import IndexWriter
+from repro.core.types import (
+    BruteForceConfig,
+    DocMetadata,
+    FakeWordsConfig,
+    KdTreeConfig,
+    LexicalLshConfig,
+)
+
+RNG = np.random.default_rng(31)
+SELECTIVITIES = (0.01, 0.1, 0.5)
+
+
+def _mask(n, ratio, rng=None, min_keep=16):
+    """Random keep-bitmap at ``ratio`` selectivity with >= min_keep kept."""
+    rng = rng or np.random.default_rng(int(ratio * 1000) + 7)
+    m = (rng.random(n) < ratio).astype(np.int32)
+    short = min_keep - int(m.sum())
+    if short > 0:
+        m[rng.choice(np.flatnonzero(m == 0), short, replace=False)] = 1
+    return jnp.asarray(m)
+
+
+def _exact_filtered_ids(vectors, queries, mask, k):
+    """Brute-force ground truth over the kept sub-corpus, in global ids."""
+    kept = np.flatnonzero(np.asarray(mask))
+    vn = bruteforce.l2_normalize(jnp.asarray(vectors)[kept])
+    qn = bruteforce.l2_normalize(jnp.asarray(queries))
+    _, gi = jax.lax.top_k(qn @ vn.T, min(k, len(kept)))
+    return kept[np.asarray(gi)]
+
+
+# -- kernel == XLA exact ids at every selectivity tier -----------------------
+
+
+FILTER_CONFIGS = [
+    (FakeWordsConfig(quantization=40), "fp32"),
+    (FakeWordsConfig(quantization=40), "int8"),
+    (FakeWordsConfig(quantization=40), "int4"),
+    (FakeWordsConfig(quantization=40, scoring="dot"), "fp32"),
+    (FakeWordsConfig(quantization=40, scoring="dot"), "int8"),
+    (LexicalLshConfig(buckets=64, hashes=2), "fp32"),
+    (KdTreeConfig(dims=8, backend="scan"), "fp32"),
+    (BruteForceConfig(), "fp32"),
+]
+
+
+def _cfg_id(p):
+    cfg, pp = p
+    name = f"fakewords-{cfg.scoring}" if isinstance(cfg, FakeWordsConfig) \
+        else type(cfg).__name__
+    return f"{name}-{pp}"
+
+
+@pytest.mark.parametrize("ratio", SELECTIVITIES)
+@pytest.mark.parametrize("cfg_pp", FILTER_CONFIGS, ids=_cfg_id)
+def test_filtered_kernel_equals_xla_ids(small_corpus, cfg_pp, ratio):
+    """One-pass in-kernel filtering must return EXACTLY the ids the XLA
+    reference path returns, at 1% / 10% / 50% selectivity, for every
+    encoding and for int8/int4 quantized primary postings."""
+    cfg, pp = cfg_pp
+    v = jnp.asarray(small_corpus[:1024])
+    q = jnp.asarray(small_corpus[:8])
+    kwargs = {} if pp == "fp32" else {"primary_postings": pp,
+                                      "rerank_store": "int8"}
+    ann = AnnIndex.build(v, cfg, **kwargs)
+    filt = _mask(1024, ratio)
+    s_x, i_x = ann.search(q, k=10, depth=64, use_kernel=False, filt=filt)
+    s_k, i_k = ann.search(q, k=10, depth=64, use_kernel=True, filt=filt)
+    np.testing.assert_array_equal(np.asarray(i_x), np.asarray(i_k))
+    # every returned id is kept by the mask (or the -1 pad)
+    ids = np.asarray(i_x)
+    keep = np.asarray(filt)
+    assert ((ids < 0) | (keep[np.maximum(ids, 0)] != 0)).all()
+
+
+@pytest.mark.parametrize("ratio", SELECTIVITIES)
+def test_filtered_blockmax_beta1_equals_dense(small_corpus, ratio):
+    """beta=1.0 (all blocks kept) blockmax + filter == dense filtered search
+    exactly: stage-1 bounds stay unfiltered (admissible), stage-2 masks."""
+    v = jnp.asarray(small_corpus[:512])
+    cfg = FakeWordsConfig(quantization=40)
+    dense = AnnIndex.build(v, cfg)
+    bm = AnnIndex.build(v, cfg, blockmax_keep=8, blockmax_block_size=64)
+    assert bm.bm.num_blocks == 8  # keep == num_blocks: beta = 1.0
+    filt = _mask(512, ratio)
+    q = jnp.asarray(small_corpus[:8])
+    for uk in (False, True):
+        s_d, i_d = dense.search(q, k=10, depth=50, use_kernel=uk, filt=filt)
+        s_b, i_b = bm.search(q, k=10, depth=50, use_kernel=uk, filt=filt)
+        np.testing.assert_array_equal(np.asarray(i_d), np.asarray(i_b))
+
+
+def test_filtered_recall_exact_on_bruteforce(small_corpus):
+    """Filtered brute-force == exact top-k over the kept sub-corpus, and
+    eval.recall_at(filter_mask=) scores it 1.0."""
+    v = small_corpus[:1024]
+    q = small_corpus[:8]
+    ann = AnnIndex.build(jnp.asarray(v), BruteForceConfig())
+    for ratio in SELECTIVITIES:
+        filt = _mask(1024, ratio)
+        _, ids = ann.search(jnp.asarray(q), k=10, depth=64,
+                            use_kernel=False, filt=filt)
+        truth = _exact_filtered_ids(v, q, filt, 10)
+        kk = truth.shape[1]
+        np.testing.assert_array_equal(np.asarray(ids)[:, :kk], truth)
+        full = AnnIndex.build(jnp.asarray(v), BruteForceConfig()).search(
+            jnp.asarray(q), k=10, depth=64, use_kernel=False)[1]
+        # unfiltered truth scored under the mask: perfect filtered recall
+        r = float(ev.recall_at(jnp.asarray(truth), ids[:, :kk],
+                               filter_mask=filt))
+        assert r == 1.0
+        assert float(ev.recall_at(full, ids, filter_mask=filt)) <= 1.0
+
+
+# -- no-filter and all-ones regression ---------------------------------------
+
+
+@pytest.mark.parametrize("cfg_pp", FILTER_CONFIGS, ids=_cfg_id)
+def test_all_ones_mask_matches_unfiltered_bitwise(small_corpus, cfg_pp):
+    """An all-keep mask must reproduce the unfiltered search bit-for-bit
+    (scores AND ids) — the in-loop masking is exactly a no-op then."""
+    cfg, pp = cfg_pp
+    v = jnp.asarray(small_corpus[:1024])
+    q = jnp.asarray(small_corpus[:8])
+    kwargs = {} if pp == "fp32" else {"primary_postings": pp,
+                                      "rerank_store": "int8"}
+    ann = AnnIndex.build(v, cfg, **kwargs)
+    ones = jnp.ones((1024,), jnp.int32)
+    for uk in (False, True):
+        s0, i0 = ann.search(q, k=10, depth=64, use_kernel=uk)
+        s1, i1 = ann.search(q, k=10, depth=64, use_kernel=uk, filt=ones)
+        np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+        np.testing.assert_array_equal(np.asarray(s0), np.asarray(s1))
+
+
+# -- degenerate masks ---------------------------------------------------------
+
+
+@pytest.mark.parametrize("rerank", [False, True])
+def test_all_docs_filtered_returns_padding_no_nans(small_corpus, rerank):
+    """All-zeros mask: every slot is the (-1, -inf) pad, no NaNs anywhere,
+    through match AND rerank, kernel and XLA."""
+    v = jnp.asarray(small_corpus[:512])
+    ann = AnnIndex.build(v, FakeWordsConfig(quantization=40))
+    zeros = jnp.zeros((512,), jnp.int32)
+    q = jnp.asarray(small_corpus[:4])
+    for uk in (False, True):
+        s, i = ann.search(q, k=10, depth=50, rerank=rerank,
+                          use_kernel=uk, filt=zeros)
+        assert (np.asarray(i) == -1).all()
+        assert not np.isnan(np.asarray(s)).any()
+        assert (np.asarray(s) == -np.inf).all()
+
+
+def test_all_filtered_segmented_no_nans(rng):
+    v = rng.normal(size=(600, 32)).astype(np.float32)
+    w = IndexWriter(FakeWordsConfig(quantization=30), merge_policy=None)
+    w.add(jnp.asarray(v[:300]))
+    w.add(jnp.asarray(v[300:]))
+    reader = w.refresh()
+    zeros = jnp.zeros((reader.max_doc,), jnp.int32)
+    s, i = reader.search(jnp.asarray(v[:4]), k=10, depth=40,
+                         use_kernel=False, filter_mask=zeros)
+    assert (np.asarray(i) == -1).all()
+    assert not np.isnan(np.asarray(s)).any()
+
+
+# -- deletes ∧ predicate composition -----------------------------------------
+
+
+def test_filter_and_deletes_compose_to_one_mask(rng):
+    """A predicate filter over a segmented index with deletes must equal
+    applying both restrictions sequentially: exact top-k over the docs that
+    are BOTH live and predicate-kept."""
+    v = rng.normal(size=(800, 32)).astype(np.float32)
+    w = IndexWriter(BruteForceConfig(), merge_policy=None)
+    w.add(jnp.asarray(v[:400]))
+    w.add(jnp.asarray(v[400:]))
+    dead = rng.choice(800, 120, replace=False)
+    w.delete(dead.tolist())
+    reader = w.refresh()
+    pred = np.asarray(_mask(800, 0.5, rng))
+    q = jnp.asarray(v[:6])
+    _, ids = reader.search(q, k=10, depth=128, use_kernel=False,
+                           filter_mask=jnp.asarray(pred))
+    live = np.ones(800, bool)
+    live[dead] = False
+    both = pred.astype(bool) & live
+    truth = _exact_filtered_ids(v, v[:6], both.astype(np.int32), 10)
+    np.testing.assert_array_equal(np.asarray(ids), truth)
+    # deleted or predicate-rejected docs never surface
+    assert not np.isin(np.asarray(ids), np.flatnonzero(~both)).any()
+
+
+def test_native_filter_equals_depth_inflated_fallback(small_corpus):
+    """FilterMask native=True (one kernel pass) returns the ids of the
+    native=False historical path (depth inflation + post-mask)."""
+    v = jnp.asarray(small_corpus[:512])
+    cfg = FakeWordsConfig(quantization=40)
+    ann = AnnIndex.build(v, cfg)
+    from repro.core import fakewords
+    qn = bruteforce.l2_normalize(jnp.asarray(small_corpus[:8]))
+    q_tf = fakewords.encode_queries(qn, cfg, normalized=True)
+    fm = pl.FilterMask(inner=pl.make_matcher(cfg), extra=512)
+    mask = _mask(512, 0.1)
+    s_n, i_n = fm(ann.index, q_tf, 50, mask, use_kernel=False, native=True)
+    s_f, i_f = fm(ann.index, q_tf, 50, mask, use_kernel=False, native=False)
+    np.testing.assert_array_equal(np.asarray(i_n), np.asarray(i_f))
+
+
+# -- per-query (B, N) masks ---------------------------------------------------
+
+
+def test_per_query_masks_match_per_row_single_masks(small_corpus):
+    """(B, N) batched masks == running each row with its own (N,) mask."""
+    v = jnp.asarray(small_corpus[:512])
+    ann = AnnIndex.build(v, FakeWordsConfig(quantization=40))
+    q = jnp.asarray(small_corpus[:4])
+    rows = [np.asarray(_mask(512, r, np.random.default_rng(i)))
+            for i, r in enumerate((0.05, 0.1, 0.3, 0.8))]
+    fm = jnp.asarray(np.stack(rows))
+    for uk in (False, True):
+        s_b, i_b = ann.search(q, k=10, depth=50, use_kernel=uk, filt=fm)
+        for r in range(4):
+            s_1, i_1 = ann.search(q[r:r + 1], k=10, depth=50, use_kernel=uk,
+                                  filt=jnp.asarray(rows[r]))
+            np.testing.assert_array_equal(np.asarray(i_b)[r], np.asarray(i_1)[0])
+
+
+# -- DocMetadata predicates ---------------------------------------------------
+
+
+def test_doc_metadata_predicates_and_persistence(small_corpus, tmp_path):
+    """Predicate bitmaps built from DocMetadata fields drive filtered
+    search, and metadata round-trips through save/load."""
+    n = 512
+    v = jnp.asarray(small_corpus[:n])
+    cat = RNG.integers(0, 4, n)
+    year = RNG.integers(2000, 2020, n)
+    ann = AnnIndex.build(v, FakeWordsConfig(quantization=40),
+                         metadata={"cat": cat, "year": year})
+    md = ann.metadata
+    assert md.field_names == ("cat", "year") and md.num_docs == n
+    np.testing.assert_array_equal(np.asarray(md.eq_mask("cat", 2)), cat == 2)
+    np.testing.assert_array_equal(
+        np.asarray(md.range_mask("year", 2005, 2010)),
+        (year >= 2005) & (year < 2010))
+    np.testing.assert_array_equal(
+        np.asarray(md.in_mask("cat", (0, 3))), np.isin(cat, [0, 3]))
+    filt = md.eq_mask("cat", 2).astype(jnp.int32)
+    _, ids = ann.search(v[:4], k=10, depth=64, use_kernel=False, filt=filt)
+    kept = np.asarray(ids)
+    assert (cat[kept[kept >= 0]] == 2).all()
+    # save/load round trip carries the metadata and the filtered results
+    path = str(tmp_path / "md.ann")
+    ann.save(path)
+    loaded = AnnIndex.load(path)
+    assert loaded.metadata.field_names == ("cat", "year")
+    _, ids2 = loaded.search(v[:4], k=10, depth=64, use_kernel=False, filt=filt)
+    np.testing.assert_array_equal(kept, np.asarray(ids2))
+
+
+def test_doc_metadata_through_writer_flush_and_merge(rng):
+    """Metadata rides per segment through flush and merge; the merged
+    reader's global_metadata() drops deleted rows' influence correctly."""
+    v = rng.normal(size=(400, 32)).astype(np.float32)
+    cat = rng.integers(0, 3, 400)
+    w = IndexWriter(FakeWordsConfig(quantization=30), merge_policy=None)
+    w.add(jnp.asarray(v[:200]), metadata={"cat": cat[:200]})
+    w.add(jnp.asarray(v[200:]), metadata={"cat": cat[200:]})
+    reader = w.refresh()
+    md = reader.global_metadata()
+    np.testing.assert_array_equal(np.asarray(md.values[:, 0]), cat)
+    filt = md.eq_mask("cat", 1).astype(jnp.int32)
+    _, ids = reader.search(jnp.asarray(v[:4]), k=10, depth=64,
+                           use_kernel=False, filter_mask=filt)
+    kept = np.asarray(ids)
+    assert (cat[kept[kept >= 0]] == 1).all()
+
+
+# -- fusion math (QueryPlan / FusionStage) -----------------------------------
+
+
+def test_combine_by_id_sum_and_max():
+    ids = jnp.asarray([[3, 1, 3, -1]])
+    vals = jnp.asarray([[1.0, 5.0, 2.0, 9.0]])
+    s, i = plan.combine_by_id(ids, vals, k=2, agg="sum")
+    np.testing.assert_array_equal(np.asarray(i), [[1, 3]])
+    np.testing.assert_allclose(np.asarray(s), [[5.0, 3.0]])
+    s, i = plan.combine_by_id(ids, vals, k=3, agg="max")
+    np.testing.assert_array_equal(np.asarray(i)[0, :2], [1, 3])
+    np.testing.assert_allclose(np.asarray(s)[0, :2], [5.0, 2.0])
+    assert np.asarray(i)[0, 2] == -1 and np.asarray(s)[0, 2] == -np.inf
+
+
+def test_rrf_formula_exact():
+    """fuse(method='rrf') computes sum_p w_p / (rrf_k + rank_p), rank 1."""
+    ids_a = jnp.asarray([[7, 3, 5]])
+    ids_b = jnp.asarray([[3, 9, -1]])
+    sc = jnp.asarray([[0.9, 0.8, 0.7]])
+    s, i = plan.fuse([(sc, ids_a), (sc, ids_b)], k=4,
+                     method="rrf", rrf_k=60.0)
+    exp = {7: 1 / 61, 3: 1 / 62 + 1 / 61, 5: 1 / 63, 9: 1 / 62}
+    order = sorted(exp, key=exp.get, reverse=True)
+    np.testing.assert_array_equal(np.asarray(i)[0], order)
+    np.testing.assert_allclose(
+        np.asarray(s)[0], [exp[d] for d in order], rtol=1e-6)
+
+
+def test_fusion_stage_hybrid_beats_weaker_retriever(small_corpus):
+    """RRF of two retrievers >= the weaker one alone on recall@10 (sanity
+    floor; the >= max gate runs on the full benchmark in BENCH_7.json)."""
+    v = jnp.asarray(small_corpus)
+    q = small_corpus[:32]
+    lex = AnnIndex.build(v, FakeWordsConfig(quantization=30))
+    dense = AnnIndex.build(v, FakeWordsConfig(quantization=30, scoring="dot"))
+    k_sub = 30
+    plans = [
+        plan.QueryPlan(search=lambda qq, idx=lex: idx.search(
+            qq, k=k_sub, depth=100, use_kernel=False), label="lex"),
+        plan.QueryPlan(search=lambda qq, idx=dense: idx.search(
+            qq, k=k_sub, depth=100, use_kernel=False), label="dense"),
+    ]
+    stage = plan.FusionStage(plans=tuple(plans), k=10)
+    s, i = stage.run(jnp.asarray(q))
+    assert i.shape == (32, 10)
+    _, truth = bruteforce.exact_topk(v, jnp.asarray(q), 10, use_kernel=False)
+    r_fused = float(ev.recall_at(truth, i))
+    recalls = [float(ev.recall_at(truth, p.run(jnp.asarray(q))[1][:, :10]))
+               for p in plans]
+    assert r_fused >= min(recalls), (r_fused, recalls)
+
+
+def test_multi_vector_aggregation_max_and_sum():
+    """Multi-vector docs: vector-level hits aggregate to doc level via the
+    doc_map, max-sim picks the best vector, sum adds them."""
+    # 6 vectors -> 3 docs: doc_map[v] = v // 2
+    doc_map = jnp.asarray([0, 0, 1, 1, 2, 2])
+    scores = jnp.asarray([[0.9, 0.5, 0.8, 0.1]])
+    vec_ids = jnp.asarray([[0, 1, 2, 5]])
+    s, i = plan.aggregate_by_doc(scores, vec_ids, doc_map, k=3, agg="max")
+    np.testing.assert_array_equal(np.asarray(i), [[0, 1, 2]])
+    np.testing.assert_allclose(np.asarray(s), [[0.9, 0.8, 0.1]])
+    s, i = plan.aggregate_by_doc(scores, vec_ids, doc_map, k=3, agg="sum")
+    np.testing.assert_array_equal(np.asarray(i)[0, 0], 0)
+    np.testing.assert_allclose(np.asarray(s)[0, 0], 1.4)
+
+
+def test_multi_vector_plan_end_to_end(small_corpus):
+    """MultiVectorPlan over a 2-vectors-per-doc corpus: searching with a
+    doc's own vector surfaces that doc first under max-sim."""
+    vecs = jnp.asarray(small_corpus[:256])  # 256 vectors = 128 docs
+    doc_map = jnp.arange(256) // 2
+    ann = AnnIndex.build(vecs, BruteForceConfig())
+    inner = plan.QueryPlan(search=lambda q: ann.search(
+        q, k=20, depth=20, use_kernel=False))
+    mv = plan.MultiVectorPlan(inner=inner, doc_map=doc_map, k=5, agg="max")
+    s, i = mv.run(jnp.asarray(small_corpus[:8]))
+    np.testing.assert_array_equal(np.asarray(i)[:, 0], np.arange(8) // 2)
