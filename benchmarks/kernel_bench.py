@@ -619,6 +619,172 @@ def hybrid_ab(
     return rows, summary
 
 
+def packed_ab(
+    n_docs: int = 8192, dim: int = 64, batch: int = 64, depth: int = 100,
+    k: int = 10, n_calls: int = 20,
+) -> Tuple[List[Dict], Dict]:
+    """Packed single-launch vs per-segment loop (docs/DESIGN.md §14): QPS
+    and p50/p99 at 1 / 4 / 16 segments over the same corpus, with the ids
+    asserted identical pair-wise — the packed superbuffer is an execution
+    strategy, not an approximation.  The per-segment loop pays one launch
+    (encode + match + top-k + rerank + merge) per segment; packed pays one
+    launch total, so the A/B spread at 16 segments IS the launch tax the
+    superbuffer erases."""
+    from repro.core.segments import IndexWriter
+
+    rng = np.random.default_rng(0)
+    vecs = rng.normal(size=(n_docs, dim)).astype(np.float32)
+    queries = jnp.asarray(vecs[:batch])
+    uk = None if jax.default_backend() == "tpu" else False
+    cfg = FakeWordsConfig(quantization=50)
+    rows: List[Dict] = []
+    summary: Dict = {"depth": depth, "k": k, "n_docs": n_docs}
+
+    def timed(f):
+        jax.block_until_ready(f())  # compile
+        lat = []
+        for _ in range(n_calls):
+            t0 = time.perf_counter()
+            jax.block_until_ready(f())
+            lat.append(time.perf_counter() - t0)
+        lat_ms = np.asarray(lat, np.float64) * 1e3
+        _, ids = f()
+        return lat_ms, np.asarray(ids)
+
+    for n_seg in (1, 4, 16):
+        w = IndexWriter(cfg, use_kernel=uk, merge_policy=None)
+        for chunk in np.array_split(vecs, n_seg):
+            w.add(chunk)
+            w.flush()
+        reader = w.refresh()
+        per_mode = {}
+        for mode, flag in (("loop", False), ("packed", True)):
+            lat_ms, ids = timed(
+                lambda flag=flag: reader.search(
+                    queries, k=k, depth=depth, rerank=True, packed=flag))
+            p50 = float(np.percentile(lat_ms, 50))
+            row = {
+                "mode": mode, "segments": n_seg,
+                "qps": round(batch / p50 * 1e3, 1),
+                "p50_ms": round(p50, 3),
+                "p99_ms": round(float(np.percentile(lat_ms, 99)), 3),
+            }
+            rows.append(row)
+            per_mode[mode] = (row, ids)
+        ids_match = bool(
+            np.array_equal(per_mode["loop"][1], per_mode["packed"][1]))
+        for row, _ in per_mode.values():
+            row["ids_match"] = ids_match
+        summary[n_seg] = {
+            "loop_qps": per_mode["loop"][0]["qps"],
+            "packed_qps": per_mode["packed"][0]["qps"],
+            "speedup": round(per_mode["packed"][0]["qps"]
+                             / per_mode["loop"][0]["qps"], 3),
+            "ids_match": ids_match,
+        }
+    summary["gate_16seg_speedup"] = summary[16]["speedup"]
+    return rows, summary
+
+
+def async_ab(
+    n_docs: int = 8192, dim: int = 64, n_queries: int = 256, depth: int = 100,
+    k: int = 10, max_wait_ms: float = 2.0, max_batch: int = 16,
+) -> Tuple[List[Dict], Dict]:
+    """Async micro-batching vs sequential single-query serving at a fixed
+    latency SLO (docs/DESIGN.md §14): the same ``n_queries`` singles are
+    served once as back-to-back ``search_batch`` calls (one launch each)
+    and once through the admission queue, where backlogged singles coalesce
+    into up-to-``max_batch``-row launches.  Both run the packed segmented
+    path over the same 4-segment index, so results are identical rows and
+    the QPS delta is pure launch amortization."""
+    from repro.core.segments import IndexWriter
+    from repro.serve.ann_service import AnnService, AnnServiceConfig
+
+    rng = np.random.default_rng(0)
+    vecs = rng.normal(size=(n_docs, dim)).astype(np.float32)
+    pool = np.asarray(vecs[:n_queries])
+    uk = None if jax.default_backend() == "tpu" else False
+    cfg = FakeWordsConfig(quantization=50)
+    w = IndexWriter(cfg, use_kernel=uk, merge_policy=None)
+    for chunk in np.array_split(vecs, 4):
+        w.add(chunk)
+        w.flush()
+    w.refresh()
+    svc = AnnService(
+        writer=w,
+        service=AnnServiceConfig(k=k, depth=depth, rerank=True,
+                                 max_batch=max_batch,
+                                 max_wait_s=max_wait_ms / 1e3,
+                                 queue_depth=2 * n_queries),
+    )
+    svc.search_batch(jnp.asarray(pool[:1]))  # compile
+    svc.reset_latency()
+
+    t0 = time.perf_counter()
+    seq_ids = [np.asarray(svc.search_batch(jnp.asarray(q[None, :]))[1])
+               for q in pool]
+    seq_s = time.perf_counter() - t0
+    seq_stats = svc.stats()
+
+    svc.reset_latency()
+    svc.start_async()
+    try:
+        t0 = time.perf_counter()
+        futs = [svc.search_async(q) for q in pool]
+        async_ids = [np.asarray(f.result(timeout=60)[1]) for f in futs]
+        async_s = time.perf_counter() - t0
+        st = svc.stats()
+    finally:
+        svc.stop_async()
+    ids_match = bool(np.array_equal(np.concatenate(seq_ids),
+                                    np.concatenate(async_ids)))
+
+    rows = [
+        {"mode": "sequential", "qps": round(n_queries / seq_s, 1),
+         "p50_ms": seq_stats["lat_p50_ms"], "p99_ms": seq_stats["lat_p99_ms"],
+         "launches": n_queries, "ids_match": ids_match},
+        {"mode": "async-batched", "qps": round(n_queries / async_s, 1),
+         "p50_ms": st["req_p50_ms"], "p99_ms": st["req_p99_ms"],
+         "launches": st["async_launches"], "ids_match": ids_match},
+    ]
+    summary = {
+        "n_queries": n_queries, "max_batch": max_batch,
+        "max_wait_ms": max_wait_ms,
+        "sequential_qps": rows[0]["qps"], "async_qps": rows[1]["qps"],
+        "speedup": round(rows[1]["qps"] / rows[0]["qps"], 3),
+        "batch_per_launch": round(n_queries / max(1, st["async_launches"]),
+                                  2),
+        "rejected": st["rejected"],
+        "ids_match": ids_match,
+    }
+    return rows, summary
+
+
+def emit_bench8(
+    path: str, n_docs: int = 8192, dim: int = 64, batch: int = 64,
+) -> Dict:
+    """Write the packed single-launch + async micro-batching artifact
+    validated in CI (benchmarks/validate_bench8.py): packed-vs-looped
+    QPS/p50/p99 at 1/4/16 segments with identical ids, and async-batched
+    vs sequential single-query QPS at a fixed 2 ms coalescing SLO."""
+    p_rows, p_summary = packed_ab(n_docs, dim, batch)
+    a_rows, a_summary = async_ab(n_docs, dim)
+    bench = {
+        "bench": 8,
+        "backend": jax.default_backend(),
+        "n_docs": n_docs,
+        "dim": dim,
+        "batch": batch,
+        "packed_ab": p_rows,
+        "async_ab": a_rows,
+        "summary": {"packed": p_summary, "async": a_summary},
+    }
+    with open(path, "w") as f:
+        json.dump(bench, f, indent=2)
+        f.write("\n")
+    return bench
+
+
 def emit_bench7(
     path: str, n_docs: int = 20_000, dim: int = 300, batch: int = 64,
 ) -> Dict:
@@ -798,6 +964,19 @@ if __name__ == "__main__":
         h = bench["summary"]["hybrid"]
         print(f"hybrid: rrf {h['rrf']} vs classic {h['classic']} / "
               f"dense {h['dense']} (gate {h['gate_rrf_ge_max']})")
+        print(f"wrote {out}")
+    elif "--bench8" in sys.argv:
+        out = os.path.join(os.path.dirname(__file__), "BENCH_8.json")
+        bench = emit_bench8(out)
+        _print_rows(bench["packed_ab"])
+        _print_rows(bench["async_ab"])
+        p = bench["summary"]["packed"]
+        a = bench["summary"]["async"]
+        print(f"packed: {p[16]['speedup']:.2f}x QPS over the per-segment "
+              f"loop at 16 segments (ids_match={p[16]['ids_match']}); "
+              f"async: {a['speedup']:.2f}x sequential at "
+              f"{a['batch_per_launch']:.1f} rows/launch "
+              f"(SLO {a['max_wait_ms']}ms)")
         print(f"wrote {out}")
     else:
         main()

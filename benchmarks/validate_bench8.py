@@ -1,0 +1,72 @@
+"""CI gate for the packed single-launch + async micro-batching artifact
+(docs/DESIGN.md §14).
+
+    PYTHONPATH=src python benchmarks/validate_bench8.py [path]
+
+Checks that ``benchmarks/BENCH_8.json`` carries the packed-vs-looped A/B
+rows at every segment count (1 / 4 / 16), that packed and looped ids are
+IDENTICAL at every tier (the superbuffer is an execution strategy, not an
+approximation — any drift is a packing bug), that packed beats the
+per-segment loop by >= 1.5x QPS at 16 segments (the launch-tax acceptance
+bar), and that the async micro-batcher beats sequential single-query
+``search_batch`` throughput on the same index with identical ids and no
+shed requests.
+"""
+import json
+import sys
+
+SEGMENTS = (1, 4, 16)
+PACKED_KEYS = {"mode", "segments", "qps", "p50_ms", "p99_ms", "ids_match"}
+ASYNC_KEYS = {"mode", "qps", "p50_ms", "p99_ms", "launches", "ids_match"}
+MIN_16SEG_SPEEDUP = 1.5
+
+
+def validate(path: str) -> None:
+    with open(path) as f:
+        bench = json.load(f)
+    assert bench.get("bench") == 8, bench.get("bench")
+
+    rows = bench.get("packed_ab")
+    assert rows, "no packed_ab rows"
+    by_seg = {}
+    for row in rows:
+        missing = PACKED_KEYS - set(row)
+        assert not missing, f"packed row {row} missing {missing}"
+        assert row["qps"] > 0 and row["p50_ms"] > 0
+        by_seg.setdefault(row["segments"], {})[row["mode"]] = row
+    assert set(by_seg) == set(SEGMENTS), sorted(by_seg)
+    for n_seg, modes in by_seg.items():
+        assert set(modes) == {"loop", "packed"}, (n_seg, sorted(modes))
+        for row in modes.values():
+            assert row["ids_match"] is True, (n_seg, row)
+    speedup = by_seg[16]["packed"]["qps"] / by_seg[16]["loop"]["qps"]
+    assert speedup >= MIN_16SEG_SPEEDUP, (
+        f"packed gate: {speedup:.2f}x < {MIN_16SEG_SPEEDUP}x at 16 segments")
+    # JSON stringifies the int segment keys in the summary.
+    p_sum = bench["summary"]["packed"]
+    assert p_sum["gate_16seg_speedup"] >= MIN_16SEG_SPEEDUP, p_sum
+
+    a_rows = bench.get("async_ab")
+    assert a_rows, "no async_ab rows"
+    for row in a_rows:
+        missing = ASYNC_KEYS - set(row)
+        assert not missing, f"async row {row} missing {missing}"
+        assert row["ids_match"] is True, row
+    by_mode = {r["mode"]: r for r in a_rows}
+    assert set(by_mode) == {"sequential", "async-batched"}, sorted(by_mode)
+    seq, asy = by_mode["sequential"], by_mode["async-batched"]
+    assert asy["qps"] > seq["qps"], (
+        f"async gate: batched {asy['qps']} <= sequential {seq['qps']}")
+    assert asy["launches"] < seq["launches"], (asy, seq)
+    a_sum = bench["summary"]["async"]
+    assert a_sum["rejected"] == 0, a_sum
+    assert a_sum["batch_per_launch"] > 1.0, a_sum
+
+    print(f"{path} ok: packed {speedup:.2f}x loop at 16 segments "
+          f"(ids identical at {len(by_seg)} tiers), async "
+          f"{asy['qps']}/{seq['qps']} qps at "
+          f"{a_sum['batch_per_launch']:.1f} rows/launch")
+
+
+if __name__ == "__main__":
+    validate(sys.argv[1] if len(sys.argv) > 1 else "benchmarks/BENCH_8.json")

@@ -483,3 +483,81 @@ def shard_index(mesh: Mesh, index, axes: Sequence[str]):
         index,
         is_leaf=lambda x: isinstance(x, P),
     )
+
+
+# --------------------------------------------------------------------------
+# Packed segmented search over a pod (docs/DESIGN.md §14)
+# --------------------------------------------------------------------------
+
+
+def make_packed_segmented_search(
+    mesh: Mesh,
+    reader,
+    axes: Sequence[str],
+    k: int = 10,
+    depth: int = 100,
+    rerank: bool = False,
+    filter_mask=None,
+    score_tile: int = 262_144,
+    use_kernel: Optional[bool] = None,
+):
+    """Compose the packed single-launch segmented path with the pod
+    fan-out: pack a :class:`repro.core.segments.SegmentedAnnIndex`
+    snapshot into its superbuffer (``core/packed.py``), doc-shard the
+    packed leaves over ``axes``, and serve through
+    :func:`make_sharded_search`'s filtered path with the composed
+    liveDocs ∧ row-validity [∧ predicate] bitmap sharded WITH the rows.
+
+    The packed layout concatenates segments in global-id order, so packed
+    row g IS global doc id g — and ``make_sharded_search`` emits
+    ``local row + shard_offset``, so the pod returns the reader's global
+    doc ids with no remap.  ``filter_mask`` is the same (max_doc,)
+    global-id predicate bitmap ``SegmentedAnnIndex.search`` takes.
+
+    Returns ``(search_fn, sharded_index, sharded_filt)``; call as
+    ``search_fn(sharded_index, q_rep, queries, sharded_filt)`` with
+    ``q_rep = reader.encode_queries(queries)``.
+    """
+    from repro.core import packed as packed_mod
+
+    axes = tuple(axes)
+    pk = reader.packed_segments()
+    if pk is None:
+        raise ValueError(
+            "packed single-launch path unavailable for this snapshot: "
+            f"{reader._packed_err}"
+        )
+    n_shards = flat_axis_size(mesh, axes)
+    if pk.bucket % n_shards:
+        raise ValueError(
+            f"packed bucket {pk.bucket} rows not divisible by {n_shards} "
+            "shards; choose a mesh whose flattened size divides the "
+            "bucket ladder rung"
+        )
+    view = pk.view
+    if reader.quantized_rerank:
+        rerank_store = "int8"
+    elif getattr(view, "vectors", None) is not None:
+        rerank_store = "exact"
+    else:
+        rerank_store = "none"
+    pq = getattr(view, "pq", None)
+    search_fn = make_sharded_search(
+        mesh, reader.config, axes, k=k, depth=depth, rerank=rerank,
+        score_tile=score_tile, use_kernel=use_kernel,
+        rerank_store=rerank_store,
+        postings_bits=0 if pq is None else pq.bits,
+        filtered=True,
+    )
+    filt = pk.live
+    if filter_mask is not None:
+        fm = jnp.asarray(filter_mask)
+        if fm.ndim != 1 or fm.shape[0] != reader.max_doc:
+            raise ValueError(
+                "pod-sharded filtering takes a (max_doc,) per-doc bitmap "
+                f"(got shape {fm.shape}, max_doc={reader.max_doc})"
+            )
+        filt = filt & packed_mod._pad_mask_cols(fm, pk.bucket)
+    sharded_index = shard_index(mesh, view, axes)
+    sharded_filt = jax.device_put(filt, NamedSharding(mesh, P(axes)))
+    return search_fn, sharded_index, sharded_filt

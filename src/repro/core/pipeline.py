@@ -283,27 +283,33 @@ class FakeWordsMatcher:
         self, index, q_tf: jax.Array, depth: int,
         bm=None, use_kernel: Optional[bool] = None,
         filt: Optional[jax.Array] = None,
+        n_docs: Optional[int] = None,
     ) -> Tuple[jax.Array, jax.Array]:
         from repro.kernels.fused_topk import ops as fused
 
-        d = min(depth, index.num_docs)
+        # n_docs: logical row count when the stored matrix carries tail
+        # padding (core/packed.py bucket ladder); None = every stored row.
+        nd = index.num_docs if n_docs is None else n_docs
+        ndk = None if nd == index.num_docs else nd
+        d = min(depth, nd)
         if index.pq is not None:
             from repro.kernels.fused_topk import ref as fused_ref
 
             qv = self.quantized_query(index, q_tf)
             pq = index.pq
             if _use_kernel(use_kernel):
-                return fused.postings_topk(pq, qv, d, filt=filt)
+                return fused.postings_topk(pq, qv, d, filt=filt, n_docs=ndk)
             if self.score_tile is not None and index.num_docs > 2 * self.score_tile:
                 return fused_ref.streaming_topk_quantized_ref(
                     qv, pq.q, pq.scale, d, pq.bits, pq.group,
-                    tile=self.score_tile, filt=filt,
+                    tile=self.score_tile, filt=filt, n_docs=ndk,
                 )
             return fused_ref.quantized_topk_ref(
-                qv, pq.q, pq.scale, d, pq.bits, pq.group, filt=filt)
+                qv, pq.q, pq.scale, d, pq.bits, pq.group, filt=filt,
+                n_docs=ndk)
         if _use_kernel(use_kernel):
             qv, docs = self.operands(index, q_tf, dtype=jnp.int8)
-            return fused.fused_topk(qv, docs, d, filt=filt)
+            return fused.fused_topk(qv, docs, d, filt=filt, n_docs=ndk)
         qv, docs = self.operands(index, q_tf, dtype=jnp.int32)
         if self.score_tile is not None and index.num_docs > 2 * self.score_tile:
             def tile_scores(start):
@@ -312,10 +318,14 @@ class FakeWordsMatcher:
                 return self._dense_scores(qv, rows)
 
             return _streaming_topk_tiled(
-                tile_scores, index.num_docs, q_tf.shape[0], d,
+                tile_scores, nd, q_tf.shape[0], d,
                 self.score_tile, unroll=self.tile_unroll, filt=filt,
             )
-        return _dense_filtered_topk(self._dense_scores(qv, docs), d, filt)
+        scores = self._dense_scores(qv, docs)
+        if ndk is not None:
+            scores = scores[:, :nd]
+            filt = None if filt is None else filt[..., :nd]
+        return _dense_filtered_topk(scores, d, filt)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -326,14 +336,20 @@ class LshMatcher:
         self, index, sig_q: jax.Array, depth: int,
         bm=None, use_kernel: Optional[bool] = None,
         filt: Optional[jax.Array] = None,
+        n_docs: Optional[int] = None,
     ) -> Tuple[jax.Array, jax.Array]:
         from repro.core import lexical_lsh
         from repro.kernels.fused_topk import ops as fused
 
-        d = min(depth, index.num_docs)
+        nd = index.num_docs if n_docs is None else n_docs
+        ndk = None if nd == index.num_docs else nd
+        d = min(depth, nd)
         if _use_kernel(use_kernel):
-            return fused.lsh_topk(sig_q, index.sig, d, filt=filt)
+            return fused.lsh_topk(sig_q, index.sig, d, filt=filt, n_docs=ndk)
         scores = lexical_lsh.match_scores(sig_q, index.sig).astype(jnp.float32)
+        if ndk is not None:
+            scores = scores[:, :nd]
+            filt = None if filt is None else filt[..., :nd]
         return _dense_filtered_topk(scores, d, filt)
 
 
@@ -346,19 +362,26 @@ class KdScanMatcher:
         self, index, q_reduced: jax.Array, depth: int,
         bm=None, use_kernel: Optional[bool] = None,
         filt: Optional[jax.Array] = None,
+        n_docs: Optional[int] = None,
     ) -> Tuple[jax.Array, jax.Array]:
         from repro.kernels.fused_topk import ops as fused
 
-        d = min(depth, index.num_docs)
+        nd = index.num_docs if n_docs is None else n_docs
+        ndk = None if nd == index.num_docs else nd
+        d = min(depth, nd)
         if _use_kernel(use_kernel):
             lifted = (
                 index.lifted if index.lifted is not None
                 else fused.lift_l2(index.reduced)
             )
-            return fused.scan_l2_topk(lifted, q_reduced, d, filt=filt)
+            return fused.scan_l2_topk(
+                lifted, q_reduced, d, filt=filt, n_docs=ndk)
         d_norm2 = jnp.sum(index.reduced**2, axis=-1)  # (N,)
         dots = q_reduced @ index.reduced.T  # (B, N)
         neg_d2 = 2.0 * dots - d_norm2[None, :]
+        if ndk is not None:
+            neg_d2 = neg_d2[:, :nd]
+            filt = None if filt is None else filt[..., :nd]
         return _dense_filtered_topk(neg_d2, d, filt)
 
 
@@ -371,6 +394,7 @@ class KdTreeMatcher:
         self, index, q_reduced: jax.Array, depth: int,
         bm=None, use_kernel: Optional[bool] = None,
         filt: Optional[jax.Array] = None,
+        n_docs: Optional[int] = None,  # unused: host DFS has no padded rows
     ) -> Tuple[jax.Array, jax.Array]:
         from repro.core import kdtree
 
@@ -393,22 +417,30 @@ class CosineMatcher:
         self, index, q_norm: jax.Array, depth: int,
         bm=None, use_kernel: Optional[bool] = None,
         filt: Optional[jax.Array] = None,
+        n_docs: Optional[int] = None,
     ) -> Tuple[jax.Array, jax.Array]:
         from repro.kernels.fused_topk import ops as fused
 
-        d = min(depth, index.num_docs)
+        nd = index.num_docs if n_docs is None else n_docs
+        ndk = None if nd == index.num_docs else nd
+        d = min(depth, nd)
         if index.pq is not None:
             from repro.kernels.fused_topk import ref as fused_ref
 
             if _use_kernel(use_kernel):
-                return fused.postings_topk(index.pq, q_norm, d, filt=filt)
+                return fused.postings_topk(
+                    index.pq, q_norm, d, filt=filt, n_docs=ndk)
             return fused_ref.quantized_topk_ref(
                 q_norm, index.pq.q, index.pq.scale, d,
-                index.pq.bits, index.pq.group, filt=filt,
+                index.pq.bits, index.pq.group, filt=filt, n_docs=ndk,
             )
         if _use_kernel(use_kernel):
-            return fused.cosine_topk(index.vectors, q_norm, d, filt=filt)
+            return fused.cosine_topk(
+                index.vectors, q_norm, d, filt=filt, n_docs=ndk)
         scores = q_norm @ index.vectors.T  # (B, N)
+        if ndk is not None:
+            scores = scores[:, :nd]
+            filt = None if filt is None else filt[..., :nd]
         return _dense_filtered_topk(scores, d, filt)
 
 
@@ -425,6 +457,7 @@ class BlockMaxMatcher:
         self, index, q_rep: jax.Array, depth: int,
         bm=None, use_kernel: Optional[bool] = None,
         filt: Optional[jax.Array] = None,
+        n_docs: Optional[int] = None,  # padded rows ride the filt bitmap
     ) -> Tuple[jax.Array, jax.Array]:
         from repro.core import blockmax
 

@@ -71,12 +71,14 @@ import numpy as np
 
 from repro.core import bruteforce, builder, pca
 from repro.core import index as index_mod
+from repro.core import packed as packed_mod
 from repro.core import pipeline as pl
 from repro.core.index import AnnIndex, AnyConfig
 from repro.core.types import (
     DocMetadata,
     FakeWordsConfig,
     KdTreeConfig,
+    LexicalLshConfig,
     SearchParams,
     next_epoch,
 )
@@ -90,6 +92,13 @@ _COMMIT_RE = re.compile(r"^segments_(\d+)\.json$")
 _NEEDS_VECTORS_MSG = (
     "requires the fp32 original vectors on every segment "
     "(rerank_store='exact')"
+)
+
+#: Packed single-launch segmented search (docs/DESIGN.md §14) is the
+#: default serving path; REPRO_PACKED=0 flips the default back to the
+#: per-segment reference loop (search(packed=...) overrides per call).
+_PACKED_DEFAULT = os.environ.get("REPRO_PACKED", "1").lower() not in (
+    "0", "false", "off",
 )
 
 
@@ -385,6 +394,13 @@ class SegmentedAnnIndex:
         self._views: Optional[List[Any]] = None
         self._live_dev: Optional[List[jax.Array]] = None
         self._n_live = int(sum(s.num_live for s in self.segments))
+        # Packed single-launch state (docs/DESIGN.md §14): built lazily;
+        # _packed_prior is the previous snapshot's pack, handed over by
+        # IndexWriter.refresh() so append-only refreshes can absorb it via
+        # a donated incremental repack instead of re-concatenating.
+        self._packed: Optional[packed_mod.PackedSegments] = None
+        self._packed_prior: Optional[packed_mod.PackedSegments] = None
+        self._packed_err: Optional[str] = None
 
     # -- shape/identity ----------------------------------------------------
 
@@ -441,6 +457,42 @@ class SegmentedAnnIndex:
             for s in self.segments
         ]
         return self._views, matchers
+
+    # -- packed single-launch path (docs/DESIGN.md §14) ---------------------
+
+    def packed_segments(self) -> Optional[packed_mod.PackedSegments]:
+        """This snapshot's packed superbuffer, built lazily and cached on
+        the reader.  None when the layout cannot ride the single-launch
+        path (mixed store presence, per-segment statistics, ...) — the
+        reason is kept in ``_packed_err`` and search falls back to the
+        per-segment loop."""
+        if self._packed is not None:
+            return self._packed
+        if self._packed_err is not None:
+            return None
+        views, _ = self._ensure_views()
+        prior, self._packed_prior = self._packed_prior, None
+        try:
+            self._packed = packed_mod.pack_segments(
+                self.config, views, self.segments, self.global_stats,
+                prior=prior,
+            )
+        except packed_mod.PackedUnsupported as e:
+            self._packed_err = str(e)
+            return None
+        return self._packed
+
+    def _packed_matcher(self):
+        base = pl.make_matcher(self.config)
+        if self.global_stats and isinstance(base, pl.FakeWordsMatcher):
+            # df_max_ratio >= 1 keeps every term regardless of collection
+            # size, so df_num_docs stays unset and the matcher's static
+            # identity survives refreshes (zero recompiles per cycle).  A
+            # real prune ratio needs the live count for parity with the
+            # loop and accepts a recompile when it changes.
+            if base.df_max_ratio < 1.0:
+                base = dataclasses.replace(base, df_num_docs=self._n_live)
+        return base
 
     # -- metadata (predicate source for filtered search) --------------------
 
@@ -554,6 +606,9 @@ class SegmentedAnnIndex:
         params: Optional[SearchParams] = None,
         use_kernel: Optional[bool] = None,
         filter_mask: Optional[jax.Array] = None,
+        packed: Optional[bool] = None,
+        blockmax_keep: Optional[int] = None,
+        blockmax_block_size: int = 256,
     ) -> Tuple[jax.Array, jax.Array]:
         """Multi-segment staged search: encode once (the global-stats view
         carries any fitted model) -> per-segment live-masked match [+ local
@@ -567,16 +622,21 @@ class SegmentedAnnIndex:
         :meth:`global_metadata`): each segment slices its own rows,
         composes liveDocs ∧ predicate into ONE mask, and runs a single
         in-kernel filtered pass (docs/DESIGN.md §13).  A mask that filters
-        every doc returns padded (-inf, -1) rows, never NaNs."""
+        every doc returns padded (-inf, -1) rows, never NaNs.
+
+        ``packed`` selects the single-launch path over the packed
+        superbuffer (docs/DESIGN.md §14): None follows the process default
+        (on unless REPRO_PACKED=0, falling back silently to the loop for
+        unsupported layouts), True raises when unsupported, False forces
+        the per-segment reference loop.  ``blockmax_keep`` enables
+        two-stage blockmax pruning over the packed view (fake-words and
+        LSH encodings; approximate by design, docs/DESIGN.md §6)."""
         p = params if params is not None else SearchParams(k=k, depth=depth, rerank=rerank)
         if self._n_live == 0:
             raise ValueError("segmented index has no live docs to search")
         uk = self.use_kernel if use_kernel is None else use_kernel
         views, matchers = self._ensure_views()
         q_norm = bruteforce.l2_normalize(jnp.asarray(queries))
-        q_rep = self.pipeline.encoder(views[0], q_norm)
-        d_eff = min(p.depth, self._n_live)
-        k_eff = min(p.k, d_eff)
         fm = None
         if filter_mask is not None:
             fm = jnp.asarray(filter_mask)
@@ -586,6 +646,50 @@ class SegmentedAnnIndex:
                     f"has max_doc={self.max_doc} (masks index GLOBAL ids, "
                     "deleted rows included)"
                 )
+        want_packed = _PACKED_DEFAULT if packed is None else bool(packed)
+        if blockmax_keep is not None and not want_packed:
+            raise ValueError(
+                "blockmax_keep rides the packed single-launch path; "
+                "packed=False forces the per-segment reference loop"
+            )
+        if want_packed:
+            pk = self.packed_segments()
+            if pk is None:
+                if packed or blockmax_keep is not None:
+                    raise ValueError(
+                        "packed single-launch path unavailable for this "
+                        f"snapshot: {self._packed_err}"
+                    )
+                # default-on: serve via the per-segment reference loop
+            else:
+                if p.rerank and not self.quantized_rerank and (
+                    pk.view.vectors is None
+                ):
+                    raise ValueError(
+                        "rerank=True " + _NEEDS_VECTORS_MSG
+                        + " or the int8 store on every segment"
+                    )
+                bm = None
+                if blockmax_keep is not None:
+                    if not isinstance(
+                        self.config, (FakeWordsConfig, LexicalLshConfig)
+                    ):
+                        raise ValueError(
+                            "blockmax pruning supports fake-words and LSH "
+                            "encodings only (docs/DESIGN.md §6)"
+                        )
+                    bm = packed_mod.packed_blockmax(
+                        pk, self.config, blockmax_block_size
+                    )
+                return packed_mod.packed_search(
+                    pk, self.pipeline, self._packed_matcher(), q_norm,
+                    p.k, p.depth, rerank=p.rerank,
+                    quantized=self.quantized_rerank, use_kernel=uk,
+                    fm=fm, n_keep=blockmax_keep, bm=bm,
+                )
+        q_rep = self.pipeline.encoder(views[0], q_norm)
+        d_eff = min(p.depth, self._n_live)
+        k_eff = min(p.k, d_eff)
         parts_s, parts_i, stores, bases = [], [], [], []
         base = 0
         for seg, view, live, matcher in zip(
@@ -1001,12 +1105,20 @@ class IndexWriter:
         so epoch-keyed serving caches stay warm."""
         self.flush()
         if self._reader is None or self._changed:
+            old = self._reader
             self._reader = SegmentedAnnIndex(
                 self.config,
                 [s.snapshot() for s in self._segments],
                 use_kernel=self.use_kernel,
                 global_stats=self.global_stats,
             )
+            if old is not None:
+                # Hand the old snapshot's packed buffers to the new reader:
+                # an append-only refresh absorbs them via a donated
+                # incremental repack (core/packed.py).  The old reader
+                # lazily repacks if searched again after donation.
+                self._reader._packed_prior = old._packed
+                old._packed = None
             self._changed = False
         return self._reader
 

@@ -281,7 +281,9 @@ def _depth_pad(depth: int, merge: str) -> int:
 
 @functools.partial(
     jax.jit,
-    static_argnames=("depth", "mode", "merge", "bq", "bn", "bk", "interpret"),
+    static_argnames=(
+        "depth", "mode", "merge", "bq", "bn", "bk", "interpret", "n_docs"
+    ),
 )
 def fused_topk(
     q: jax.Array,  # (B, T)  bf16 / f32 (gemm), int8 (dot), uint32 (lsh)
@@ -294,6 +296,7 @@ def fused_topk(
     bk: int | None = None,
     interpret: bool | None = None,
     filt: jax.Array | None = None,  # (N,) | (B, N) predicate bitmap
+    n_docs: int | None = None,  # logical rows; rows >= n_docs never rank
 ) -> tuple[jax.Array, jax.Array]:
     """Streaming top-``depth`` of q @ docs.T (or LSH collision counts).
 
@@ -305,6 +308,13 @@ def fused_topk(
     per-query; nonzero = keep.  Applied as -inf inside the tile merge, so
     filtered search stays one kernel pass.  ``filt=None`` dispatches the
     exact unfiltered call graph (bitwise identical to not having the arg).
+
+    ``n_docs`` (optional): logical row count when ``docs`` carries tail
+    padding beyond the real corpus (the packed segment superbuffer of
+    ``core/packed.py`` pads totals to a bucket ladder so executables recur
+    across flush/merge cycles).  Rows >= ``n_docs`` ride the exact ragged-N
+    mask the kernel already applies, so the padded tail can never rank and
+    no bitmap operand is streamed.  Static: shape-stable callers only.
     """
     if interpret is None:
         interpret = common.INTERPRET
@@ -316,7 +326,10 @@ def fused_topk(
         bq, bn, bk = bq or 128, bn or 512, bk or 512
     b, t = q.shape
     n = docs.shape[0]
-    assert depth <= n, f"depth {depth} > corpus size {n}"
+    if n_docs is None:
+        n_docs = n
+    assert 0 < n_docs <= n, f"n_docs {n_docs} outside (0, {n}]"
+    assert depth <= n_docs, f"depth {depth} > corpus size {n_docs}"
     bq = min(bq, common.round_up(b, 8))
     bn = min(bn, common.round_up(n, common.LANE))
     bk = min(bk, common.round_up(t, common.LANE))
@@ -346,7 +359,7 @@ def fused_topk(
     scores, ids = pl.pallas_call(
         functools.partial(
             _fused_topk_kernel,
-            n_j=grid[1], n_k=grid[2], n_docs=n, bn=bn, depth=depth,
+            n_j=grid[1], n_k=grid[2], n_docs=n_docs, bn=bn, depth=depth,
             mode=mode, merge=merge, acc_dtype=acc_dtype,
             has_filt=filt is not None,
         ),
@@ -612,7 +625,8 @@ def _quantized_operands(q, docs, scale, bits, group, bq, bn, bk):
 @functools.partial(
     jax.jit,
     static_argnames=(
-        "depth", "bits", "group", "merge", "bq", "bn", "bk", "interpret"
+        "depth", "bits", "group", "merge", "bq", "bn", "bk", "interpret",
+        "n_docs",
     ),
 )
 def fused_topk_quantized(
@@ -628,17 +642,21 @@ def fused_topk_quantized(
     bk: int | None = None,
     interpret: bool | None = None,
     filt: jax.Array | None = None,  # (N,) | (B, N) predicate bitmap
+    n_docs: int | None = None,  # logical rows; rows >= n_docs never rank
 ) -> tuple[jax.Array, jax.Array]:
     """Streaming top-``depth`` of q @ dequant(docs, scale).T with the
     dequantization fused into the score stage — only the packed store and
-    the scales ever stream from HBM.  Same output contract (and ``filt``
-    semantics) as :func:`fused_topk`."""
+    the scales ever stream from HBM.  Same output contract (and ``filt`` /
+    ``n_docs`` semantics) as :func:`fused_topk`."""
     if interpret is None:
         interpret = common.INTERPRET
     bq, bn, bk = bq or 128, bn or 512, bk or 512
     b, t = q.shape
     n = docs.shape[0]
-    assert depth <= n, f"depth {depth} > corpus size {n}"
+    if n_docs is None:
+        n_docs = n
+    assert 0 < n_docs <= n, f"n_docs {n_docs} outside (0, {n}]"
+    assert depth <= n_docs, f"depth {depth} > corpus size {n_docs}"
     bq = min(bq, common.round_up(b, 8))
     bn = min(bn, common.round_up(n, common.LANE))
     bk = min(bk, common.round_up(t, common.LANE))
@@ -671,7 +689,7 @@ def fused_topk_quantized(
     scores, ids = pl.pallas_call(
         functools.partial(
             _fused_topk_quantized_kernel,
-            n_j=grid[1], n_k=grid[2], n_docs=n, bn=bn, depth=depth,
+            n_j=grid[1], n_k=grid[2], n_docs=n_docs, bn=bn, depth=depth,
             merge=merge, bits=bits, group=group, has_filt=filt is not None,
         ),
         grid=grid,

@@ -85,31 +85,36 @@ def dot_topk(
 def cosine_topk(
     corpus: jax.Array, queries: jax.Array, depth: int,
     interpret: bool | None = None, filt: jax.Array | None = None,
+    n_docs: int | None = None,
 ) -> Tuple[jax.Array, jax.Array]:
     """Fused exact-cosine top-depth (operands must be unit-normalized)."""
-    return fused_topk(queries, corpus, depth, interpret=interpret, filt=filt)
+    return fused_topk(
+        queries, corpus, depth, interpret=interpret, filt=filt, n_docs=n_docs
+    )
 
 
 def lsh_topk(
     sig_q: jax.Array, sig_d: jax.Array, depth: int,
     interpret: bool | None = None, filt: jax.Array | None = None,
+    n_docs: int | None = None,
 ) -> Tuple[jax.Array, jax.Array]:
     """Fused MinHash collision-count top-depth (VPU compare+reduce stage)."""
     return fused_topk(
-        sig_q, sig_d, depth, mode="lsh", interpret=interpret, filt=filt
+        sig_q, sig_d, depth, mode="lsh", interpret=interpret, filt=filt,
+        n_docs=n_docs,
     )
 
 
 def postings_topk(
     pq, qv: jax.Array, depth: int, interpret: bool | None = None,
-    filt: jax.Array | None = None,
+    filt: jax.Array | None = None, n_docs: int | None = None,
 ) -> Tuple[jax.Array, jax.Array]:
     """Fused top-depth over a packed :class:`repro.core.types.
     QuantizedPostings` store — dequantization happens in VMEM registers
     (docs/DESIGN.md §12).  ``qv`` is the mode's float query operand."""
     return fused_topk_quantized(
         qv, pq.q, pq.scale, depth, bits=pq.bits, group=pq.group,
-        interpret=interpret, filt=filt,
+        interpret=interpret, filt=filt, n_docs=n_docs,
     )
 
 
@@ -142,6 +147,7 @@ def lift_l2(points: jax.Array) -> jax.Array:
 def scan_l2_topk(
     lifted: jax.Array, q_reduced: jax.Array, depth: int,
     interpret: bool | None = None, filt: jax.Array | None = None,
+    n_docs: int | None = None,
 ) -> Tuple[jax.Array, jax.Array]:
     """Fused exact reduced-space L2 top-depth (kd-tree scan backend).
 
@@ -153,4 +159,6 @@ def scan_l2_topk(
         [2.0 * q_reduced, jnp.ones((q_reduced.shape[0], 1), q_reduced.dtype)],
         axis=-1,
     )
-    return fused_topk(qa, lifted, depth, interpret=interpret, filt=filt)
+    return fused_topk(
+        qa, lifted, depth, interpret=interpret, filt=filt, n_docs=n_docs
+    )

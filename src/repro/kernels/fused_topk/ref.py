@@ -42,13 +42,19 @@ def apply_filt(scores: jax.Array, filt) -> jax.Array:
 
 def fused_topk_ref(
     q: jax.Array, docs: jax.Array, depth: int, mode: str = "gemm",
-    filt=None,
+    filt=None, n_docs: int | None = None,
 ) -> Tuple[jax.Array, jax.Array]:
     """Unfused reference: full score matrix + ``jax.lax.top_k``.  With
-    ``filt``, masked slots follow the kernel contract (-inf score, id -1)."""
+    ``filt``, masked slots follow the kernel contract (-inf score, id -1).
+    ``n_docs`` drops tail-padded rows exactly like the kernel's ragged-N
+    mask (the result is the top-k over ``docs[:n_docs]``)."""
+    scores = scores_ref(q, docs, mode)
+    if n_docs is not None and n_docs < docs.shape[0]:
+        scores = scores[:, :n_docs]
+        filt = None if filt is None else filt[..., :n_docs]
     if filt is None:
-        return jax.lax.top_k(scores_ref(q, docs, mode), depth)
-    s, i = jax.lax.top_k(apply_filt(scores_ref(q, docs, mode), filt), depth)
+        return jax.lax.top_k(scores, depth)
+    s, i = jax.lax.top_k(apply_filt(scores, filt), depth)
     return s, jnp.where(s == -jnp.inf, -1, i)
 
 
@@ -126,10 +132,14 @@ def quantized_scores_ref(
 
 def quantized_topk_ref(
     q: jax.Array, docs: jax.Array, scale: jax.Array, depth: int,
-    bits: int, group: int = 0, filt=None,
+    bits: int, group: int = 0, filt=None, n_docs: int | None = None,
 ) -> Tuple[jax.Array, jax.Array]:
-    """Unfused quantized reference: dense scores + ``jax.lax.top_k``."""
+    """Unfused quantized reference: dense scores + ``jax.lax.top_k``.
+    ``n_docs`` drops tail-padded rows like :func:`fused_topk_ref`."""
     scores = quantized_scores_ref(q, docs, scale, bits, group)
+    if n_docs is not None and n_docs < docs.shape[0]:
+        scores = scores[:, :n_docs]
+        filt = None if filt is None else filt[..., :n_docs]
     if filt is None:
         return jax.lax.top_k(scores, depth)
     s, i = jax.lax.top_k(apply_filt(scores, filt), depth)
@@ -190,7 +200,7 @@ def _filt_tiles(filt, n: int, tile: int) -> jax.Array:
 
 
 @functools.partial(
-    jax.jit, static_argnames=("depth", "bits", "group", "tile")
+    jax.jit, static_argnames=("depth", "bits", "group", "tile", "n_docs")
 )
 def streaming_topk_quantized_ref(
     q: jax.Array,
@@ -201,15 +211,18 @@ def streaming_topk_quantized_ref(
     group: int = 0,
     tile: int = 4096,
     filt=None,
+    n_docs: int | None = None,
 ) -> Tuple[jax.Array, jax.Array]:
     """XLA online-reduction equivalent over a packed store: scan doc tiles,
     dequantize each tile transiently, merge a running top-``depth``.  The
     dequantized matrix is only ever (tile, T) — the timeable stand-in for
     :func:`..kernel.fused_topk_quantized` off-TPU, and the XLA path for
-    corpora too large for a dense (B, N) score matrix."""
-    n = docs.shape[0]
+    corpora too large for a dense (B, N) score matrix.  ``n_docs`` tightens
+    the ragged-N mask for tail-bucket-padded stores."""
+    n_rows = docs.shape[0]
+    n = n_rows if n_docs is None else n_docs
     b = q.shape[0]
-    pad = (-n) % tile
+    pad = (-n_rows) % tile
     if pad:
         docs = jnp.concatenate(
             [docs, jnp.zeros((pad, docs.shape[1]), docs.dtype)], axis=0
@@ -247,12 +260,14 @@ def streaming_topk_quantized_ref(
 
     xs = (jnp.arange(d_tiles.shape[0], dtype=jnp.int32), d_tiles, s_tiles)
     if filt is not None:
-        xs = xs + (_filt_tiles(filt, n, tile),)
+        xs = xs + (_filt_tiles(filt, n_rows, tile),)
     (best_s, best_i), _ = jax.lax.scan(body, (init_s, init_i), xs)
     return best_s, best_i
 
 
-@functools.partial(jax.jit, static_argnames=("depth", "tile", "mode"))
+@functools.partial(
+    jax.jit, static_argnames=("depth", "tile", "mode", "n_docs")
+)
 def streaming_topk_ref(
     q: jax.Array,
     docs: jax.Array,
@@ -260,12 +275,15 @@ def streaming_topk_ref(
     tile: int = 4096,
     mode: str = "gemm",
     filt=None,
+    n_docs: int | None = None,
 ) -> Tuple[jax.Array, jax.Array]:
     """XLA online-reduction equivalent: scan doc tiles, merge a running
-    top-``depth``.  Peak live scores are O(B * (tile + depth)), never (B, N)."""
-    n, t = docs.shape
+    top-``depth``.  Peak live scores are O(B * (tile + depth)), never (B, N).
+    ``n_docs`` tightens the ragged-N mask for tail-bucket-padded stores."""
+    n_rows, t = docs.shape
+    n = n_rows if n_docs is None else n_docs
     b = q.shape[0]
-    pad = (-n) % tile
+    pad = (-n_rows) % tile
     if pad:
         fill = LSH_SENTINEL - 1 if mode == "lsh" else 0
         docs = jnp.concatenate(
@@ -299,6 +317,6 @@ def streaming_topk_ref(
 
     xs = (jnp.arange(tiles.shape[0], dtype=jnp.int32), tiles)
     if filt is not None:
-        xs = xs + (_filt_tiles(filt, n, tile),)
+        xs = xs + (_filt_tiles(filt, n_rows, tile),)
     (best_s, best_i), _ = jax.lax.scan(body, (init_s, init_i), xs)
     return best_s, best_i

@@ -130,6 +130,105 @@ def serve_segmented(args, corpus, queries) -> dict:
     return out
 
 
+def zipf_sampler(rng, pool: int, s: float):
+    """Zipfian rank-frequency sampler over a query pool — real query
+    streams are heavily head-skewed, which is what makes result caches and
+    micro-batch coalescing pay."""
+    ranks = np.arange(1, pool + 1, dtype=np.float64)
+    p = ranks ** -s
+    p /= p.sum()
+    return lambda n: rng.choice(pool, size=n, p=p)
+
+
+def serve_openloop(args, corpus, queries) -> dict:
+    """Open-loop traffic generator (docs/DESIGN.md §14): arrivals at a
+    FIXED ``--qps`` schedule (independent of service speed — the honest
+    way to measure tail latency), Zipfian reuse over a query pool, and
+    mixed add/delete/search against the NRT writer.  Reports sustained
+    QPS + per-request p50/p99 for the async micro-batcher next to a
+    sequential single-query A/B over the same workload."""
+    import queue as queue_mod
+
+    rng = np.random.default_rng(13)
+    config = make_config(args)
+    writer = IndexWriter(
+        config,
+        rerank_store="int8" if args.quantized_rerank else "exact",
+        primary_postings=args.postings or "fp32",
+    )
+    n0 = max(args.batch, int(args.n_docs * 0.9))
+    corpus = np.asarray(corpus)
+    writer.add(corpus[:n0])
+    ingest_ptr = n0
+    svc = AnnService(writer=writer, service=AnnServiceConfig(
+        k=args.k, depth=args.depth, rerank=args.rerank,
+        max_batch=args.batch,
+        max_wait_s=args.max_wait_ms / 1e3, queue_depth=args.queue_depth))
+    pool = min(args.query_pool, len(queries))
+    pool_q = np.asarray(queries)[:pool]
+    sample = zipf_sampler(rng, pool, args.zipf_s)
+    svc.search_batch(pool_q[: args.batch])  # warmup/compile
+    svc.reset_latency()
+
+    # -- sequential A/B: the same Zipfian stream, one query per launch ----
+    seq_n = max(32, min(512, int(args.qps * args.duration / 4)))
+    seq_idx = sample(seq_n)
+    t0 = time.perf_counter()
+    for i in seq_idx:
+        svc.search_batch(pool_q[int(i) : int(i) + 1])
+    seq_qps = seq_n / (time.perf_counter() - t0)
+    svc.reset_latency()
+
+    # -- open loop: submit on the wall-clock schedule, never wait ---------
+    svc.start_async()
+    period = 1.0 / args.qps
+    futs, shed, sent = [], 0, 0
+    start = time.perf_counter()
+    next_t = start
+    t_end = start + args.duration
+    while time.perf_counter() < t_end:
+        now = time.perf_counter()
+        if now < next_t:
+            time.sleep(min(next_t - now, 1e-3))
+            continue
+        next_t += period
+        i = int(sample(1)[0])
+        try:
+            futs.append(svc.search_async(pool_q[i]))
+            sent += 1
+        except queue_mod.Full:
+            shed += 1
+        if args.mutate_every and sent and sent % args.mutate_every == 0:
+            # Mixed workload: ingest a small chunk + delete a few docs,
+            # then refresh — the packed executable cache keeps these
+            # NRT cycles compile-free (same bucket rung).
+            if ingest_ptr < len(corpus):
+                writer.add(corpus[ingest_ptr : ingest_ptr + 32])
+                ingest_ptr += 32
+            writer.delete(rng.choice(ingest_ptr, size=4, replace=False))
+            svc.refresh()
+    for f in futs:
+        f.result(timeout=120)
+    elapsed = time.perf_counter() - start
+    svc.stop_async()
+    stats = svc.stats()
+    out = {
+        "method": svc.ann.method,
+        "offered_qps": args.qps,
+        "sustained_qps": round(len(futs) / elapsed, 1),
+        "sequential_qps": round(seq_qps, 1),
+        "req_p50_ms": stats["req_p50_ms"],
+        "req_p99_ms": stats["req_p99_ms"],
+        "async_launches": stats["async_launches"],
+        "batch_per_launch": round(len(futs) / max(1, stats["async_launches"]), 1),
+        "shed": shed,
+        "live_docs": stats["num_docs"],
+        "segments": stats["segments"],
+    }
+    print(f"[serve] open-loop {out}")
+    return out
+
+
 def serve_filtered(args, svc, corpus, queries, ratios, unfiltered) -> list:
     """Filtered smoke: replay the SAME query stream under random predicate
     bitmaps at each selectivity, through the match stage's single in-kernel
@@ -276,6 +375,29 @@ def main(argv=None) -> dict:
              "the unfiltered numbers (docs/DESIGN.md §13)",
     )
     ap.add_argument(
+        "--qps", type=float, default=0,
+        help="open-loop traffic generator: submit single queries to the "
+             "async micro-batcher at this fixed arrival rate (Zipfian "
+             "reuse over --query-pool, mixed add/delete/search via "
+             "--mutate-every) and report sustained QPS + per-request "
+             "p50/p99 next to a sequential single-query A/B",
+    )
+    ap.add_argument("--duration", type=float, default=5.0,
+                    help="open-loop run length in seconds")
+    ap.add_argument("--query-pool", type=int, default=256,
+                    help="distinct queries in the Zipfian reuse pool")
+    ap.add_argument("--zipf-s", type=float, default=1.1,
+                    help="Zipf skew exponent for query reuse")
+    ap.add_argument(
+        "--mutate-every", type=int, default=200,
+        help="every N requests: add a 32-doc chunk, delete 4 docs, "
+             "refresh (0 = search-only traffic)",
+    )
+    ap.add_argument("--max-wait-ms", type=float, default=2.0,
+                    help="async micro-batch window (the SLO's donation)")
+    ap.add_argument("--queue-depth", type=int, default=256,
+                    help="async admission queue bound (backpressure)")
+    ap.add_argument(
         "--hybrid", action="store_true",
         help="hybrid smoke: RRF-fuse the lexical classic fake-words "
              "retriever with a dense kd-scan retriever over the same "
@@ -288,6 +410,14 @@ def main(argv=None) -> dict:
         embeddings.CorpusConfig(n_vectors=args.n_docs, dim=args.dim)
     )
     queries, qids = embeddings.make_queries(corpus, args.queries)
+
+    if args.qps:
+        if args.shards or args.segments:
+            raise SystemExit(
+                "--qps drives the async NRT writer path; it is not "
+                "combined with --shards/--segments"
+            )
+        return serve_openloop(args, corpus, queries)
 
     if args.segments:
         if args.shards:

@@ -33,7 +33,10 @@ from __future__ import annotations
 import collections
 import dataclasses
 import hashlib
+import queue as queue_mod
+import threading
 import time
+from concurrent.futures import Future
 from typing import Optional, Sequence, Tuple, Union
 
 import jax
@@ -50,22 +53,26 @@ from repro.core.types import FakeWordsIndex, LshIndex
 
 @dataclasses.dataclass
 class AnnServiceConfig:
-    # NOTE: ``max_wait_s`` (a batching window for a streaming deployment)
-    # was dead config — ``search_batch`` is synchronous, so there is never
-    # anything to wait for — and was removed; an async admission queue
-    # would reintroduce it alongside the queue (see serve/engine.py for
-    # the continuous-batching shape it would take).
     k: int = 10
     depth: int = 100
     rerank: bool = True
     max_batch: int = 64       # micro-batch size (pad to this)
+    # Async micro-batcher (docs/DESIGN.md §14): a queued request launches
+    # once the coalesced batch reaches ``max_batch`` rows OR the OLDEST
+    # queued request has waited ``max_wait_s`` — the batching window is the
+    # latency the SLO donates to throughput.  ``queue_depth`` bounds the
+    # admission queue; search_async raises queue.Full past it
+    # (backpressure — shed at the door, don't grow tail latency).
+    max_wait_s: float = 0.002
+    queue_depth: int = 256
     # Route the match phase through the fused streaming score->top-k Pallas
     # kernel (docs/DESIGN.md §4).  None = kernel on TPU, XLA elsewhere.
     use_kernel: Optional[bool] = None
     # Two-stage blockmax pruning (docs/DESIGN.md §6): keep this many blocks
     # per query (per shard when sharded) in the match phase.  None disables.
     # Cuts streamed index bytes ~(1 - kept/total) at a small recall cost.
-    # Fake-words and LSH indexes only (monolithic; not segmented).
+    # Fake-words and LSH indexes only (segmented serving rides the packed
+    # superbuffer, docs/DESIGN.md §14).
     blockmax_keep: Optional[int] = None
     blockmax_block_size: int = 256
     # Latency ring-buffer length for stats() p50/p99 (per-batch wall times).
@@ -114,15 +121,26 @@ class AnnService:
         self.scfg = service if service is not None else AnnServiceConfig()
         self.mesh = mesh
         self.shard_axes = tuple(shard_axes)
+        # One lock covers every snapshot swap (_bind) and every search —
+        # the async worker thread and caller threads share this service.
+        self._lock = threading.RLock()
         self._bind(ann)
         self.queries_served = 0
         self.batches = 0
         self._lat_s = collections.deque(maxlen=self.scfg.latency_window)
+        # Per-REQUEST enqueue->result wall times for the async path; kept
+        # apart from the per-batch ring so SLO percentiles are honest
+        # (queue wait included, batch fan-in not averaged away).
+        self._req_lat_s = collections.deque(maxlen=self.scfg.latency_window)
         self._cache: "collections.OrderedDict[bytes, Tuple[np.ndarray, np.ndarray]]" = (
             collections.OrderedDict()
         )
         self.cache_hits = 0
         self.cache_misses = 0
+        self.async_launches = 0
+        self.rejected = 0
+        self._queue: Optional["queue_mod.Queue"] = None
+        self._worker: Optional[threading.Thread] = None
 
     def _bind(self, ann: Union[AnnIndex, SegmentedAnnIndex]) -> None:
         """Point the service at a searchable snapshot and derive the
@@ -153,10 +171,17 @@ class AnnService:
                     "with mesh= over a monolithic index instead"
                 )
             if self._bm_keep is not None:
-                raise ValueError(
-                    "blockmax pruning is not supported for segmented "
-                    "indexes (ROADMAP follow-up)"
-                )
+                from repro.core.types import FakeWordsConfig, LexicalLshConfig
+
+                # Segmented blockmax rides the packed superbuffer
+                # (docs/DESIGN.md §14); the bm index is built lazily per
+                # snapshot inside the packed path, not here.
+                if not isinstance(
+                    ann.config, (FakeWordsConfig, LexicalLshConfig)
+                ):
+                    raise ValueError(
+                        f"blockmax pruning is not supported for {ann.method}"
+                    )
             self._bm = None
             self._search = None
             self._search_filtered = None
@@ -222,7 +247,8 @@ class AnnService:
             raise TypeError(
                 "set_index takes an AnnIndex or SegmentedAnnIndex"
             )
-        self._bind(index)
+        with self._lock:
+            self._bind(index)
         return self.ann.epoch
 
     def refresh(self) -> int:
@@ -234,7 +260,8 @@ class AnnService:
             raise ValueError(
                 "refresh() needs a service constructed with writer="
             )
-        self._bind(self.writer.refresh())
+        with self._lock:
+            self._bind(self.writer.refresh())
         return self.ann.epoch
 
     # -- serving -----------------------------------------------------------
@@ -290,6 +317,15 @@ class AnnService:
         place of this service's own index search; sub-plan leaves carry
         their own filters and indexes.  Plan results bypass the result
         cache (a plan's identity isn't hashable state)."""
+        with self._lock:
+            return self._search_batch(queries, filter, plan)
+
+    def _search_batch(
+        self,
+        queries: np.ndarray,
+        filter: Optional[np.ndarray] = None,
+        plan=None,
+    ) -> Tuple[np.ndarray, np.ndarray]:
         b = queries.shape[0]
         if plan is not None:
             if filter is not None:
@@ -352,6 +388,8 @@ class AnnService:
                         jnp.asarray(q_np), k=self.scfg.k,
                         depth=self.scfg.depth, rerank=self.scfg.rerank,
                         use_kernel=self._uk, filter_mask=fl_dev,
+                        blockmax_keep=self._bm_keep,
+                        blockmax_block_size=self._bm_block,
                     )
                 elif self._search is not None:
                     args = (self.ann.index,) + (
@@ -387,14 +425,140 @@ class AnnService:
     # §13); ``search_batch`` predates it and stays as the primary def.
     search = search_batch
 
+    # -- async micro-batching loop (docs/DESIGN.md §14) ---------------------
+
+    def start_async(self) -> None:
+        """Start the admission queue + micro-batcher worker.  Callers then
+        submit single queries through :meth:`search_async`; the worker
+        coalesces arrivals into one ``search_batch`` launch once the batch
+        reaches ``max_batch`` rows or the oldest request has waited
+        ``max_wait_s`` (the SLO's batching window)."""
+        if self._worker is not None:
+            return
+        self._queue = queue_mod.Queue(maxsize=self.scfg.queue_depth)
+        self._stop = threading.Event()
+        self._worker = threading.Thread(
+            target=self._batch_loop, name="ann-batcher", daemon=True
+        )
+        self._worker.start()
+
+    def stop_async(self, drain: bool = True) -> None:
+        """Stop the worker.  ``drain=True`` serves everything already
+        admitted first; pending futures are failed otherwise."""
+        if self._worker is None:
+            return
+        if not drain:
+            self._stop.set()
+        self._queue.put(None)  # wake the worker
+        self._worker.join()
+        self._worker = None
+        # Fail anything still queued (drain=False, or raced past the
+        # sentinel) rather than leaving callers blocked forever.
+        while True:
+            try:
+                req = self._queue.get_nowait()
+            except queue_mod.Empty:
+                break
+            if req is not None:
+                req[3].set_exception(RuntimeError("service stopped"))
+        self._queue = None
+
+    def search_async(
+        self, query: np.ndarray, filter: Optional[np.ndarray] = None
+    ) -> "Future[Tuple[np.ndarray, np.ndarray]]":
+        """Admit one query ((dim,) or (b, dim)) to the micro-batcher;
+        resolves to this request's (scores, ids) rows.  Raises
+        ``queue.Full`` when the admission queue is at ``queue_depth``
+        (backpressure: the caller sheds or retries — queueing deeper would
+        only grow everyone's tail latency)."""
+        if self._queue is None:
+            raise RuntimeError("call start_async() first")
+        q = np.asarray(query)
+        if q.ndim == 1:
+            q = q[None, :]
+        fkey = None if filter is None else np.asarray(filter).tobytes()
+        fut: "Future[Tuple[np.ndarray, np.ndarray]]" = Future()
+        try:
+            self._queue.put_nowait((q, filter, fkey, fut, time.perf_counter()))
+        except queue_mod.Full:
+            self.rejected += 1
+            raise
+        return fut
+
+    def _batch_loop(self) -> None:
+        carry = None
+        while True:
+            req = carry if carry is not None else self._queue.get()
+            carry = None
+            if req is None:
+                return
+            if self._stop.is_set():
+                req[3].set_exception(RuntimeError("service stopped"))
+                continue
+            batch = [req]
+            rows = req[0].shape[0]
+            deadline = req[4] + self.scfg.max_wait_s
+            # Coalesce until max_batch rows or the OLDEST request's wait
+            # hits the window; only same-filter requests share a launch
+            # (one bitmap operand per batch).  Backlog already sitting in
+            # the queue coalesces unconditionally (it costs nothing and is
+            # what keeps throughput up when arrivals outrun launches);
+            # the deadline only governs how long to wait for MORE.
+            while rows < self.scfg.max_batch:
+                try:
+                    nxt = self._queue.get_nowait()
+                except queue_mod.Empty:
+                    wait = deadline - time.perf_counter()
+                    if wait <= 0:
+                        break
+                    try:
+                        nxt = self._queue.get(timeout=wait)
+                    except queue_mod.Empty:
+                        break
+                if nxt is None or self._stop.is_set():
+                    carry = nxt
+                    break
+                if nxt[2] != req[2]:
+                    carry = nxt  # different filter: next launch
+                    break
+                batch.append(nxt)
+                rows += nxt[0].shape[0]
+            try:
+                qs = np.concatenate([r[0] for r in batch], axis=0)
+                s, ids = self.search_batch(qs, filter=req[1])
+                self.async_launches += 1
+                done = time.perf_counter()
+                off = 0
+                for r in batch:
+                    n = r[0].shape[0]
+                    self._req_lat_s.append(done - r[4])
+                    r[3].set_result((s[off : off + n], ids[off : off + n]))
+                    off += n
+            except Exception as e:  # propagate to every caller in the batch
+                for r in batch:
+                    if not r[3].done():
+                        r[3].set_exception(e)
+
     def reset_latency(self) -> None:
         """Drop recorded batch latencies (e.g. after a warmup/compile batch,
         whose wall time is orders of magnitude above steady state and would
         otherwise dominate the p99)."""
         self._lat_s.clear()
+        self._req_lat_s.clear()
+
+    @staticmethod
+    def _pcts(ring) -> Tuple[Optional[float], Optional[float]]:
+        ms = np.asarray(ring, np.float64) * 1e3
+        if not ms.size:
+            return None, None
+        return (
+            round(float(np.percentile(ms, 50)), 3),
+            round(float(np.percentile(ms, 99)), 3),
+        )
 
     def stats(self) -> dict:
-        lat_ms = np.asarray(self._lat_s, np.float64) * 1e3
+        lat_p50, lat_p99 = self._pcts(self._lat_s)
+        req_p50, req_p99 = self._pcts(self._req_lat_s)
         return {
             "queries": self.queries_served,
             "batches": self.batches,
@@ -403,8 +567,17 @@ class AnnService:
             "method": self.ann.method,
             "epoch": getattr(self.ann, "epoch", None),
             "segments": getattr(self.ann, "num_segments", None),
-            "lat_p50_ms": round(float(np.percentile(lat_ms, 50)), 3) if lat_ms.size else None,
-            "lat_p99_ms": round(float(np.percentile(lat_ms, 99)), 3) if lat_ms.size else None,
+            # Per-BATCH device wall times (one search_batch call each).
+            "lat_p50_ms": lat_p50,
+            "lat_p99_ms": lat_p99,
+            # Per-REQUEST enqueue->result times on the async path: queue
+            # wait + batching window + launch — the number an SLO is
+            # written against.
+            "req_p50_ms": req_p50,
+            "req_p99_ms": req_p99,
+            "async_launches": self.async_launches,
+            "rejected": self.rejected,
+            "queue_depth": self._queue.qsize() if self._queue is not None else 0,
             "cache_hits": self.cache_hits,
             "cache_misses": self.cache_misses,
             "cache_entries": len(self._cache),

@@ -386,16 +386,24 @@ def test_service_serves_segmented_index_directly(rng):
         jnp.asarray(a[:8]), k=10, depth=50, rerank=True, use_kernel=None)
     np.testing.assert_array_equal(np.asarray(i_dir), i_svc)
     np.testing.assert_array_equal(np.asarray(s_dir), s_svc)
+    # blockmax now rides the packed superbuffer for fake-words/LSH
+    # (tests/test_serve.py); encodings without blockmax bounds still fail
+    # loudly at bind time.
+    w_bf = IndexWriter(BruteForceConfig(), merge_policy=None)
+    w_bf.add(a[:64])
+    w_bf.flush()
     with pytest.raises(ValueError):
-        AnnService(reader, AnnServiceConfig(blockmax_keep=4))
+        AnnService(w_bf.refresh(), AnnServiceConfig(blockmax_keep=4))
     with pytest.raises(TypeError):
         svc.set_index("not an index")  # type: ignore[arg-type]
 
 
-def test_max_wait_s_is_gone():
-    """The dead ``max_wait_s`` knob was removed (search_batch is
-    synchronous; there is never anything to wait for)."""
-    assert not hasattr(AnnServiceConfig(), "max_wait_s")
+def test_max_wait_s_is_back():
+    """``max_wait_s`` returned as the async micro-batcher's coalescing SLO
+    (docs/DESIGN.md §14): positive default, paired with a bounded admission
+    queue."""
+    assert AnnServiceConfig().max_wait_s > 0
+    assert AnnServiceConfig().queue_depth > 0
 
 
 # -- persistence formats -----------------------------------------------------

@@ -134,3 +134,105 @@ def test_ann_service_blockmax_pruned(small_corpus):
     assert r_all > 0.85
     assert r_half > 0.3  # graceful degradation at beta=0.5
     assert r_all >= r_half
+
+
+# -- async micro-batching loop (docs/DESIGN.md §14) --------------------------
+
+
+def test_ann_service_async_matches_sync(small_corpus):
+    """search_async results == search_batch results, request-for-request,
+    and the micro-batcher coalesces singles into fewer launches."""
+    v = jnp.asarray(small_corpus)
+    cfg = FakeWordsConfig(quantization=50)
+    idx = fakewords.build(v, cfg)
+    svc = AnnService(idx, cfg, AnnServiceConfig(
+        k=10, depth=100, rerank=True, max_batch=16, max_wait_s=0.05))
+    qs = small_corpus[:24]
+    s_ref, i_ref = svc.search_batch(qs)
+    svc.start_async()
+    futs = [svc.search_async(qs[i]) for i in range(24)]
+    out = [f.result(timeout=30) for f in futs]
+    svc.stop_async()
+    s_async = np.concatenate([o[0] for o in out])
+    i_async = np.concatenate([o[1] for o in out])
+    np.testing.assert_array_equal(i_ref, i_async)
+    np.testing.assert_allclose(s_ref, s_async, rtol=1e-5, atol=1e-6)
+    st = svc.stats()
+    # 24 singles coalesced under the 50ms window: strictly fewer launches
+    # than requests, and per-request latency percentiles are recorded.
+    assert 1 <= st["async_launches"] < 24
+    assert st["req_p50_ms"] is not None and st["req_p99_ms"] is not None
+    assert st["req_p99_ms"] >= st["req_p50_ms"]
+    assert st["rejected"] == 0
+
+
+def test_ann_service_async_backpressure(small_corpus):
+    """A full admission queue rejects at the door (queue.Full) and counts
+    the shed requests in stats()."""
+    import queue as queue_mod
+
+    v = jnp.asarray(small_corpus)
+    cfg = FakeWordsConfig(quantization=50)
+    idx = fakewords.build(v, cfg)
+    svc = AnnService(idx, cfg, AnnServiceConfig(
+        k=5, depth=50, rerank=False, max_batch=1, max_wait_s=0.0,
+        queue_depth=2))
+    svc.start_async()
+    rejected = 0
+    futs = []
+    with svc._lock:  # worker blocks on the service lock: queue backs up
+        for i in range(32):
+            try:
+                futs.append(svc.search_async(small_corpus[i % 8]))
+            except queue_mod.Full:
+                rejected += 1
+    assert rejected >= 1
+    for f in futs:
+        f.result(timeout=30)
+    svc.stop_async()
+    assert svc.stats()["rejected"] == rejected
+
+
+def test_ann_service_async_with_nrt_refresh(small_corpus):
+    """refresh() (a _bind swap) interleaves safely with the async worker;
+    results always come from a coherent snapshot."""
+    from repro.core.segments import IndexWriter
+
+    cfg = FakeWordsConfig(quantization=50)
+    w = IndexWriter(cfg, merge_policy=None, use_kernel=False)
+    w.add(small_corpus[:500])
+    svc = AnnService(writer=w, service=AnnServiceConfig(
+        k=5, depth=50, rerank=False, max_batch=8, max_wait_s=0.005))
+    svc.start_async()
+    futs = [svc.search_async(small_corpus[i]) for i in range(8)]
+    w.add(small_corpus[500:600])
+    svc.refresh()
+    futs += [svc.search_async(small_corpus[i]) for i in range(8, 16)]
+    for f in futs:
+        s, ids = f.result(timeout=30)
+        assert ids.shape == (1, 5) and (ids >= 0).all()
+    svc.stop_async()
+
+
+def test_ann_service_segmented_blockmax(small_corpus):
+    """Segmented blockmax serving rides the packed superbuffer: keeping
+    every block matches the unpruned segmented service exactly."""
+    from repro.core.segments import IndexWriter
+
+    cfg = FakeWordsConfig(quantization=50)
+    w = IndexWriter(cfg, merge_policy=None, use_kernel=False)
+    w.add(small_corpus[:700])
+    w.flush()
+    w.add(small_corpus[700:1100])
+    qs = small_corpus[:16]
+    svc = AnnService(writer=w, service=AnnServiceConfig(
+        k=10, depth=100, rerank=True, max_batch=16))
+    s0, i0 = svc.search_batch(qs)
+    reader = svc.ann
+    n_blocks = reader.packed_segments().bucket // 256
+    svc_bm = AnnService(reader, service=AnnServiceConfig(
+        k=10, depth=100, rerank=True, max_batch=16,
+        blockmax_keep=n_blocks, blockmax_block_size=256))
+    s1, i1 = svc_bm.search_batch(qs)
+    np.testing.assert_array_equal(i0, i1)
+    np.testing.assert_allclose(s0, s1, rtol=1e-5, atol=1e-6)
