@@ -760,6 +760,201 @@ def async_ab(
     return rows, summary
 
 
+def graph_pareto(
+    n_docs: int = 65_536, dim: int = 64, batch: int = 64, k: int = 10,
+    n_calls: int = 15,
+) -> Tuple[List[Dict], List[Dict], Dict]:
+    """Recall@10-vs-p50 Pareto frontier (docs/DESIGN.md §15): the graph
+    (hnsw) encoding against the paper's fake-words sweep and the exact
+    oracle, all measured in ONE process on the same corpus and queries.
+
+    Streaming encodings score every posting, so their scored-candidate
+    count IS the corpus size; graph traversal scores
+    ``entries + iters * beam * total_degree`` gathered rows regardless of
+    N — the ``sublinear`` section records the measured counts at two
+    corpus tiers (4x apart) to pin that down.  Segmented rows (1/4/16 via
+    ``IndexWriter``) show the NRT fan-out price at the winning operating
+    point.  Queries are in-distribution (``embeddings.make_queries``),
+    the same protocol every other bench uses."""
+    import dataclasses as _dc
+
+    from repro.core import eval as ev, graph
+    from repro.core.segments import IndexWriter
+    from repro.core.types import GraphConfig
+    from repro.data import embeddings
+
+    uk = None if jax.default_backend() == "tpu" else False
+    corpus_np = embeddings.make_corpus(
+        _dc.replace(embeddings.WORD2VEC_LIKE, n_vectors=n_docs, dim=dim))
+    vecs = jnp.asarray(corpus_np)
+    q_np, _ = embeddings.make_queries(corpus_np, batch)
+    queries = jnp.asarray(q_np)
+    _, gt = bruteforce.exact_topk(vecs, queries, k, use_kernel=uk)
+
+    def p50_of(f):
+        jax.block_until_ready(f())  # compile
+        lat = []
+        for _ in range(n_calls):
+            t0 = time.perf_counter()
+            jax.block_until_ready(f())
+            lat.append(time.perf_counter() - t0)
+        return float(np.percentile(np.asarray(lat, np.float64) * 1e3, 50))
+
+    rows: List[Dict] = []
+
+    def add_row(method, params, segments, scored, ids, p50):
+        rec = float(ev.recall_at(gt, jnp.asarray(ids)[:, :k]))
+        rows.append({
+            "method": method, "params": params, "segments": segments,
+            "n_docs": n_docs, "recall_at_10": round(rec, 4),
+            "p50_ms": round(p50, 2), "scored_candidates": scored,
+        })
+        return rows[-1]
+
+    bf = AnnIndex.build(vecs, BruteForceConfig(), use_kernel=uk)
+    f = lambda: bf.search(queries, k=k, depth=k)  # noqa: E731
+    add_row("bruteforce", "exact", 1, n_docs, f()[1], p50_of(f))
+
+    for qz, depth in ((30, 100), (50, 100), (50, 400)):
+        idx = AnnIndex.build(
+            vecs, FakeWordsConfig(quantization=qz), use_kernel=uk)
+        f = lambda idx=idx, depth=depth: idx.search(  # noqa: E731
+            queries, k=k, depth=depth, rerank=True)
+        add_row("fakewords", f"q={qz},depth={depth}", 1, n_docs,
+                f()[1], p50_of(f))
+    fw_rows = [r for r in rows if r["method"] == "fakewords"]
+    best_fw = max(fw_rows, key=lambda r: (r["recall_at_10"], -r["p50_ms"]))
+
+    # One strong offline build, then the search-time sweep rides it — the
+    # adjacency is the index, ef/beam/iters are query-time knobs.
+    vn = bruteforce.l2_normalize(vecs)
+    qn = bruteforce.l2_normalize(queries)
+    bcfg = GraphConfig(degree=32, reverse_degree=32, ef_construction=128,
+                       entries=16)
+    t0 = time.perf_counter()
+    nb, entry = graph.build_graph(vn, bcfg)
+    jax.block_until_ready(nb)
+    build_s = time.perf_counter() - t0
+
+    def g_search(ef, beam, iters, with_stats=False):
+        return graph.search_graph(
+            vn, nb, entry, qn, k, ef=ef, beam=beam, iters=iters,
+            n_docs=n_docs, use_kernel=uk, with_stats=with_stats)
+
+    hnsw_rows = []
+    sweep = ((16, 2, 6), (32, 4, 8), (64, 4, 8), (64, 4, 10),
+             (64, 2, 16), (64, 8, 8))
+    for ef, beam, iters in sweep:
+        f = jax.jit(lambda ef=ef, beam=beam, iters=iters:  # noqa: E731
+                    g_search(ef, beam, iters))
+        _, _, sc = g_search(ef, beam, iters, with_stats=True)
+        row = add_row("hnsw", f"ef={ef},beam={beam},iters={iters}", 1,
+                      int(np.asarray(sc).max()), f()[1], p50_of(f))
+        hnsw_rows.append((row, (ef, beam, iters)))
+
+    dominating = [(r, p) for r, p in hnsw_rows
+                  if r["recall_at_10"] >= best_fw["recall_at_10"]]
+    pool = dominating or hnsw_rows
+    winner, w_params = min(pool, key=lambda rp: rp[0]["p50_ms"])
+    gate_pareto = bool(
+        winner["recall_at_10"] >= best_fw["recall_at_10"]
+        and winner["p50_ms"] < best_fw["p50_ms"])
+
+    # NRT fan-out: same corpus split into 1 / 4 / 16 flushed segments,
+    # searched through the per-segment loop (graphs have no packed layout
+    # — PackedUnsupported fallback).  Smaller per-segment graphs need a
+    # higher ef to hold recall — contiguous NRT slices of a clustered
+    # corpus leave most queries out-of-distribution for 3 of 4 segments,
+    # exactly Lucene's per-segment-HNSW cost — so the tiers run one
+    # dedicated higher-effort operating point, measured at every tier.
+    s_ef, s_beam, s_iters = 128, 8, 12
+    seg_params = f"ef={s_ef},beam={s_beam},iters={s_iters}"
+    seg_cfg = _dc.replace(bcfg, ef=s_ef, beam=s_beam, iters=s_iters)
+    segments_p50 = {}
+    segments_recall = {}
+    f = jax.jit(lambda: g_search(s_ef, s_beam, s_iters))
+    _, _, sc = g_search(s_ef, s_beam, s_iters, with_stats=True)
+    row = add_row("hnsw", seg_params, 1, int(np.asarray(sc).max()),
+                  f()[1], p50_of(f))
+    segments_p50["1"] = row["p50_ms"]
+    segments_recall["1"] = row["recall_at_10"]
+    for n_seg in (4, 16):
+        w = IndexWriter(seg_cfg, use_kernel=uk, merge_policy=None)
+        for chunk in np.array_split(np.asarray(corpus_np), n_seg):
+            w.add(chunk)
+            w.flush()
+        reader = w.refresh()
+        f = lambda reader=reader: reader.search(queries, k=k, depth=k)  # noqa: E731,E501
+        row = add_row("hnsw", seg_params, n_seg, None, f()[1], p50_of(f))
+        segments_p50[str(n_seg)] = row["p50_ms"]
+        segments_recall[str(n_seg)] = row["recall_at_10"]
+
+    # Sublinearity: the same build+search params on a 4x-smaller tier of
+    # the same corpus — scored candidates should barely move while the
+    # streamed count drops 4x by construction.
+    n_small = n_docs // 4
+    w_ef, w_beam, w_iters = w_params
+    vn_small = bruteforce.l2_normalize(vecs[:n_small])
+    nb_s, entry_s = graph.build_graph(vn_small, bcfg)
+    _, _, sc_small = graph.search_graph(
+        vn_small, nb_s, entry_s, qn, k, ef=w_ef, beam=w_beam,
+        iters=w_iters, n_docs=n_small, use_kernel=uk, with_stats=True)
+    scored_small = int(np.asarray(sc_small).max())
+    scored_full = winner["scored_candidates"]
+    sub_rows = [
+        {"n_docs": n_small, "scored_candidates": scored_small,
+         "frac_of_corpus": round(scored_small / n_small, 4)},
+        {"n_docs": n_docs, "scored_candidates": scored_full,
+         "frac_of_corpus": round(scored_full / n_docs, 4)},
+    ]
+    gate_sublinear = bool(scored_full <= 2 * scored_small
+                          and scored_full <= 0.05 * n_docs)
+
+    summary = {
+        "n_docs": n_docs, "dim": dim, "batch": batch, "k": k,
+        "build_s": round(build_s, 1),
+        "build_params": ("degree=32,reverse_degree=32,"
+                         "ef_construction=128,entries=16"),
+        "best_fakewords": {"params": best_fw["params"],
+                           "recall_at_10": best_fw["recall_at_10"],
+                           "p50_ms": best_fw["p50_ms"]},
+        "best_hnsw": {"params": winner["params"],
+                      "recall_at_10": winner["recall_at_10"],
+                      "p50_ms": winner["p50_ms"],
+                      "scored_candidates": winner["scored_candidates"]},
+        "segments_params": seg_params,
+        "segments_p50_ms": segments_p50,
+        "segments_recall": segments_recall,
+        "gate_pareto": gate_pareto,
+        "gate_sublinear": gate_sublinear,
+    }
+    return rows, sub_rows, summary
+
+
+def emit_bench9(
+    path: str, n_docs: int = 65_536, dim: int = 64, batch: int = 64,
+) -> Dict:
+    """Write the graph Pareto-frontier artifact validated in CI
+    (benchmarks/validate_bench9.py): recall@10 vs p50 for hnsw / fake
+    words / brute force on one corpus, segmented hnsw at 1/4/16, graph
+    build wall time, and scored-candidate counts at two corpus tiers."""
+    rows, sub_rows, summary = graph_pareto(n_docs, dim, batch)
+    bench = {
+        "bench": 9,
+        "backend": jax.default_backend(),
+        "n_docs": n_docs,
+        "dim": dim,
+        "batch": batch,
+        "pareto": rows,
+        "sublinear": sub_rows,
+        "summary": summary,
+    }
+    with open(path, "w") as f:
+        json.dump(bench, f, indent=2)
+        f.write("\n")
+    return bench
+
+
 def emit_bench8(
     path: str, n_docs: int = 8192, dim: int = 64, batch: int = 64,
 ) -> Dict:
@@ -977,6 +1172,21 @@ if __name__ == "__main__":
               f"async: {a['speedup']:.2f}x sequential at "
               f"{a['batch_per_launch']:.1f} rows/launch "
               f"(SLO {a['max_wait_ms']}ms)")
+        print(f"wrote {out}")
+    elif "--bench9" in sys.argv:
+        out = os.path.join(os.path.dirname(__file__), "BENCH_9.json")
+        bench = emit_bench9(out)
+        _print_rows(bench["pareto"])
+        _print_rows(bench["sublinear"])
+        s = bench["summary"]
+        print(f"pareto: hnsw {s['best_hnsw']['params']} recall "
+              f"{s['best_hnsw']['recall_at_10']} @ "
+              f"{s['best_hnsw']['p50_ms']}ms vs fakewords "
+              f"{s['best_fakewords']['params']} "
+              f"{s['best_fakewords']['recall_at_10']} @ "
+              f"{s['best_fakewords']['p50_ms']}ms "
+              f"(gate {s['gate_pareto']}); build {s['build_s']}s; "
+              f"sublinear gate {s['gate_sublinear']}")
         print(f"wrote {out}")
     else:
         main()

@@ -1,0 +1,103 @@
+"""CI gate for the graph Pareto-frontier artifact (docs/DESIGN.md §15).
+
+    PYTHONPATH=src python benchmarks/validate_bench9.py [path]
+
+Checks that ``benchmarks/BENCH_9.json`` carries the recall@10-vs-p50
+sweep (brute force + fake words + hnsw on one corpus, one process), that
+some hnsw operating point Pareto-dominates the best fake-words row
+(recall@10 >= it at STRICTLY lower p50 — the acceptance bar for shipping
+the graph encoding), that segmented hnsw rows exist at 1 / 4 / 16
+segments with recall within 0.01 of the monolithic winner, that the
+scored-candidate count is sublinear in N (a 4x corpus step moves it by
+<= 2x and it stays under 5% of the corpus), and that the offline build
+wall time is recorded.
+"""
+import json
+import sys
+
+SEGMENTS = (1, 4, 16)
+PARETO_KEYS = {"method", "params", "segments", "n_docs", "recall_at_10",
+               "p50_ms", "scored_candidates"}
+SUBLINEAR_KEYS = {"n_docs", "scored_candidates", "frac_of_corpus"}
+SEG_RECALL_TOL = 0.01
+
+
+def validate(path: str) -> None:
+    with open(path) as f:
+        bench = json.load(f)
+    assert bench.get("bench") == 9, bench.get("bench")
+
+    rows = bench.get("pareto")
+    assert rows, "no pareto rows"
+    by_method = {}
+    for row in rows:
+        missing = PARETO_KEYS - set(row)
+        assert not missing, f"pareto row {row} missing {missing}"
+        assert row["p50_ms"] > 0 and 0.0 <= row["recall_at_10"] <= 1.0
+        by_method.setdefault(row["method"], []).append(row)
+    assert set(by_method) == {"bruteforce", "fakewords", "hnsw"}, (
+        sorted(by_method))
+
+    # Streaming rows must admit they score the whole corpus.
+    for row in by_method["bruteforce"] + by_method["fakewords"]:
+        assert row["scored_candidates"] == row["n_docs"], row
+
+    # The Pareto gate, recomputed from the rows (not trusted from the
+    # summary): some monolithic hnsw row ties-or-beats the best fake-words
+    # recall at strictly lower p50.
+    best_fw = max(by_method["fakewords"],
+                  key=lambda r: (r["recall_at_10"], -r["p50_ms"]))
+    mono = [r for r in by_method["hnsw"] if r["segments"] == 1]
+    assert mono, "no monolithic hnsw rows"
+    dominating = [r for r in mono
+                  if r["recall_at_10"] >= best_fw["recall_at_10"]
+                  and r["p50_ms"] < best_fw["p50_ms"]]
+    assert dominating, (
+        f"pareto gate: no hnsw row dominates fakewords "
+        f"{best_fw['params']} ({best_fw['recall_at_10']} @ "
+        f"{best_fw['p50_ms']}ms)")
+    winner = min(dominating, key=lambda r: r["p50_ms"])
+
+    # Segment tiers: 1/4/16 at the dedicated segmented operating point
+    # (smaller per-segment graphs search at higher ef to hold recall —
+    # Lucene's per-segment-HNSW deal), recall within tolerance of the
+    # monolithic tier through the NRT per-segment loop.
+    seg_params = bench["summary"]["segments_params"]
+    seg_rows = {r["segments"]: r for r in by_method["hnsw"]
+                if r["params"] == seg_params}
+    assert set(SEGMENTS) <= set(seg_rows), sorted(seg_rows)
+    for n_seg in SEGMENTS:
+        drift = abs(seg_rows[n_seg]["recall_at_10"]
+                    - seg_rows[1]["recall_at_10"])
+        assert drift <= SEG_RECALL_TOL, (n_seg, seg_rows[n_seg])
+
+    # Sublinearity: two corpus tiers 4x apart, scored candidates nearly
+    # flat and a small corpus fraction.
+    sub = bench.get("sublinear")
+    assert sub and len(sub) == 2, sub
+    for row in sub:
+        missing = SUBLINEAR_KEYS - set(row)
+        assert not missing, f"sublinear row {row} missing {missing}"
+    small, full = sorted(sub, key=lambda r: r["n_docs"])
+    assert full["n_docs"] == 4 * small["n_docs"], (small, full)
+    assert full["scored_candidates"] <= 2 * small["scored_candidates"], (
+        small, full)
+    assert full["scored_candidates"] <= 0.05 * full["n_docs"], full
+
+    summary = bench["summary"]
+    assert summary["build_s"] > 0, summary
+    assert summary["gate_pareto"] is True, summary
+    assert summary["gate_sublinear"] is True, summary
+
+    print(f"{path} ok: hnsw {winner['params']} "
+          f"recall {winner['recall_at_10']} @ {winner['p50_ms']}ms beats "
+          f"fakewords {best_fw['params']} ({best_fw['recall_at_10']} @ "
+          f"{best_fw['p50_ms']}ms); scored "
+          f"{full['scored_candidates']}/{full['n_docs']} docs "
+          f"({small['scored_candidates']} at the 4x-smaller tier); "
+          f"segments 1/4/16 within {SEG_RECALL_TOL} recall; "
+          f"build {summary['build_s']}s")
+
+
+if __name__ == "__main__":
+    validate(sys.argv[1] if len(sys.argv) > 1 else "benchmarks/BENCH_9.json")

@@ -31,6 +31,7 @@ from repro.core.segments import IndexWriter, SegmentedAnnIndex
 from repro.core.types import (
     BruteForceConfig,
     FakeWordsConfig,
+    GraphConfig,
     KdTreeConfig,
     LexicalLshConfig,
     SearchParams,
@@ -52,6 +53,7 @@ def main():
         FakeWordsConfig(quantization=50),                 # best (paper)
         LexicalLshConfig(buckets=300, hashes=1),          # middle
         KdTreeConfig(dims=8, reduction="pca"),            # fast, collapsed
+        GraphConfig(ef=128, beam=16, iters=12),           # graph (§15)
         BruteForceConfig(),                               # the oracle itself
     ]:
         writer = IndexWriter(cfg)
@@ -158,6 +160,21 @@ def main():
     r_rrf = float(ev.recall_at(gt, ids_h))
     print(f"hybrid RRF(classic, dot) R@10={r_rrf:.3f} "
           f"(classic {r_lex:.3f}, dot {r_den:.3f})")
+
+    # The graph encoding end to end (docs/DESIGN.md §15): method="hnsw"
+    # traverses a fixed-degree adjacency with a batched beam search, so a
+    # query scores O(iters * beam * degree) gathered rows instead of
+    # streaming all N postings — the sublinear point on the Pareto curve
+    # (BENCH_9.json).  Serving rides the same AnnService as every encoding.
+    from repro.serve.ann_service import AnnService, AnnServiceConfig
+
+    g = AnnIndex.build(corpus, GraphConfig(ef=128, beam=16, iters=12))
+    svc = AnnService(g, AnnServiceConfig(k=10, depth=10, rerank=False))
+    _, ids_g = svc.search_batch(queries)
+    r_g = float(ev.recall_at(gt, jnp.asarray(ids_g)))
+    print(f"hnsw served through AnnService: R@10={r_g:.3f} "
+          f"(adjacency {g.index.neighbors.shape}, "
+          f"entries {np.asarray(g.index.entry).tolist()})")
 
 
 if __name__ == "__main__":

@@ -54,6 +54,8 @@ from repro.core.types import (
     FakeWordsConfig,
     FakeWordsIndex,
     FlatIndex,
+    GraphConfig,
+    GraphIndex,
     KdTreeConfig,
     KdTreeIndex,
     LexicalLshConfig,
@@ -62,7 +64,10 @@ from repro.core.types import (
     QuantizedStore,
 )
 
-AnyConfig = Union[FakeWordsConfig, LexicalLshConfig, KdTreeConfig, BruteForceConfig]
+AnyConfig = Union[
+    FakeWordsConfig, LexicalLshConfig, KdTreeConfig, BruteForceConfig,
+    GraphConfig,
+]
 
 RERANK_STORES = ("exact", "int8", "none")
 PRIMARY_POSTINGS = ("fp32", "int8", "int4")
@@ -71,9 +76,11 @@ POSTINGS_GROUPS = (32, 64)
 _QUANT_POSTINGS_MSG = (
     "quantized primary postings support fake-words (classic/dot) and "
     "brute-force; the LSH signature store is categorical (uint32 MinHash "
-    "buckets — scaling them is meaningless) and the kd-tree reduced store "
-    "is already ~8 f32 columns with a mixed-magnitude L2-lift column, so "
-    "neither gains from int8/int4 packing (docs/DESIGN.md §12)"
+    "buckets — scaling them is meaningless), the kd-tree reduced store "
+    "is already ~8 f32 columns with a mixed-magnitude L2-lift column, and "
+    "the graph matcher gathers tiny neighbor blocks (bytes moved scale "
+    "with beam*degree, not N — use rerank_store='int8' for the memory "
+    "knob instead) (docs/DESIGN.md §12)"
 )
 
 _TREE_BUILD_MSG = (
@@ -318,6 +325,31 @@ class KdTreePostings:
 
 
 @dataclasses.dataclass(frozen=True)
+class GraphPostings:
+    """Flat proximity-graph stage (docs/DESIGN.md §15): exact-kNN candidate
+    pools -> Vamana robust prune -> reverse-edge fill -> fixed-degree int32
+    adjacency + entry points.  The unit rows are the match operand (neighbor
+    blocks gather from them), so they are kept regardless of the rerank
+    store, like :class:`FlatPostings`.  Under ``axes`` the candidate pools
+    circulate the shard ring as neighbor-exchange rounds
+    (``graph.build_graph_sharded``)."""
+
+    config: GraphConfig
+
+    def __call__(self, rep, model, v, store, n_total, axes=None) -> GraphIndex:
+        from repro.core import graph
+
+        if axes is None:
+            neighbors, entry = graph.build_graph(v, self.config)
+        else:
+            neighbors, entry = graph.build_graph_sharded(
+                v, self.config, axes=axes, n_total=n_total)
+        return GraphIndex(
+            vectors=v, neighbors=neighbors, entry=entry, vq=store["vq"]
+        )
+
+
+@dataclasses.dataclass(frozen=True)
 class FlatPostings:
     """Brute force: the normalized rows ARE the match operand, so the exact
     fp32 vectors are kept regardless of the rerank-store choice — unless a
@@ -530,7 +562,7 @@ def make_build_pipeline(
     store = _STORES[rerank_store]
     quantizer = None
     if primary_postings != "fp32":
-        if isinstance(config, (LexicalLshConfig, KdTreeConfig)):
+        if isinstance(config, (LexicalLshConfig, KdTreeConfig, GraphConfig)):
             raise ValueError(_QUANT_POSTINGS_MSG)
         if postings_group not in POSTINGS_GROUPS:
             raise ValueError(
@@ -552,5 +584,9 @@ def make_build_pipeline(
     if isinstance(config, BruteForceConfig):
         return BuildPipeline(
             config, IdentityTransform(), FlatPostings(quantizer), store
+        )
+    if isinstance(config, GraphConfig):
+        return BuildPipeline(
+            config, IdentityTransform(), GraphPostings(config), store
         )
     raise TypeError(f"unknown config {type(config)}")

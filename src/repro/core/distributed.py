@@ -45,6 +45,8 @@ from repro.core.types import (
     FakeWordsConfig,
     FakeWordsIndex,
     FlatIndex,
+    GraphConfig,
+    GraphIndex,
     KdTreeConfig,
     KdTreeIndex,
     LexicalLshConfig,
@@ -117,6 +119,10 @@ def _pspec_tree(
         )
     if kind == "bruteforce":
         return FlatIndex(vectors=vec, vq=vqs, pq=pq)
+    if kind == "hnsw":
+        # Adjacency rows shard with the docs they belong to (neighbor ids
+        # stay GLOBAL); the entry points are replicated like idf/df.
+        return GraphIndex(vectors=doc, neighbors=doc, entry=P(), vq=vqs)
     raise ValueError(f"unknown index kind {kind!r}")
 
 
@@ -167,6 +173,8 @@ def index_pspec(index, axes: Sequence[str]):
                 if index.pq is not None else None
             ),
         )
+    if isinstance(index, GraphIndex):
+        return _pspec_tree("hnsw", axes, vq=index.vq is not None)
     raise TypeError(f"unknown index {type(index)}")
 
 
@@ -228,6 +236,10 @@ def config_pspec(
             vq=quantized_store,
             pq=doc if postings_bits > 0 else None,
         )
+    if isinstance(config, GraphConfig):
+        # The unit rows are the match operand: always present (like the
+        # brute-force store), whatever the rerank-store choice.
+        return _pspec_tree("hnsw", axes, vq=quantized_store)
     raise TypeError(f"unknown config {type(config)}")
 
 
@@ -344,6 +356,15 @@ def make_sharded_search(
     axes = tuple(axes)
     from repro.kernels.fused_topk import ops as fused
 
+    if isinstance(config, GraphConfig):
+        raise TypeError(
+            "graph search cannot run shard-local: adjacency edges cross "
+            "shard boundaries, so per-shard traversal + merge is not the "
+            "same algorithm.  Serve graphs segmented "
+            "(SegmentedAnnIndex) or single-device; the sharded BUILD "
+            "(build_sharded) is supported and returns doc-sharded leaves "
+            "you can all-gather onto one device."
+        )
     if rerank_store is None:
         rerank_store = "exact" if keep_vectors else "none"
     if rerank and rerank_store == "none" and not isinstance(config, BruteForceConfig):

@@ -1,0 +1,382 @@
+"""Flat proximity-graph build + batched beam search (docs/DESIGN.md §15).
+
+The fourth encoding: a single-layer Vamana-style navigable graph instead of
+a literal multi-layer HNSW.  Both sides are expressed in fixed shapes so the
+whole thing jits:
+
+* Build: exact-kNN candidate pools (streamed in doc tiles, or exchanged
+  around the shard ring under ``shard_map``), Vamana robust pruning
+  (``alpha``-slack occlusion) down to ``degree`` forward edges, then a
+  deterministic reverse-edge pass that fills ``reverse_degree`` extra slots
+  (nearest sources first) so the graph stays navigable where forward
+  pruning alone would strand nodes.
+
+* Search: batched best-first beam search as a fixed-iteration
+  ``lax.fori_loop``.  Two fixed-size lists per query ride the carry: the
+  traversal list (raw scores — masked nodes stay traversable, preserving
+  connectivity under filters) and the result list (filter bits applied, so
+  masked nodes are never emitted).  The visited set is a dense (B, N) bool
+  bitmap.  Neighbor blocks are gathered as one static (B, beam*degree)
+  slab per iteration and scored through ``fused_topk_gathered`` on the
+  kernel path (XLA einsum on the fallback path), so candidate scoring
+  never leaves the fused machinery.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.types import GraphConfig
+from repro.kernels.fused_topk import ops as fused_ops
+
+NO_EDGE = jnp.int32(-1)
+NEG_INF = jnp.float32(-jnp.inf)
+_PRUNE_BLOCK = 4096  # rows robust-pruned per step: bounds the (nb, M, dim)
+                     # candidate-vector gather that dominates build memory
+
+
+# --------------------------------------------------------------------------
+# Build: candidate pools
+# --------------------------------------------------------------------------
+
+
+def _merge_topk(run_s, run_i, blk_s, blk_i, m: int):
+    """Merge a scored block into the running (., m) top-m lists."""
+    s = jnp.concatenate([run_s, blk_s], axis=1)
+    i = jnp.concatenate([run_i, blk_i], axis=1)
+    top_s, pos = lax.top_k(s, m)
+    return top_s, jnp.take_along_axis(i, pos, axis=1)
+
+
+def _pool_step(v_rows, row_gids, block, block_gids, run_s, run_i, m: int):
+    """Score ``v_rows`` against one candidate block and merge into the
+    running exact-kNN pools (self-edges masked)."""
+    s = v_rows @ block.T  # (n, nb)
+    s = jnp.where(row_gids[:, None] == block_gids[None, :], NEG_INF, s)
+    blk_i = jnp.broadcast_to(block_gids[None, :], s.shape)
+    return _merge_topk(run_s, run_i, s, blk_i, m)
+
+
+def _knn_pools(v_rows, row_gids, v_all, base_gid, m: int, tile: int):
+    """(n, m) exact top-m cosine pools for ``v_rows`` against ``v_all``
+    (global ids ``base_gid + arange``), streamed in doc tiles."""
+    n = v_rows.shape[0]
+    n_all = v_all.shape[0]
+    run_s = jnp.full((n, m), NEG_INF, jnp.float32)
+    run_i = jnp.full((n, m), NO_EDGE, jnp.int32)
+    for t0 in range(0, n_all, tile):
+        t1 = min(t0 + tile, n_all)
+        gids = base_gid + jnp.arange(t0, t1, dtype=jnp.int32)
+        run_s, run_i = _pool_step(
+            v_rows, row_gids, v_all[t0:t1], gids, run_s, run_i, m)
+    return run_s, run_i
+
+
+# --------------------------------------------------------------------------
+# Build: Vamana robust prune
+# --------------------------------------------------------------------------
+
+
+def _prune_block(vecs, cand_s, cand_i, v_all, degree: int, alpha: float):
+    """Robust-prune one block of rows down to ``degree`` forward edges.
+
+    Vamana's occlusion rule in cosine form (unit rows: d^2/2 = 1 - sim):
+    after selecting s, candidate c is dropped when
+    ``alpha * (1 - sim(s, c)) <= (1 - sim(row, c))`` — c is closer to an
+    already-kept neighbor than to the row itself, up to the alpha slack.
+    """
+    nb, m = cand_i.shape
+    cvecs = v_all[jnp.maximum(cand_i, 0)]  # (nb, m, dim)
+    d_row = 1.0 - cand_s  # distance proxy row -> candidate
+    rows = jnp.arange(nb)[:, None]
+
+    def step(t, carry):
+        alive, sel_s, sel_i = carry
+        score = jnp.where(alive, cand_s, NEG_INF)
+        best = jnp.max(score, axis=1)
+        j = jnp.argmax(score, axis=1)  # (nb,)
+        got = best > NEG_INF
+        pick_i = jnp.where(got, jnp.take_along_axis(cand_i, j[:, None], 1)[:, 0], NO_EDGE)
+        sel_i = sel_i.at[:, t].set(pick_i)
+        sel_s = sel_s.at[:, t].set(jnp.where(got, best, NEG_INF))
+        sel_vec = jnp.take_along_axis(cvecs, j[:, None, None], axis=1)[:, 0]
+        sim_sel = jnp.einsum("bd,bmd->bm", sel_vec, cvecs)
+        occluded = alpha * (1.0 - sim_sel) <= d_row
+        alive = alive & ~(occluded & got[:, None])
+        alive = alive.at[rows, j[:, None]].set(False)
+        return alive, sel_s, sel_i
+
+    alive0 = (cand_i >= 0) & (cand_s > NEG_INF)
+    sel_s0 = jnp.full((nb, degree), NEG_INF, jnp.float32)
+    sel_i0 = jnp.full((nb, degree), NO_EDGE, jnp.int32)
+    _, sel_s, sel_i = lax.fori_loop(0, degree, step, (alive0, sel_s0, sel_i0))
+    return sel_s, sel_i
+
+
+def _prune_all(v_rows, cand_s, cand_i, v_all, degree: int, alpha: float):
+    n = v_rows.shape[0]
+    outs, outi = [], []
+    for b0 in range(0, n, _PRUNE_BLOCK):
+        b1 = min(b0 + _PRUNE_BLOCK, n)
+        s, i = _prune_block(
+            v_rows[b0:b1], cand_s[b0:b1], cand_i[b0:b1], v_all, degree, alpha)
+        outs.append(s)
+        outi.append(i)
+    return jnp.concatenate(outs, 0), jnp.concatenate(outi, 0)
+
+
+# --------------------------------------------------------------------------
+# Build: reverse edges + entry points
+# --------------------------------------------------------------------------
+
+
+def _reverse_edges(fwd_i, fwd_s, n_total: int, r_rev: int):
+    """(n_total, r_rev) reverse adjacency from the full forward lists.
+
+    For every forward edge src->dst, dst gains a reverse slot pointing back
+    at src; each node keeps its ``r_rev`` highest-scoring sources (ties by
+    edge position, so the pass is deterministic).  Sort-based: no
+    data-dependent shapes, safe under jit / shard_map.
+    """
+    n, rf = fwd_i.shape
+    src = jnp.broadcast_to(
+        jnp.arange(n, dtype=jnp.int32)[:, None], (n, rf)).reshape(-1)
+    dst = fwd_i.reshape(-1)
+    score = fwd_s.reshape(-1)
+    valid = dst >= 0
+    # Stable two-pass lexsort: group by dst, best-scoring sources first.
+    ord1 = jnp.argsort(-score)  # jax argsort is stable
+    dst1 = jnp.where(valid[ord1], dst[ord1], jnp.int32(n_total))
+    ord2 = jnp.argsort(dst1)
+    order = ord1[ord2]
+    sdst = dst1[ord2]
+    ssrc = src[order]
+    first = jnp.searchsorted(sdst, sdst, side="left")
+    rank = jnp.arange(sdst.shape[0]) - first
+    keep = (sdst < n_total) & (rank < r_rev)
+    out = jnp.full((n_total, r_rev), NO_EDGE, jnp.int32)
+    out = out.at[
+        jnp.where(keep, sdst, jnp.int32(n_total)),
+        jnp.where(keep, rank, 0),
+    ].set(ssrc, mode="drop")
+    return out
+
+
+def _entry_points(v_all, n_entries: int):
+    """Medoid (max dot with the corpus mean) + deterministic strided seeds."""
+    n = v_all.shape[0]
+    mean = jnp.mean(v_all, axis=0)
+    medoid = jnp.argmax(v_all @ mean).astype(jnp.int32)
+    k = min(n_entries, n)
+    stride = max(1, n // max(1, k))
+    seeds = (jnp.arange(1, n_entries, dtype=jnp.int32) * stride) % max(n, 1)
+    return jnp.concatenate([medoid[None], seeds])
+
+
+# --------------------------------------------------------------------------
+# Build: local + sharded entry points
+# --------------------------------------------------------------------------
+
+
+def build_graph(v, config: GraphConfig):
+    """Local (single-host) graph build: (neighbors (N, R) int32, entry)."""
+    v = jnp.asarray(v, jnp.float32)
+    n = v.shape[0]
+    gids = jnp.arange(n, dtype=jnp.int32)
+    m = min(config.ef_construction, max(1, n - 1))
+    cand_s, cand_i = _knn_pools(v, gids, v, 0, m, config.build_tile)
+    fwd_s, fwd_i = _prune_all(v, cand_s, cand_i, v, config.degree,
+                              config.alpha)
+    rev = _reverse_edges(fwd_i, fwd_s, n, config.reverse_degree)
+    neighbors = jnp.concatenate([fwd_i, rev], axis=1)
+    return neighbors, _entry_points(v, config.entries)
+
+
+def build_graph_sharded(v_local, config: GraphConfig, axes, n_total: int):
+    """Graph build inside ``shard_map``: neighbor-exchange rounds.
+
+    Candidate pools circulate doc blocks around the shard ring
+    (``ppermute``) so every shard scores its rows against the whole corpus
+    one block at a time with GLOBAL ids; pruning gathers candidate vectors
+    from an ``all_gather``-replicated copy (the pool phase never needs it
+    resident, the prune phase does), and the reverse pass runs on the
+    all-gathered forward lists so every shard computes the identical global
+    answer and keeps its own row slice.  Matches the local build up to
+    exact score ties (merge order differs).
+    """
+    v_local = jnp.asarray(v_local, jnp.float32)
+    n_local = v_local.shape[0]
+    n_shards = n_total // n_local
+    flat = jnp.int32(0)
+    for name in axes:
+        flat = flat * lax.psum(1, name) + lax.axis_index(name)
+    base = (flat * n_local).astype(jnp.int32)
+    row_gids = base + jnp.arange(n_local, dtype=jnp.int32)
+    m = min(config.ef_construction, max(1, n_total - 1))
+
+    run_s = jnp.full((n_local, m), NEG_INF, jnp.float32)
+    run_i = jnp.full((n_local, m), NO_EDGE, jnp.int32)
+    if len(axes) == 1 and n_shards > 1:
+        # Ring exchange: after step k every shard holds the block that
+        # started (flat + k) shards to the right.
+        perm = [(i, (i - 1) % n_shards) for i in range(n_shards)]
+        block = v_local
+        for step in range(n_shards):
+            src = (flat + step) % n_shards
+            src_base = (src * n_local).astype(jnp.int32)
+            gids = src_base + jnp.arange(n_local, dtype=jnp.int32)
+            run_s, run_i = _pool_step(
+                v_local, row_gids, block, gids, run_s, run_i, m)
+            if step + 1 < n_shards:
+                block = lax.ppermute(block, axes[0], perm)
+        v_all = lax.all_gather(v_local, axes, axis=0, tiled=True)
+    else:
+        # Multi-axis meshes (or a single shard): tile the gathered corpus.
+        v_all = lax.all_gather(v_local, axes, axis=0, tiled=True)
+        run_s, run_i = _knn_pools(
+            v_local, row_gids, v_all, 0, m, config.build_tile)
+
+    fwd_s, fwd_i = _prune_all(
+        v_local, run_s, run_i, v_all, config.degree, config.alpha)
+    fwd_i_all = lax.all_gather(fwd_i, axes, axis=0, tiled=True)
+    fwd_s_all = lax.all_gather(fwd_s, axes, axis=0, tiled=True)
+    rev_all = _reverse_edges(fwd_i_all, fwd_s_all, n_total,
+                             config.reverse_degree)
+    rev = lax.dynamic_slice(
+        rev_all, (base, 0), (n_local, config.reverse_degree))
+    neighbors = jnp.concatenate([fwd_i, rev], axis=1)
+    return neighbors, _entry_points(v_all, config.entries)
+
+
+# --------------------------------------------------------------------------
+# Search: batched fixed-iteration beam traversal
+# --------------------------------------------------------------------------
+
+
+def _gather_bits(filt, ids):
+    """(B, m) keep-bits for global ``ids`` (-1 = invalid) from a (N,) or
+    (B, N) predicate bitmap."""
+    safe = jnp.maximum(ids, 0)
+    if filt.ndim == 1:
+        bits = filt[safe]
+    else:
+        bits = jnp.take_along_axis(filt, safe, axis=1)
+    return (bits != 0) & (ids >= 0)
+
+
+def _dedup_block(ids, valid):
+    """Drop later duplicates inside one gathered block (keeps the first
+    valid occurrence) so no id can enter the lists twice per round."""
+    m = ids.shape[1]
+    eq = ids[:, :, None] == ids[:, None, :]  # (B, m, m): [., j, k]
+    earlier = jnp.tril(jnp.ones((m, m), bool), k=-1)[None]
+    dup = jnp.any(eq & earlier & valid[:, None, :], axis=2)
+    return valid & ~dup
+
+
+def _score_block(q, vectors, ids, valid, n_docs: int, use_kernel: bool):
+    """Exact cosine scores for one gathered id block: (B, m) scores with
+    invalid slots pinned to (-inf, -1)."""
+    b, m = ids.shape
+    safe = jnp.maximum(ids, 0)
+    rows = vectors[safe]  # (B, m, dim)
+    if use_kernel:
+        row_ids = jnp.where(valid, ids, jnp.int32(n_docs))
+        return fused_ops.fused_topk_gathered(
+            q, rows, row_ids, depth=m, n_docs=n_docs)
+    s = jnp.einsum("bd,bmd->bm", q, rows)
+    s = jnp.where(valid & (ids < n_docs), s, NEG_INF)
+    return s, jnp.where(s > NEG_INF, ids, NO_EDGE)
+
+
+def search_graph(vectors, neighbors, entry, q, depth: int, *, ef: int,
+                 beam: int, iters: int, n_docs: int, use_kernel: bool,
+                 filt=None, with_stats: bool = False):
+    """Batched best-first beam search over the flat graph.
+
+    Two fixed-size lists per query: the TRAVERSAL list of ``ef`` raw-scored
+    candidates (filter bits ignored, so masked nodes route the walk) and
+    the RESULT list of ``depth`` filtered candidates (masked nodes pinned
+    to (-inf, -1), never emitted).  Each of the ``iters`` iterations
+    expands the best ``beam`` unexpanded traversal candidates, gathers
+    their adjacency rows as one (B, beam*R) slab, dedups against the
+    visited bitmap, scores the slab, and merges both lists.  Every shape
+    is static, so the loop compiles once per (B, depth) and reuses the
+    executable across query batches.
+    """
+    q = jnp.asarray(q, jnp.float32)
+    b = q.shape[0]
+    n = vectors.shape[0]
+    r = neighbors.shape[1]
+    m = beam * r
+    brows = jnp.arange(b)[:, None]
+
+    init_i = jnp.broadcast_to(entry[None, :].astype(jnp.int32),
+                              (b, entry.shape[0]))
+    init_valid = _dedup_block(init_i, init_i < n_docs)
+    init_s, init_ids = _score_block(q, vectors, init_i, init_valid,
+                                    n_docs, use_kernel)
+    visited = jnp.zeros((b, n), bool).at[
+        brows, jnp.maximum(init_i, 0)].max(init_valid)
+
+    def _padded(s, i, width):
+        pad = width - s.shape[1]
+        if pad > 0:
+            s = jnp.concatenate(
+                [s, jnp.full((b, pad), NEG_INF, jnp.float32)], axis=1)
+            i = jnp.concatenate(
+                [i, jnp.full((b, pad), NO_EDGE, jnp.int32)], axis=1)
+            return s, i
+        top_s, pos = lax.top_k(s, width)
+        return top_s, jnp.take_along_axis(i, pos, axis=1)
+
+    def _masked(s, i):
+        if filt is None:
+            return s, i
+        keep = _gather_bits(filt, i)
+        return jnp.where(keep, s, NEG_INF), jnp.where(keep, i, NO_EDGE)
+
+    cand_s, cand_i = _padded(init_s, init_ids, ef)
+    cand_f = jnp.zeros((b, ef), bool)
+    res_s, res_i = _padded(*_masked(init_s, init_ids), depth)
+    scored = jnp.sum(init_valid, axis=1, dtype=jnp.int32)
+
+    def body(_, carry):
+        cand_s, cand_i, cand_f, res_s, res_i, visited, scored = carry
+        avail = jnp.where((~cand_f) & (cand_i >= 0), cand_s, NEG_INF)
+        pick_s, pos = lax.top_k(avail, beam)  # positions into the cand list
+        live = pick_s > NEG_INF  # (b, beam)
+        frontier = jnp.where(
+            live, jnp.take_along_axis(cand_i, pos, axis=1), NO_EDGE)
+        cand_f = cand_f.at[brows, pos].set(True)
+
+        nbr = neighbors[jnp.maximum(frontier, 0)].reshape(b, m)
+        valid = (nbr >= 0) & jnp.repeat(live, r, axis=1)
+        seen = visited[brows, jnp.maximum(nbr, 0)]
+        valid = _dedup_block(nbr, valid & ~seen)
+        blk_s, blk_i = _score_block(q, vectors, nbr, valid, n_docs,
+                                    use_kernel)
+        visited = visited.at[brows, jnp.maximum(nbr, 0)].max(valid)
+        scored = scored + jnp.sum(valid, axis=1, dtype=jnp.int32)
+
+        new_s, new_i = _merge_topk(cand_s, cand_i, blk_s, blk_i, ef)
+        # Expanded flags travel with the re-sort: redo the top-k gather on
+        # the concatenated flag row (new entries start unexpanded).
+        all_s = jnp.concatenate([cand_s, blk_s], axis=1)
+        all_f = jnp.concatenate([cand_f, jnp.zeros((b, m), bool)], axis=1)
+        _, fpos = lax.top_k(all_s, ef)
+        cand_f = jnp.take_along_axis(all_f, fpos, axis=1)
+        cand_s, cand_i = new_s, new_i
+
+        mblk_s, mblk_i = _masked(blk_s, blk_i)
+        res_s, res_i = _merge_topk(res_s, res_i, mblk_s, mblk_i, depth)
+        return cand_s, cand_i, cand_f, res_s, res_i, visited, scored
+
+    carry = (cand_s, cand_i, cand_f, res_s, res_i, visited, scored)
+    carry = lax.fori_loop(0, iters, body, carry)
+    res_s, res_i = carry[3], carry[4]
+    res_s = jnp.where(res_i >= 0, res_s, NEG_INF)
+    if with_stats:
+        return res_s, res_i, carry[6]
+    return res_s, res_i

@@ -44,6 +44,8 @@ from repro.core.types import (
     FakeWordsConfig,
     FakeWordsIndex,
     FlatIndex,
+    GraphConfig,
+    GraphIndex,
     KdTreeConfig,
     KdTreeIndex,
     LexicalLshConfig,
@@ -61,20 +63,25 @@ from repro.core.types import (
 # SegmentedAnnIndex.load for v2 commit points).
 FORMAT_VERSION = 1
 
-AnyConfig = Union[FakeWordsConfig, LexicalLshConfig, KdTreeConfig, BruteForceConfig]
-AnyIndex = Union[FakeWordsIndex, LshIndex, KdTreeIndex, FlatIndex]
+AnyConfig = Union[
+    FakeWordsConfig, LexicalLshConfig, KdTreeConfig, BruteForceConfig,
+    GraphConfig,
+]
+AnyIndex = Union[FakeWordsIndex, LshIndex, KdTreeIndex, FlatIndex, GraphIndex]
 
 _METHOD_BY_INDEX = {
     FakeWordsIndex: "fake-words",
     LshIndex: "lexical-lsh",
     KdTreeIndex: "kd-tree",
     FlatIndex: "bruteforce",
+    GraphIndex: "hnsw",
 }
 _CONFIG_BY_METHOD = {
     "fake-words": FakeWordsConfig,
     "lexical-lsh": LexicalLshConfig,
     "kd-tree": KdTreeConfig,
     "bruteforce": BruteForceConfig,
+    "hnsw": GraphConfig,
 }
 
 
@@ -491,4 +498,9 @@ def _rebuild_index(
         )
     if method == "bruteforce":
         return FlatIndex(vectors=g("vectors"), vq=vq, pq=pq)
+    if method == "hnsw":
+        return GraphIndex(
+            vectors=arrays["vectors"], neighbors=arrays["neighbors"],
+            entry=arrays["entry"], vq=vq,
+        )
     raise ValueError(f"unknown method {method!r}")

@@ -44,12 +44,16 @@ from repro.core.types import (
     BruteForceConfig,
     FakeWordsConfig,
     FlatIndex,
+    GraphConfig,
     KdTreeConfig,
     LexicalLshConfig,
     SearchParams,
 )
 
-AnyConfig = Union[FakeWordsConfig, LexicalLshConfig, KdTreeConfig, BruteForceConfig]
+AnyConfig = Union[
+    FakeWordsConfig, LexicalLshConfig, KdTreeConfig, BruteForceConfig,
+    GraphConfig,
+]
 
 
 # --------------------------------------------------------------------------
@@ -445,6 +449,41 @@ class CosineMatcher:
 
 
 @dataclasses.dataclass(frozen=True)
+class GraphMatcher:
+    """Batched beam search over the flat proximity graph (docs/DESIGN.md
+    §15) — the repo's first sublinear match stage: per-query work is
+    ~``iters * beam * total_degree`` scored rows, independent of N.
+
+    ``ef`` / ``beam`` / ``iters`` are static fields (the matcher is a
+    jit-static argument), so the traversal compiles to one fixed-iteration
+    ``fori_loop`` executable per query-batch shape.  ``filt`` (liveDocs ∧
+    predicate) is consulted INSIDE traversal: masked nodes stay traversable
+    (connectivity survives low selectivity) but are never emitted.
+    """
+
+    ef: int = 64
+    beam: int = 4
+    iters: int = 32
+
+    def __call__(
+        self, index, q_norm: jax.Array, depth: int,
+        bm=None, use_kernel: Optional[bool] = None,
+        filt: Optional[jax.Array] = None,
+        n_docs: Optional[int] = None,
+    ) -> Tuple[jax.Array, jax.Array]:
+        from repro.core import graph
+
+        assert bm is None, "graph search has no blockmax stage"
+        nd = index.num_docs if n_docs is None else n_docs
+        d = min(depth, nd)
+        return graph.search_graph(
+            index.vectors, index.neighbors, index.entry, q_norm, d,
+            ef=self.ef, beam=self.beam, iters=self.iters, n_docs=nd,
+            use_kernel=_use_kernel(use_kernel), filt=filt,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
 class BlockMaxMatcher:
     """Two-stage blockmax pruning (docs/DESIGN.md §6) as a matcher stage:
     optimistic block-bound pass -> keep ``n_keep`` blocks -> exact scoring of
@@ -699,7 +738,7 @@ def make_encoder(config: AnyConfig):
         return MinHashEncoder(config)
     if isinstance(config, KdTreeConfig):
         return ReducedPointEncoder()
-    if isinstance(config, BruteForceConfig):
+    if isinstance(config, (BruteForceConfig, GraphConfig)):
         return IdentityEncoder()
     raise TypeError(f"unknown config {type(config)}")
 
@@ -725,6 +764,9 @@ def make_matcher(
         return KdTreeMatcher() if config.backend == "tree" else KdScanMatcher()
     if isinstance(config, BruteForceConfig):
         return CosineMatcher()
+    if isinstance(config, GraphConfig):
+        return GraphMatcher(
+            ef=config.ef, beam=config.beam, iters=config.search_iters)
     raise TypeError(f"unknown config {type(config)}")
 
 

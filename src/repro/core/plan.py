@@ -138,9 +138,22 @@ class QueryPlan:
     search: Callable[[Any], Tuple[jax.Array, jax.Array]]
     weight: float = 1.0
     label: str = ""
+    search_at: Optional[
+        Callable[[Any, int], Tuple[jax.Array, jax.Array]]
+    ] = None
 
     def run(self, queries) -> Tuple[jax.Array, jax.Array]:
         return self.search(queries)
+
+    def run_at(self, queries, k: int) -> Tuple[jax.Array, jax.Array]:
+        """Run with at least ``k`` candidates, for enclosing plans that
+        discover mid-merge they need a deeper list (see
+        :class:`MultiVectorPlan`).  Falls back to the fixed-depth
+        ``search`` when no depth-aware callable was supplied — callers
+        detect the unchanged width and stop asking."""
+        if self.search_at is None:
+            return self.search(queries)
+        return self.search_at(queries, k)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -165,7 +178,15 @@ class FusionStage:
 @dataclasses.dataclass(frozen=True)
 class MultiVectorPlan:
     """Multi-vector node: run the inner plan in vector-id space, then
-    aggregate to doc ids with :func:`aggregate_by_doc`."""
+    aggregate to doc ids with :func:`aggregate_by_doc`.
+
+    Aggregation collapses a doc's vectors into one entry, so a k_sub-deep
+    vector list can fill fewer than k docs (worst case k_sub // n_vec_per_doc
+    docs when every doc's vectors cluster together).  When the aggregated
+    list is under-filled and the inner plan exposes ``run_at``, the inner
+    search is re-run at a geometrically doubled candidate depth and
+    re-reduced until k docs fill (or the vector corpus is exhausted, or the
+    inner plan stops yielding deeper lists)."""
 
     inner: Any
     doc_map: Any
@@ -174,4 +195,21 @@ class MultiVectorPlan:
 
     def run(self, queries) -> Tuple[jax.Array, jax.Array]:
         s, i = self.inner.run(queries)
-        return aggregate_by_doc(s, i, self.doc_map, self.k, agg=self.agg)
+        top_s, top_i = aggregate_by_doc(s, i, self.doc_map, self.k, agg=self.agg)
+        run_at = getattr(self.inner, "run_at", None)
+        if run_at is None:
+            return top_s, top_i
+        n_vec = int(jnp.asarray(self.doc_map).shape[0])
+        k_sub = int(i.shape[1])
+        while k_sub < n_vec and (
+            top_i.shape[1] < self.k
+            or int(jnp.min(jnp.sum(top_i >= 0, axis=1))) < self.k
+        ):
+            k_sub = min(2 * k_sub, n_vec)
+            s, i = run_at(queries, k_sub)
+            top_s, top_i = aggregate_by_doc(
+                s, i, self.doc_map, self.k, agg=self.agg
+            )
+            if int(i.shape[1]) < k_sub:
+                break  # inner plan cannot go deeper
+        return top_s, top_i

@@ -147,6 +147,70 @@ class BruteForceConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class GraphConfig:
+    """Flat navigable-graph encoding (user-facing method name ``"hnsw"``).
+
+    A single-layer Vamana-style proximity graph rather than a literal
+    multi-layer HNSW: fixed-degree int32 adjacency arrays and a
+    fixed-iteration batched beam search keep every shape static, which is
+    what jit / Pallas / shard_map want (docs/DESIGN.md §15 justifies the
+    choice).  Search cost per query is ~``entries + iters*beam*degree``
+    scored rows — sublinear in N, unlike every other encoding here.
+
+    degree:          forward edges per node (alpha-pruned nearest-out).
+    reverse_degree:  extra slots filled with reverse edges (makes the
+                     graph near-undirected; rescues connectivity that
+                     forward pruning alone can lose).  Total fixed degree
+                     = degree + reverse_degree; absent edges are -1.
+    ef_construction: exact-kNN candidate pool size per node at build time.
+    alpha:           Vamana robust-prune slack (1.0 = pure greedy prune).
+    ef:              default search-time candidate list size (overridable
+                     per matcher; static under jit).
+    beam:            nodes expanded per traversal iteration (static).
+    iters:           traversal iterations; 0 derives ``ceil(2*ef/beam)``.
+    entries:         entry points seeding the search (medoid + strided).
+    build_tile:      doc-tile size for the streaming exact-kNN pass.
+    """
+
+    degree: int = 16
+    reverse_degree: int = 16
+    ef_construction: int = 64
+    alpha: float = 1.2
+    ef: int = 64
+    beam: int = 4
+    iters: int = 0
+    entries: int = 4
+    build_tile: int = 2048
+
+    def __post_init__(self):
+        if self.degree < 1:
+            raise ValueError(f"degree must be >= 1, got {self.degree}")
+        if self.reverse_degree < 0:
+            raise ValueError("reverse_degree must be >= 0")
+        if self.ef_construction < self.degree:
+            raise ValueError(
+                f"ef_construction {self.ef_construction} < degree {self.degree}")
+        if self.alpha < 1.0:
+            raise ValueError(f"alpha must be >= 1.0, got {self.alpha}")
+        if self.ef < 1 or self.beam < 1 or self.entries < 1:
+            raise ValueError("ef, beam and entries must be >= 1")
+        if self.iters < 0:
+            raise ValueError("iters must be >= 0 (0 = derive from ef/beam)")
+        if self.build_tile < 1:
+            raise ValueError("build_tile must be >= 1")
+
+    @property
+    def total_degree(self) -> int:
+        return self.degree + self.reverse_degree
+
+    @property
+    def search_iters(self) -> int:
+        if self.iters:
+            return self.iters
+        return max(1, -(-2 * self.ef // self.beam))
+
+
+@dataclasses.dataclass(frozen=True)
 class SearchParams:
     """Two-phase search parameters: retrieve depth-d candidates, optionally
     exact-rerank them down to k (the refinement the paper describes but did
@@ -430,6 +494,44 @@ class FlatIndex:
         if self.vectors is not None:
             return self.vectors.shape[0]
         return self.pq.num_docs
+
+    def nbytes(self) -> int:
+        total = 0
+        for leaf in jax.tree_util.tree_leaves(self):
+            total += leaf.size * leaf.dtype.itemsize
+        return total
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class GraphIndex:
+    """Flat proximity-graph index (docs/DESIGN.md §15).
+
+    vectors:   (N, dim) float32 unit rows — the match operand (neighbor
+               blocks are gathered from it and scored exactly) and the
+               rerank store, so graph scores ARE exact cosines and the
+               only approximation is which rows get visited.
+    neighbors: (N, degree+reverse_degree) int32 adjacency; -1 = no edge.
+               Row-major fixed degree keeps the per-iteration gather a
+               static-shape (B, beam*R) slab for ``fused_topk_gathered``.
+    entry:     (entries,) int32 search entry points: the medoid (row whose
+               dot with the corpus mean is largest) followed by
+               deterministic strided rows.
+    vq:        optional int8 rerank store (uniform quantized-rerank knob).
+    """
+
+    vectors: jax.Array
+    neighbors: jax.Array
+    entry: jax.Array
+    vq: Optional[QuantizedStore] = None
+
+    @property
+    def num_docs(self) -> int:
+        return self.vectors.shape[0]
+
+    @property
+    def total_degree(self) -> int:
+        return self.neighbors.shape[1]
 
     def nbytes(self) -> int:
         total = 0

@@ -2,6 +2,7 @@
 
     PYTHONPATH=src python -m repro.launch.serve --n-docs 100000 --queries 512
     PYTHONPATH=src python -m repro.launch.serve --method lsh
+    PYTHONPATH=src python -m repro.launch.serve --method hnsw --ef 128
     PYTHONPATH=src python -m repro.launch.serve --save-index /tmp/idx.ann
     PYTHONPATH=src python -m repro.launch.serve --quantized-rerank
     PYTHONPATH=src python -m repro.launch.serve --segments 8
@@ -43,6 +44,7 @@ from repro.core.segments import IndexWriter
 from repro.core.types import (
     BruteForceConfig,
     FakeWordsConfig,
+    GraphConfig,
     KdTreeConfig,
     LexicalLshConfig,
 )
@@ -63,6 +65,8 @@ def make_config(args):
         return KdTreeConfig(dims=8, backend="scan")
     if args.method == "bruteforce":
         return BruteForceConfig()
+    if args.method == "hnsw":
+        return GraphConfig(ef=args.ef, beam=args.beam)
     raise ValueError(f"unknown method {args.method}")
 
 
@@ -322,10 +326,15 @@ def main(argv=None) -> dict:
     ap.add_argument("--queries", type=int, default=512)
     ap.add_argument("--batch", type=int, default=64)
     ap.add_argument(
-        "--method", choices=("fakewords", "lsh", "kdtree", "bruteforce"),
+        "--method",
+        choices=("fakewords", "lsh", "kdtree", "bruteforce", "hnsw"),
         default="fakewords",
     )
     ap.add_argument("--q", type=int, default=50, help="fake-words quantization")
+    ap.add_argument("--ef", type=int, default=64,
+                    help="hnsw search list width (recall/latency knob)")
+    ap.add_argument("--beam", type=int, default=4,
+                    help="hnsw nodes expanded per traversal iteration")
     ap.add_argument("--df-max-ratio", type=float, default=1.0,
                     help="search-time high-df term filtering (1.0 = off)")
     ap.add_argument("--depth", type=int, default=100)
@@ -443,6 +452,13 @@ def main(argv=None) -> dict:
 
     mesh = None
     if args.shards:
+        if args.method == "hnsw":
+            raise SystemExit(
+                "--shards serves shard-local match + merge, which graph "
+                "traversal cannot do (adjacency edges cross shard "
+                "boundaries); serve hnsw with --segments N or single-device "
+                "(the sharded BUILD is exercised by tests/test_graph.py)"
+            )
         n_dev = len(jax.devices())
         if n_dev < args.shards:
             raise SystemExit(

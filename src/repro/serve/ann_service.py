@@ -45,6 +45,7 @@ import numpy as np
 from jax.sharding import Mesh
 
 from repro.core import bruteforce, distributed
+from repro.core import packed as packed_mod
 from repro.core import pipeline as pl
 from repro.core.index import AnnIndex, AnyConfig, AnyIndex
 from repro.core.segments import IndexWriter, SegmentedAnnIndex
@@ -556,6 +557,29 @@ class AnnService:
             round(float(np.percentile(ms, 99)), 3),
         )
 
+    def _packed_stats(self) -> dict:
+        """Observability for the packed single-launch path: process-wide
+        executable-cache counters plus this snapshot's bucket-ladder
+        occupancy.  Reports only what is already built — never forces a
+        pack (packed state is lazy and stays None until first search)."""
+        out = dict(
+            (f"exec_cache_{k}", v)
+            for k, v in packed_mod.EXEC_CACHE.stats().items()
+        )
+        pk = getattr(self.ann, "_packed", None)
+        if pk is not None:
+            out["packed_bucket"] = pk.bucket
+            out["packed_rows"] = pk.n_rows
+            out["packed_live"] = pk.n_live
+            out["packed_occupancy"] = round(pk.n_rows / pk.bucket, 4)
+            out["packed_appends"] = pk.appends
+        else:
+            out["packed_bucket"] = None
+            err = getattr(self.ann, "_packed_err", None)
+            if err is not None:
+                out["packed_unsupported"] = err
+        return out
+
     def stats(self) -> dict:
         lat_p50, lat_p99 = self._pcts(self._lat_s)
         req_p50, req_p99 = self._pcts(self._req_lat_s)
@@ -581,4 +605,5 @@ class AnnService:
             "cache_hits": self.cache_hits,
             "cache_misses": self.cache_misses,
             "cache_entries": len(self._cache),
+            **self._packed_stats(),
         }

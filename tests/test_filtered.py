@@ -375,3 +375,43 @@ def test_multi_vector_plan_end_to_end(small_corpus):
     mv = plan.MultiVectorPlan(inner=inner, doc_map=doc_map, k=5, agg="max")
     s, i = mv.run(jnp.asarray(small_corpus[:8]))
     np.testing.assert_array_equal(np.asarray(i)[:, 0], np.arange(8) // 2)
+
+
+def test_multi_vector_underfill_refills_to_k():
+    """Regression: aggregation can collapse a k_sub-deep vector list into
+    fewer than k docs (all top vectors belong to one doc).  The plan must
+    re-run the inner search deeper (via ``run_at``) until k docs fill."""
+    rng = np.random.default_rng(0)
+    n_docs, per, dim = 8, 8, 16
+    base = np.eye(n_docs, dim, dtype=np.float32)
+    rows = np.repeat(base, per, axis=0)
+    rows = rows + 0.01 * rng.standard_normal(rows.shape).astype(np.float32)
+    doc_map = jnp.arange(n_docs * per) // per
+    ann = AnnIndex.build(jnp.asarray(rows), BruteForceConfig())
+    q = jnp.asarray(base[:1])  # doc 0's centroid: its 8 vectors rank first
+
+    inner = plan.QueryPlan(
+        search=lambda qq: ann.search(qq, k=per, depth=per, use_kernel=False),
+        search_at=lambda qq, kk: ann.search(
+            qq, k=kk, depth=kk, use_kernel=False),
+    )
+    # The raw single-pass reduction under-fills: 8 vector hits -> 1 doc.
+    s_raw, i_raw = inner.run(q)
+    _, agg_i = plan.aggregate_by_doc(s_raw, i_raw, doc_map, k=4, agg="max")
+    assert int((np.asarray(agg_i) >= 0).sum()) < 4
+
+    mv = plan.MultiVectorPlan(inner=inner, doc_map=doc_map, k=4, agg="max")
+    s, i = mv.run(q)
+    i = np.asarray(i)
+    assert i.shape == (1, 4)
+    assert int((i >= 0).sum()) == 4, i
+    assert i[0, 0] == 0
+    assert len(np.unique(i[0])) == 4
+
+    # A fixed-depth inner (no search_at) cannot deepen: the loop must
+    # terminate and return the honest under-filled list.
+    fixed = plan.QueryPlan(
+        search=lambda qq: ann.search(qq, k=per, depth=per, use_kernel=False))
+    mv_fixed = plan.MultiVectorPlan(inner=fixed, doc_map=doc_map, k=4)
+    _, i_fixed = mv_fixed.run(q)
+    assert int((np.asarray(i_fixed) >= 0).sum()) == 1
