@@ -10,11 +10,9 @@
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Dict, List
 
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import blockmax, bruteforce, eval as ev, fakewords
 from repro.core.types import FakeWordsConfig

@@ -29,7 +29,6 @@ from repro.core.types import (
     KdTreeConfig,
     LexicalLshConfig,
 )
-from repro.kernels import common
 from repro.kernels.fused_topk import ops as fused_ops
 from repro.kernels.fused_topk import ref as fused_ref
 

@@ -19,7 +19,6 @@ import time
 from typing import Dict, List
 
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import bruteforce, eval as ev
 from repro.core.index import AnnIndex

@@ -11,11 +11,8 @@ table as the candidate corpus (the "arbitrary dense vectors"), and compares:
 This is the DIRECT application family from DESIGN.md §6: candidate scoring
 IS inner-product search over item embeddings.
 """
-import dataclasses
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.core import bruteforce, eval as ev, fakewords
 from repro.core.types import FakeWordsConfig

@@ -14,12 +14,14 @@ and newer releases:
 from __future__ import annotations
 
 import contextlib
-from typing import Any
+from typing import Any, Iterator
 
 import jax
 
 
-def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+def shard_map(
+    f: Any, *, mesh: Any, in_specs: Any, out_specs: Any, check_vma: bool = True
+) -> Any:
     """Dispatch to whichever shard_map this JAX exposes."""
     if hasattr(jax, "shard_map"):
         return jax.shard_map(
@@ -34,7 +36,7 @@ def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
     )
 
 
-def axis_size(axis_name) -> Any:
+def axis_size(axis_name: Any) -> Any:
     """``jax.lax.axis_size`` (new) with a ``psum(1, axis)`` fallback for
     0.4.x (traced rather than static, which every call site tolerates)."""
     if hasattr(jax.lax, "axis_size"):
@@ -45,7 +47,7 @@ def axis_size(axis_name) -> Any:
 
 
 @contextlib.contextmanager
-def set_mesh(mesh: Any):
+def set_mesh(mesh: Any) -> Iterator[Any]:
     """Context manager form of ``jax.set_mesh`` that also works on 0.4.x
     (where entering the Mesh object itself sets the ambient mesh)."""
     if hasattr(jax, "set_mesh"):

@@ -5,7 +5,6 @@ dot scoring (int8 index only, no bf16 scored matrix): 1B x 600 int8 =
 600 GB tf matrix + 1.2 TB originals (bf16) for rerank, sharded over all
 mesh axes.
 """
-import jax.numpy as jnp
 
 from repro.configs.common import ArchSpec, Cell
 from repro.core.types import FakeWordsConfig

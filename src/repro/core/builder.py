@@ -41,7 +41,7 @@ SearchPipeline absorbed the per-method ``search()`` functions.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional, Sequence, Tuple, Union
+from typing import Any, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp

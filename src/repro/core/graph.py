@@ -23,7 +23,6 @@ whole thing jits:
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 from jax import lax
 

@@ -21,7 +21,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import bruteforce
 from repro.core.types import LexicalLshConfig, LshIndex
 
 _GOLDEN = np.uint32(0x9E3779B9)

@@ -96,11 +96,21 @@ def bucket_rows(n: int, floor: int = BUCKET_FLOOR) -> int:
     return mid if mid >= n else p
 
 
-def _append_block(n: int, floor: int = 128) -> int:
+def _append_block(n: int, room: int = 1 << 30, floor: int = 128) -> int:
     """Pad an appended segment block to a power of two so the donated
     incremental-repack executable recompiles per block RUNG, not per flush
-    size."""
-    return max(floor, 1 << (n - 1).bit_length())
+    size.  Near the top of the bucket the preferred rung may overhang the
+    remaining ``room`` even though the rows themselves fit; halve down to
+    the largest rung that fits (>= 8 rows, the f32 sublane) instead of
+    forcing callers into a full repack — each smaller rung costs at most
+    one extra compile per encoding, ever.  Returns 0 when no aligned rung
+    can hold ``n`` rows in ``room``."""
+    block = max(floor, 1 << (n - 1).bit_length())
+    while block > room and block >= 16:
+        block //= 2
+    if block > room or block < n:
+        return 0
+    return block
 
 
 # --------------------------------------------------------------------------
@@ -402,9 +412,10 @@ def _try_append(
         return None
     offset = prior.n_rows
     new_rows = n_rows - offset
-    block = _append_block(new_rows)
-    if offset + block > bucket:
-        return None  # dynamic_update_slice clamps starts; never risk it
+    block = _append_block(new_rows, room=bucket - offset)
+    if not block:
+        return None  # no aligned rung fits: dynamic_update_slice clamps
+        # starts, so an overhanging block must never be risked
     paths = _doc_leaf_paths(config, prior.view)
     new_view = _packed_view(config, views[k:], block)
     old_leaves = tuple(_get_path(prior.view, p) for p in paths)

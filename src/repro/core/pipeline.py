@@ -43,7 +43,6 @@ from repro.core import bruteforce
 from repro.core.types import (
     BruteForceConfig,
     FakeWordsConfig,
-    FlatIndex,
     GraphConfig,
     KdTreeConfig,
     LexicalLshConfig,

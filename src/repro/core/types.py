@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Any, Optional, Tuple
+from typing import Any, Iterable, Mapping, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -71,7 +71,7 @@ class FakeWordsConfig:
     # half the scan GEMM width — a beyond-paper optimization (§Perf C3).
     signed_store: bool = False
 
-    def __post_init__(self):
+    def __post_init__(self) -> None:
         if not (1 <= self.quantization <= 127):
             raise ValueError(f"quantization must be in [1,127], got {self.quantization}")
         if self.scoring not in ("classic", "dot"):
@@ -103,7 +103,7 @@ class LexicalLshConfig:
     decimals: int = 1
     seed: int = 0x5EED
 
-    def __post_init__(self):
+    def __post_init__(self) -> None:
         if self.ngram not in (1, 2, 3):
             raise ValueError("ngram in {1,2,3} supported")
         if self.buckets < 1 or self.hashes < 1:
@@ -130,7 +130,7 @@ class KdTreeConfig:
     backend: str = "scan"  # "tree" | "scan"
     leaf_size: int = 32
 
-    def __post_init__(self):
+    def __post_init__(self) -> None:
         if self.dims > 8:
             raise ValueError("Lucene BKD supports at most 8 dims (paper constraint)")
         if self.reduction not in ("pca", "ppa-pca-ppa"):
@@ -182,7 +182,7 @@ class GraphConfig:
     entries: int = 4
     build_tile: int = 2048
 
-    def __post_init__(self):
+    def __post_init__(self) -> None:
         if self.degree < 1:
             raise ValueError(f"degree must be >= 1, got {self.degree}")
         if self.reverse_degree < 0:
@@ -250,7 +250,7 @@ class DocMetadata:
     field_names: Tuple[str, ...] = dataclasses.field(metadata=dict(static=True))
 
     @classmethod
-    def from_fields(cls, fields) -> "DocMetadata":
+    def from_fields(cls, fields: Mapping[str, Any]) -> "DocMetadata":
         """Build from a ``{field_name: (N,) int array}`` mapping (insertion
         order fixes the column order)."""
         names = tuple(fields.keys())
@@ -264,11 +264,11 @@ class DocMetadata:
     def _col(self, field: str) -> jax.Array:
         return self.values[:, self.field_names.index(field)]
 
-    def eq_mask(self, field: str, value) -> jax.Array:
+    def eq_mask(self, field: str, value: int) -> jax.Array:
         """(N,) bool: field == value."""
         return self._col(field) == jnp.int32(value)
 
-    def in_mask(self, field: str, values) -> jax.Array:
+    def in_mask(self, field: str, values: Iterable[int]) -> jax.Array:
         """(N,) bool: field in values (small static value set)."""
         col = self._col(field)
         out = jnp.zeros(col.shape, bool)
@@ -276,7 +276,9 @@ class DocMetadata:
             out = out | (col == jnp.int32(v))
         return out
 
-    def range_mask(self, field: str, lo=None, hi=None) -> jax.Array:
+    def range_mask(
+        self, field: str, lo: Optional[int] = None, hi: Optional[int] = None
+    ) -> jax.Array:
         """(N,) bool: lo <= field < hi (either bound optional)."""
         col = self._col(field)
         out = jnp.ones(col.shape, bool)
@@ -493,6 +495,7 @@ class FlatIndex:
     def num_docs(self) -> int:
         if self.vectors is not None:
             return self.vectors.shape[0]
+        assert self.pq is not None  # invariant: vectors dropped only with pq
         return self.pq.num_docs
 
     def nbytes(self) -> int:

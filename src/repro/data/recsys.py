@@ -7,7 +7,6 @@ hot rows).  Stateless: batch = f(seed, step).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

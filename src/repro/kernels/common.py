@@ -7,6 +7,7 @@ the kernel body in Python.  ``INTERPRET`` flips globally for tests.
 from __future__ import annotations
 
 import os
+from typing import Any
 
 import jax
 from jax.experimental.pallas import tpu as pltpu
@@ -84,7 +85,9 @@ def expand_group_scale(scale: jax.Array, group: int) -> jax.Array:
     )
 
 
-def dequant_int4(packed: jax.Array, scale: jax.Array, group: int, dtype) -> jax.Array:
+def dequant_int4(
+    packed: jax.Array, scale: jax.Array, group: int, dtype: Any
+) -> jax.Array:
     """THE canonical int4 grouped-scale dequant ordering: f32 (nibble - 8)
     * group_scale, then ONE cast to the compute dtype.  (..., C) packed +
     (..., 2C/group) scales -> (..., 2C) values."""
@@ -94,7 +97,7 @@ def dequant_int4(packed: jax.Array, scale: jax.Array, group: int, dtype) -> jax.
     return (nib * expand_group_scale(scale, group)).astype(dtype)
 
 
-def pad_dim(x: jax.Array, axis: int, multiple: int, value=0) -> jax.Array:
+def pad_dim(x: jax.Array, axis: int, multiple: int, value: Any = 0) -> jax.Array:
     """Zero-pad ``axis`` of x up to a multiple (kernels want aligned tiles)."""
     import jax.numpy as jnp
 

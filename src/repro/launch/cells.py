@@ -18,7 +18,6 @@ cells lower forward-only steps (see the assignment brief).
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax

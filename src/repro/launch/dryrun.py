@@ -19,7 +19,6 @@ import json
 import time
 import traceback
 
-import jax
 
 from repro import compat, configs
 from repro.launch import cells as cells_mod

@@ -31,9 +31,8 @@ import argparse
 import dataclasses
 import json
 import time
-from typing import Dict, Optional
+from typing import Dict
 
-import jax
 
 from repro import configs
 from repro.configs.common import ArchSpec, Cell

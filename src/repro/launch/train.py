@@ -15,17 +15,15 @@ assigned LM archs run with the same code path on a pod.
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
-import jax.numpy as jnp
 
 from repro import configs
 from repro.data import lm as lm_data
 from repro.models import transformer as tfm
 from repro.train import checkpoint as ckpt
 from repro.train import optimizer as opt_mod
-from repro.train.train_loop import TrainState, Watchdog, build_train_step, make_train_state
+from repro.train.train_loop import Watchdog, build_train_step, make_train_state
 
 
 def tiny_lm_config() -> tfm.TransformerConfig:

@@ -39,7 +39,6 @@ import time
 from concurrent.futures import Future
 from typing import Optional, Sequence, Tuple, Union
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh
@@ -271,6 +270,9 @@ class AnnService:
         """The effective match stage for single-device serving."""
         return self.ann.matcher_for(self._bm, self._bm_keep)
 
+    # Keying syncs on the tiny encoder output by design — see docstring;
+    # only paid when the result cache is on.
+    # reprolint: disable=hostsync
     def _cache_key(self, q_rep, q, filt=None) -> bytes:
         """Result-cache key: the encoded query representation's bytes plus
         every knob that changes the result — INCLUDING the index epoch, so
@@ -335,7 +337,8 @@ class AnnService:
                 )
             t0 = time.perf_counter()
             s, ids = plan.run(jnp.asarray(queries))
-            s_np, i_np = np.asarray(s), np.asarray(ids)
+            # Result hand-off: callers take numpy.
+            s_np, i_np = np.asarray(s), np.asarray(ids)  # reprolint: disable=hostsync
             self.batches += 1
             self._lat_s.append(time.perf_counter() - t0)
             self.queries_served += b
@@ -348,7 +351,8 @@ class AnnService:
             )
         fm = None
         if filter is not None:
-            fm = np.asarray(filter)
+            # Host-side caller input (predicate bitmap), not a device array.
+            fm = np.asarray(filter)  # reprolint: disable=hostsync
             if fm.ndim == 2:
                 if self.mesh is not None:
                     raise ValueError(
@@ -408,8 +412,10 @@ class AnnService:
                         reranker=self.ann.pipeline.reranker,
                         filt=fl_dev,
                     )
-                s_np = np.asarray(s)   # np.asarray blocks: wall time
-                i_np = np.asarray(ids)  # below covers device compute
+                # Hand-off point: blocking here keeps device compute inside
+                # the wall time recorded below.
+                s_np = np.asarray(s)   # reprolint: disable=hostsync
+                i_np = np.asarray(ids)  # reprolint: disable=hostsync
                 if use_cache:
                     self.cache_misses += 1
                     self._cache[key] = (s_np, i_np)
@@ -474,15 +480,19 @@ class AnnService:
         only grow everyone's tail latency)."""
         if self._queue is None:
             raise RuntimeError("call start_async() first")
-        q = np.asarray(query)
+        # Caller-side numpy inputs: coercion + coalescing key are host work.
+        q = np.asarray(query)  # reprolint: disable=hostsync
         if q.ndim == 1:
             q = q[None, :]
-        fkey = None if filter is None else np.asarray(filter).tobytes()
+        fkey = None if filter is None else np.asarray(filter).tobytes()  # reprolint: disable=hostsync
         fut: "Future[Tuple[np.ndarray, np.ndarray]]" = Future()
         try:
             self._queue.put_nowait((q, filter, fkey, fut, time.perf_counter()))
         except queue_mod.Full:
-            self.rejected += 1
+            # Admission counters are bumped from arbitrary caller threads;
+            # without the lock, concurrent += drops increments.
+            with self._lock:
+                self.rejected += 1
             raise
         return fut
 
@@ -527,12 +537,19 @@ class AnnService:
             try:
                 qs = np.concatenate([r[0] for r in batch], axis=0)
                 s, ids = self.search_batch(qs, filter=req[1])
-                self.async_launches += 1
                 done = time.perf_counter()
+                # Stats are read by caller threads (stats()/reset_latency()
+                # hold the lock); mutate them under it too.  Future
+                # resolution stays OUTSIDE the lock: set_result runs done-
+                # callbacks on this thread, and a callback that re-enters
+                # the service must not find the lock held.
+                with self._lock:
+                    self.async_launches += 1
+                    for r in batch:
+                        self._req_lat_s.append(done - r[4])
                 off = 0
                 for r in batch:
                     n = r[0].shape[0]
-                    self._req_lat_s.append(done - r[4])
                     r[3].set_result((s[off : off + n], ids[off : off + n]))
                     off += n
             except Exception as e:  # propagate to every caller in the batch
@@ -544,10 +561,14 @@ class AnnService:
         """Drop recorded batch latencies (e.g. after a warmup/compile batch,
         whose wall time is orders of magnitude above steady state and would
         otherwise dominate the p99)."""
-        self._lat_s.clear()
-        self._req_lat_s.clear()
+        with self._lock:
+            self._lat_s.clear()
+            self._req_lat_s.clear()
 
     @staticmethod
+    # Stats path: the ring holds Python floats from perf_counter, never
+    # device arrays — np.percentile here is pure host math.
+    # reprolint: disable=hostsync
     def _pcts(ring) -> Tuple[Optional[float], Optional[float]]:
         ms = np.asarray(ring, np.float64) * 1e3
         if not ms.size:

@@ -14,10 +14,9 @@ stack axes ((n_blocks,) or (n_blocks, dense_per_block)) get None's padded.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Sequence, Tuple
+from typing import Any, Tuple
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 Pytree = Any

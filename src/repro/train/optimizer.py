@@ -11,8 +11,7 @@ state fit a pod (DESIGN.md §5).
 from __future__ import annotations
 
 import dataclasses
-import math
-from typing import Any, Callable, NamedTuple, Optional, Tuple
+from typing import Any, Callable, Tuple
 
 import jax
 import jax.numpy as jnp

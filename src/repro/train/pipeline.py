@@ -22,8 +22,7 @@ pipe=1 (DESIGN.md §5).
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Dict, Tuple
+from typing import Any, Callable, Tuple
 
 import jax
 import jax.numpy as jnp

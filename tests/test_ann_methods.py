@@ -3,7 +3,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import blockmax, bruteforce, eval as ev, fakewords, kdtree, lexical_lsh, pca
+from repro.core import blockmax, bruteforce, eval as ev, fakewords, lexical_lsh, pca
 from repro.core.index import AnnIndex
 from repro.core.types import FakeWordsConfig, KdTreeConfig, LexicalLshConfig
 

@@ -3,9 +3,6 @@
 the abstract problem statement is well-formed on the real single device).
 """
 import jax
-import jax.numpy as jnp
-import numpy as np
-import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro import configs

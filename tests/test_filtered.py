@@ -18,7 +18,6 @@ from repro.core.index import AnnIndex
 from repro.core.segments import IndexWriter
 from repro.core.types import (
     BruteForceConfig,
-    DocMetadata,
     FakeWordsConfig,
     KdTreeConfig,
     LexicalLshConfig,

@@ -3,7 +3,6 @@
 Every kernel sweeps shapes (unaligned sizes included — the pad paths) and
 dtypes, asserting allclose against the ref.py oracle per the brief.
 """
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

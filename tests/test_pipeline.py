@@ -6,7 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import bruteforce, eval as ev, fakewords, kdtree, lexical_lsh
+from repro.core import bruteforce, fakewords, kdtree, lexical_lsh
 from repro.core import pipeline as pl
 from repro.core.index import AnnIndex
 from repro.core.types import (

@@ -1,5 +1,4 @@
 """Property-based tests (hypothesis) on system invariants."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -236,3 +236,92 @@ def test_ann_service_segmented_blockmax(small_corpus):
     s1, i1 = svc_bm.search_batch(qs)
     np.testing.assert_array_equal(i0, i1)
     np.testing.assert_allclose(s0, s1, rtol=1e-5, atol=1e-6)
+
+
+def test_ann_service_stats_mutations_hold_lock(small_corpus):
+    """Regression (reprolint rule ``lockdiscipline``): the worker thread
+    bumped ``async_launches`` and appended request latencies off-lock, and
+    ``rejected`` / ``reset_latency`` mutated shared stats from caller
+    threads off-lock.  Instrument the lock and the mutation points, then
+    drive every path: any off-lock mutation is recorded as a violation."""
+    import collections
+    import queue as queue_mod
+    import threading
+
+    violations = []
+
+    class CheckedLock:
+        """RLock wrapper that knows whether the current thread holds it."""
+
+        def __init__(self):
+            self._lock = threading.RLock()
+            self._local = threading.local()
+
+        def __enter__(self):
+            self._lock.acquire()
+            self._local.depth = getattr(self._local, "depth", 0) + 1
+            return self
+
+        def __exit__(self, *exc):
+            self._local.depth -= 1
+            self._lock.release()
+
+        @property
+        def held(self):
+            return getattr(self._local, "depth", 0) > 0
+
+    class GuardedDeque(collections.deque):
+        def __init__(self, name, lock, maxlen=None):
+            super().__init__(maxlen=maxlen)
+            self._name = name
+            self._guard = lock
+
+        def append(self, x):
+            if not self._guard.held:
+                violations.append(f"{self._name}.append")
+            super().append(x)
+
+        def clear(self):
+            if not self._guard.held:
+                violations.append(f"{self._name}.clear")
+            super().clear()
+
+    guarded_ints = {"async_launches", "rejected", "batches",
+                    "queries_served"}
+
+    class GuardedService(AnnService):
+        def __setattr__(self, name, value):
+            if name in guarded_ints and getattr(self, "_armed", False) \
+                    and not self._lock.held:
+                violations.append(name)
+            object.__setattr__(self, name, value)
+
+    v = jnp.asarray(small_corpus[:400])
+    cfg = FakeWordsConfig(quantization=50)
+    idx = fakewords.build(v, cfg)
+    svc = GuardedService(idx, cfg, AnnServiceConfig(
+        k=5, depth=50, rerank=False, max_batch=4, max_wait_s=0.005,
+        queue_depth=8))
+    lock = CheckedLock()
+    svc._lock = lock
+    svc._lat_s = GuardedDeque("_lat_s", lock)
+    svc._req_lat_s = GuardedDeque("_req_lat_s", lock)
+    svc._armed = True
+
+    svc.search_batch(small_corpus[:8])           # sync path
+    svc.start_async()
+    futs = [svc.search_async(small_corpus[i]) for i in range(4)]
+    for f in futs:
+        f.result(timeout=30)                     # worker path
+    with svc._lock:                              # back the queue up
+        rejected = 0
+        for i in range(32):
+            try:
+                svc.search_async(small_corpus[i % 8])
+            except queue_mod.Full:
+                rejected += 1                    # rejection path
+    svc.stop_async()
+    svc.reset_latency()                          # ring-clear path
+    assert rejected >= 1
+    assert svc.stats()["rejected"] == rejected
+    assert violations == []

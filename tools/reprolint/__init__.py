@@ -1,0 +1,18 @@
+"""reprolint — JAX/Pallas static analysis for this repo (docs/DESIGN.md §16).
+
+Four analyzers over one shared AST visitor framework:
+
+  * ``retrace``        — jit/retrace hygiene (recompile-churn class)
+  * ``vmem``           — Pallas BlockSpec/scratch VMEM budget checker
+  * ``hostsync``       — host-synchronization lint on designated hot paths
+  * ``lockdiscipline`` — worker-thread attribute mutation under the lock
+
+Run ``python -m tools.reprolint src/`` from the repo root; exit code 0 means
+zero unwaived findings.  Inline waivers: ``# reprolint: disable=<rule>`` on
+the offending line (or on a ``def`` line to waive that whole function) with a
+justification comment.  The dynamic counterpart — a pytest trace-audit
+fixture — lives in :mod:`tools.reprolint.trace_audit`.
+"""
+from tools.reprolint.framework import Finding, run_files  # noqa: F401
+
+__all__ = ["Finding", "run_files"]

@@ -1,0 +1,74 @@
+"""CLI: ``python -m tools.reprolint [paths...]``.
+
+Exit status 0 when every finding is waived (or there are none); 1 when any
+unwaived finding remains; 2 on usage errors.  CI runs::
+
+    python -m tools.reprolint src/
+
+``--show-waived`` also prints waived findings (with a ``(waived)`` tag) so
+stale waivers stay visible in review.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import List
+
+from tools.reprolint import config as config_mod
+from tools.reprolint.framework import run_files
+from tools.reprolint.rules import all_rules
+
+
+def main(argv: List[str] | None = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="reprolint",
+        description="repo-specific JAX/Pallas static analysis "
+        "(retrace, vmem, hostsync, lockdiscipline)",
+    )
+    parser.add_argument("paths", nargs="*", default=["src/"],
+                        help="files or directories to check (default: src/)")
+    parser.add_argument("--config", default=None,
+                        help="explicit reprolint.json path "
+                        "(default: ./reprolint.json if present)")
+    parser.add_argument("--show-waived", action="store_true",
+                        help="also print waived findings")
+    parser.add_argument("--rules", default=None,
+                        help="comma-separated subset of rules to run")
+    parser.add_argument("--list-rules", action="store_true")
+    args = parser.parse_args(argv)
+
+    rules = all_rules()
+    if args.list_rules:
+        for r in rules:
+            print(r.name)
+        print("config keys:", ", ".join(config_mod.config_schema()))
+        return 0
+    if args.rules:
+        wanted = {r.strip() for r in args.rules.split(",") if r.strip()}
+        unknown = wanted - {r.name for r in rules}
+        if unknown:
+            print(f"unknown rule(s): {', '.join(sorted(unknown))}",
+                  file=sys.stderr)
+            return 2
+        rules = [r for r in rules if r.name in wanted]
+
+    cfg = config_mod.load(".", args.config)
+    findings = run_files(args.paths or ["src/"], rules, cfg)
+
+    unwaived = [f for f in findings if not f.waived]
+    waived = [f for f in findings if f.waived]
+    for f in unwaived:
+        print(f.format())
+    if args.show_waived:
+        for f in waived:
+            print(f.format())
+
+    print(
+        f"reprolint: {len(unwaived)} finding(s), {len(waived)} waived",
+        file=sys.stderr,
+    )
+    return 1 if unwaived else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,145 @@
+"""reprolint configuration.
+
+Defaults are tailored to this repo and can be overridden by a
+``reprolint.json`` file at the analysis root (the repo root in CI).  The
+config answers three questions the analyzers cannot answer from the AST
+alone:
+
+  * which files are **hot paths** (host-sync lint scope);
+  * the per-kernel **VMEM budgets** and the assumed upper bounds for tile
+    dimensions the abstract evaluator cannot derive statically (runtime
+    static args like ``depth``);
+  * the **lock-discipline** contract of the async serving class (which
+    methods run on the worker thread, which attribute guards them).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Any, Dict, List, Optional, Tuple
+
+MIB = 1024 * 1024
+
+
+@dataclasses.dataclass
+class LockContract:
+    """One class's lock-discipline contract (rule ``lockdiscipline``)."""
+
+    path_glob: str                 # file the class lives in
+    class_name: str
+    lock_attr: str = "_lock"
+    # Methods that run on the worker thread (call-graph roots for the
+    # "mutated on the worker thread" attribute set).
+    worker_entries: Tuple[str, ...] = ()
+    # Methods that run before/outside concurrency (construction, worker
+    # lifecycle) — their mutations are exempt and they count as lock-held
+    # for call-graph propagation.
+    exempt_methods: Tuple[str, ...] = ("__init__",)
+    # Attributes that are internally synchronized (queue.Queue,
+    # threading.Event) — mutation without the service lock is fine.
+    threadsafe_attrs: Tuple[str, ...] = ()
+    # Attributes guarded by contract even if no worker-thread mutation is
+    # visible statically (e.g. counters bumped from many caller threads).
+    extra_guarded: Tuple[str, ...] = ()
+
+
+@dataclasses.dataclass
+class Config:
+    # ---- hostsync ---------------------------------------------------------
+    # Files whose function bodies are hot paths: no host syncs unwaived.
+    hot_path_globs: Tuple[str, ...] = (
+        "src/repro/serve/*.py",
+        "src/repro/core/packed.py",
+    )
+    # Files where only ``__call__`` methods of matcher-layer classes
+    # (class names matching ``*Matcher`` / ``FilterMask``) are hot.
+    matcher_call_globs: Tuple[str, ...] = ("src/repro/core/pipeline.py",)
+    matcher_class_patterns: Tuple[str, ...] = ("*Matcher", "FilterMask")
+
+    # ---- vmem -------------------------------------------------------------
+    # Only these files are kernel files (BlockSpec budget scope).
+    kernel_globs: Tuple[str, ...] = ("src/repro/kernels/*/kernel.py",)
+    vmem_budget_bytes: int = 16 * MIB
+    # Per-kernel-function overrides, e.g. {"flash_attention": 8 * MIB}.
+    vmem_budgets: Dict[str, int] = dataclasses.field(default_factory=dict)
+    # Upper bounds assumed for dimensions the evaluator cannot derive (they
+    # are runtime static args, not literals).  A kernel whose blocks scale
+    # with an unlisted unknown dimension is itself a finding.
+    vmem_assumed_bounds: Dict[str, int] = dataclasses.field(
+        default_factory=lambda: {
+            # running top-k width: depth <= 2048 everywhere in this repo
+            # (serving depth is 100; benches go to 1024); dpad is depth
+            # rounded to the next pow2 >= LANE.
+            "depth": 2048,
+            "dpad": 2048,
+            # head / reduced dims: flash attention d_h <= 256 on every
+            # assigned arch; kd reductions are <= 8 dims, padded to LANE.
+            "d": 256,
+            "dim": 512,
+        }
+    )
+    # Bytes per element when an operand/scratch dtype cannot be resolved
+    # statically (conservative: f32/int32).
+    vmem_default_itemsize: int = 4
+    # Grid-streamed operands are double-buffered by the Pallas TPU
+    # pipeline; scratch is single-buffered.
+    vmem_double_buffer: int = 2
+
+    # ---- retrace ----------------------------------------------------------
+    # Enclosing functions whose jit-closure construction is the blessed
+    # build-once pattern (stage builders, bind-time closures): a jit created
+    # there is built per snapshot/bind, not per call.
+    retrace_builder_patterns: Tuple[str, ...] = (
+        "make_*", "build*", "_bind", "*_builder", "*_fn",
+    )
+
+    # ---- lockdiscipline ---------------------------------------------------
+    lock_contracts: Tuple[LockContract, ...] = (
+        LockContract(
+            path_glob="src/repro/serve/ann_service.py",
+            class_name="AnnService",
+            lock_attr="_lock",
+            worker_entries=("_batch_loop",),
+            exempt_methods=("__init__", "start_async", "stop_async"),
+            threadsafe_attrs=("_queue", "_stop", "_worker"),
+            # rejected is bumped from arbitrary caller threads on admission
+            # backpressure — guarded by contract even though the worker
+            # never touches it.
+            extra_guarded=("rejected",),
+        ),
+    )
+
+
+def _coerce(field_val: Any, raw: Any) -> Any:
+    if isinstance(field_val, tuple) and raw is not None:
+        if field_val and isinstance(field_val[0], LockContract):
+            return tuple(
+                LockContract(**{
+                    k: tuple(v) if isinstance(v, list) else v
+                    for k, v in item.items()
+                })
+                for item in raw
+            )
+        return tuple(raw)
+    return raw
+
+
+def load(root: str = ".", path: Optional[str] = None) -> Config:
+    """Config from ``<root>/reprolint.json`` (or an explicit path) merged
+    over the in-tree defaults; missing file means pure defaults."""
+    cfg = Config()
+    cfg_path = path or os.path.join(root, "reprolint.json")
+    if not os.path.exists(cfg_path):
+        return cfg
+    with open(cfg_path) as f:
+        raw = json.load(f)
+    for fld in dataclasses.fields(Config):
+        if fld.name in raw:
+            setattr(cfg, fld.name, _coerce(getattr(cfg, fld.name), raw[fld.name]))
+    return cfg
+
+
+def config_schema() -> List[str]:
+    """Field names accepted in reprolint.json (for --help and docs)."""
+    return [f.name for f in dataclasses.fields(Config)]

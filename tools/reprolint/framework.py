@@ -1,0 +1,211 @@
+"""Shared visitor framework for the reprolint analyzers.
+
+One parse per file; every rule receives the same :class:`FileContext` (path,
+source lines, AST with parent links, waiver table) and returns
+:class:`Finding` objects.  Waivers:
+
+  * ``# reprolint: disable=<rule>[,<rule>...]`` on a line waives findings of
+    those rules on that line;
+  * the same comment on (or immediately above) a ``def``/``class`` line
+    waives the whole lexical scope of that definition;
+  * ``disable=all`` waives every rule.
+
+Waived findings are still collected (reported under ``--show-waived``) so a
+waiver can never silently hide a rule that stopped matching.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import fnmatch
+import os
+import re
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+from tools.reprolint.config import Config
+
+_WAIVER_RE = re.compile(r"#\s*reprolint:\s*disable=([A-Za-z0-9_,\- ]+)")
+
+
+@dataclasses.dataclass
+class Finding:
+    rule: str
+    path: str
+    line: int
+    message: str
+    waived: bool = False
+
+    def format(self) -> str:
+        tag = " (waived)" if self.waived else ""
+        return f"{self.path}:{self.line}: [{self.rule}]{tag} {self.message}"
+
+
+class FileContext:
+    """Everything a rule needs about one file, parsed once."""
+
+    def __init__(self, path: str, source: str, config: Config):
+        self.path = path.replace(os.sep, "/")
+        self.source = source
+        self.lines = source.splitlines()
+        self.tree = ast.parse(source, filename=path)
+        self.config = config
+        for parent in ast.walk(self.tree):
+            for child in ast.iter_child_nodes(parent):
+                child._reprolint_parent = parent  # type: ignore[attr-defined]
+        self._line_waivers = self._parse_line_waivers()
+        self._scope_waivers = self._parse_scope_waivers()
+
+    # -- waiver bookkeeping -------------------------------------------------
+
+    def _parse_line_waivers(self) -> Dict[int, Set[str]]:
+        out: Dict[int, Set[str]] = {}
+        for i, text in enumerate(self.lines, start=1):
+            m = _WAIVER_RE.search(text)
+            if m:
+                # Keep the first word of each comma part: trailing prose
+                # ("disable=hostsync  caller-side input") stays commentary.
+                rules = {
+                    r.strip().split()[0]
+                    for r in m.group(1).split(",") if r.strip()
+                }
+                out[i] = rules
+        return out
+
+    def _parse_scope_waivers(self) -> List[Tuple[int, int, Set[str]]]:
+        """(start, end, rules) ranges for waivers sitting on/above a def."""
+        scopes: List[Tuple[int, int, Set[str]]] = []
+        for node in ast.walk(self.tree):
+            if not isinstance(
+                node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)
+            ):
+                continue
+            start = node.lineno
+            header_lines = [start]
+            if start > 1:
+                header_lines.append(start - 1)  # comment-above style
+            rules: Set[str] = set()
+            for ln in header_lines:
+                rules |= self._line_waivers.get(ln, set())
+            if rules:
+                end = max(
+                    getattr(node, "end_lineno", start) or start, start
+                )
+                scopes.append((start, end, rules))
+        return scopes
+
+    def is_waived(self, rule: str, line: int) -> bool:
+        for_line = self._line_waivers.get(line, set())
+        if rule in for_line or "all" in for_line:
+            return True
+        for start, end, rules in self._scope_waivers:
+            if start <= line <= end and (rule in rules or "all" in rules):
+                return True
+        return False
+
+    # -- helpers rules share ------------------------------------------------
+
+    def matches(self, globs: Sequence[str]) -> bool:
+        return any(fnmatch.fnmatch(self.path, g) for g in globs)
+
+    def parent(self, node: ast.AST) -> Optional[ast.AST]:
+        return getattr(node, "_reprolint_parent", None)
+
+    def enclosing_function(
+        self, node: ast.AST
+    ) -> Optional[ast.FunctionDef]:
+        cur = self.parent(node)
+        while cur is not None:
+            if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                return cur  # type: ignore[return-value]
+            cur = self.parent(cur)
+        return None
+
+    def enclosing_class(self, node: ast.AST) -> Optional[ast.ClassDef]:
+        cur = self.parent(node)
+        while cur is not None:
+            if isinstance(cur, ast.ClassDef):
+                return cur
+            cur = self.parent(cur)
+        return None
+
+
+class Rule:
+    """Base class: subclasses set ``name`` and implement ``check``."""
+
+    name = "rule"
+
+    def check(self, ctx: FileContext) -> List[Finding]:  # pragma: no cover
+        raise NotImplementedError
+
+    def finding(self, ctx: FileContext, line: int, message: str) -> Finding:
+        return Finding(
+            rule=self.name,
+            path=ctx.path,
+            line=line,
+            message=message,
+            waived=ctx.is_waived(self.name, line),
+        )
+
+
+# -- dotted-name resolution shared by rules ---------------------------------
+
+
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """'jax.jit' for Attribute(jax, jit); 'jit' for Name(jit); None else."""
+    parts: List[str] = []
+    cur = node
+    while isinstance(cur, ast.Attribute):
+        parts.append(cur.attr)
+        cur = cur.value
+    if isinstance(cur, ast.Name):
+        parts.append(cur.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def call_name(call: ast.Call) -> Optional[str]:
+    return dotted_name(call.func)
+
+
+def iter_files(paths: Sequence[str]) -> Iterable[str]:
+    for p in paths:
+        if os.path.isfile(p):
+            if p.endswith(".py"):
+                yield p
+        else:
+            for dirpath, dirnames, filenames in os.walk(p):
+                dirnames[:] = [
+                    d for d in dirnames
+                    if d not in ("__pycache__", ".git", ".venv")
+                ]
+                for fn in sorted(filenames):
+                    if fn.endswith(".py"):
+                        yield os.path.join(dirpath, fn)
+
+
+def run_files(
+    paths: Sequence[str],
+    rules: Sequence[Rule],
+    config: Optional[Config] = None,
+) -> List[Finding]:
+    """Run every rule over every file; returns all findings (waived ones
+    carry ``waived=True``)."""
+    from tools.reprolint import config as config_mod
+
+    cfg = config if config is not None else config_mod.load()
+    findings: List[Finding] = []
+    for path in iter_files(paths):
+        with open(path, encoding="utf-8") as f:
+            source = f.read()
+        try:
+            ctx = FileContext(path, source, cfg)
+        except SyntaxError as e:
+            findings.append(Finding(
+                rule="parse", path=path, line=e.lineno or 0,
+                message=f"syntax error: {e.msg}",
+            ))
+            continue
+        for rule in rules:
+            findings.extend(rule.check(ctx))
+    findings.sort(key=lambda f: (f.path, f.line, f.rule))
+    return findings

@@ -1,0 +1,14 @@
+"""Rule registry: ``all_rules()`` is what the CLI and CI run."""
+from __future__ import annotations
+
+from typing import List
+
+from tools.reprolint.framework import Rule
+from tools.reprolint.rules.hostsync import HostSyncRule
+from tools.reprolint.rules.lockdiscipline import LockDisciplineRule
+from tools.reprolint.rules.retrace import RetraceRule
+from tools.reprolint.rules.vmem import VmemBudgetRule
+
+
+def all_rules() -> List[Rule]:
+    return [RetraceRule(), VmemBudgetRule(), HostSyncRule(), LockDisciplineRule()]

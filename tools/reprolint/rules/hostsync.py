@@ -1,0 +1,172 @@
+"""Rule ``hostsync`` — no device->host synchronization in hot paths.
+
+A host sync (``.item()``, ``np.asarray(device_array)``,
+``float()``/``int()`` on an array, ``.block_until_ready()``) blocks the
+Python thread on the device stream and collapses the async dispatch
+pipeline (docs/DESIGN.md §13/§15).  In serving code a stray sync turns a
+~50us launch into a millisecond-scale stall.
+
+Scope:
+
+  * every function body in ``hot_path_globs`` files (``serve/*``,
+    ``core/packed.py``);
+  * ``__call__`` methods of matcher-layer classes
+    (``matcher_class_patterns``) in ``matcher_call_globs`` files.
+
+Module scope (import-time constant building) is exempt — syncing once at
+import is not a hot path.  Deliberate materialization points (the tail of
+a batch where results go back to Python callers) stay, with a waiver
+stating why, e.g.::
+
+    s_np = np.asarray(s)  # reprolint: disable=hostsync  (result hand-off)
+
+Flagged forms:
+
+  * ``x.item()``, ``x.tolist()``, ``x.block_until_ready()``,
+    ``jax.device_get(x)``;
+  * ``np.asarray(x)`` / ``np.array(x)`` where ``x`` is not a literal
+    display / comprehension (wrapping a fresh Python list is host-side
+    already);
+  * ``float(x)`` / ``int(x)`` where ``x`` is not provably host-native
+    (literals, ``len()``, ``.shape``/``.ndim``/``.size`` access,
+    ``time.*``/``os.*`` calls, and arithmetic over those).
+"""
+from __future__ import annotations
+
+import ast
+import fnmatch
+from typing import List, Optional
+
+from tools.reprolint.framework import FileContext, Finding, Rule, call_name
+
+_SYNC_METHODS = {
+    "item": "materializes a scalar on the host",
+    "tolist": "copies the whole array to host",
+    "block_until_ready": "blocks on the device stream",
+}
+_NP_WRAPPERS = {"np.asarray", "np.array", "numpy.asarray", "numpy.array"}
+_DEVICE_GET = {"jax.device_get", "device_get"}
+_HOST_CALL_ROOTS = ("time.", "os.", "math.", "random.")
+_HOST_SAFE_CALLS = {
+    "len", "round", "min", "max", "abs", "sum", "range", "sorted", "id",
+    "ord", "hash", "str", "repr", "bool", "int", "float",
+}
+_HOST_ATTRS = {"ndim", "size", "nbytes", "maxsize", "qsize"}
+
+
+def _is_literal_display(node: ast.expr) -> bool:
+    return isinstance(node, (
+        ast.List, ast.Tuple, ast.Dict, ast.Set,
+        ast.ListComp, ast.GeneratorExp, ast.Constant,
+    ))
+
+
+def _host_native(node: ast.expr) -> bool:
+    """True when the expression provably never holds a device array."""
+    if isinstance(node, ast.Constant):
+        return True
+    if isinstance(node, ast.BinOp):
+        return _host_native(node.left) and _host_native(node.right)
+    if isinstance(node, ast.UnaryOp):
+        return _host_native(node.operand)
+    if isinstance(node, ast.Compare):
+        return True  # bool result
+    if isinstance(node, ast.IfExp):
+        return _host_native(node.body) and _host_native(node.orelse)
+    if isinstance(node, ast.Attribute):
+        return node.attr in _HOST_ATTRS
+    if isinstance(node, ast.Subscript):
+        # x.shape[0] is a Python int
+        return (
+            isinstance(node.value, ast.Attribute)
+            and node.value.attr == "shape"
+        )
+    if isinstance(node, ast.Call):
+        name = call_name(node) or ""
+        if name in _HOST_SAFE_CALLS:
+            return True
+        if any(name.startswith(r) for r in _HOST_CALL_ROOTS):
+            return True
+        if name.endswith(".get") or name.endswith(".total_seconds"):
+            return True
+    return False
+
+
+class HostSyncRule(Rule):
+    name = "hostsync"
+
+    def _hot_function(self, ctx: FileContext, node: ast.AST) -> bool:
+        fn = ctx.enclosing_function(node)
+        if fn is None:
+            return False  # module scope: import-time is not hot
+        if ctx.matches(ctx.config.hot_path_globs):
+            return True
+        if ctx.matches(ctx.config.matcher_call_globs):
+            # only __call__ of matcher-layer classes is hot here
+            cur: Optional[ast.AST] = fn
+            while cur is not None and isinstance(
+                cur, (ast.FunctionDef, ast.AsyncFunctionDef)
+            ):
+                if cur.name == "__call__":
+                    cls = ctx.enclosing_class(cur)
+                    if cls is not None and any(
+                        fnmatch.fnmatch(cls.name, p)
+                        for p in ctx.config.matcher_class_patterns
+                    ):
+                        return True
+                cur = ctx.enclosing_function(cur)
+        return False
+
+    def check(self, ctx: FileContext) -> List[Finding]:
+        if not (
+            ctx.matches(ctx.config.hot_path_globs)
+            or ctx.matches(ctx.config.matcher_call_globs)
+        ):
+            return []
+        out: List[Finding] = []
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            if not self._hot_function(ctx, node):
+                continue
+            name = call_name(node) or ""
+
+            if isinstance(node.func, ast.Attribute) \
+                    and node.func.attr in _SYNC_METHODS and not node.args:
+                out.append(self.finding(
+                    ctx, node.lineno,
+                    f".{node.func.attr}() in a hot path "
+                    f"({_SYNC_METHODS[node.func.attr]}) — keep the value on "
+                    "device or move the sync to the result hand-off and "
+                    "waive it there",
+                ))
+                continue
+
+            if name in _DEVICE_GET and node.args:
+                out.append(self.finding(
+                    ctx, node.lineno,
+                    "jax.device_get() in a hot path forces a transfer — "
+                    "keep the value on device",
+                ))
+                continue
+
+            if name in _NP_WRAPPERS and node.args \
+                    and not _is_literal_display(node.args[0]):
+                out.append(self.finding(
+                    ctx, node.lineno,
+                    f"{name}(...) on a non-literal value in a hot path: if "
+                    "the operand is a device array this blocks until it is "
+                    "materialized — keep math in jnp, or waive the "
+                    "deliberate hand-off points",
+                ))
+                continue
+
+            if name in ("float", "int") and len(node.args) == 1 \
+                    and not _host_native(node.args[0]):
+                out.append(self.finding(
+                    ctx, node.lineno,
+                    f"{name}(...) on a possibly-device value in a hot path "
+                    "synchronizes — hoist it out of the steady-state loop "
+                    "or waive with justification",
+                ))
+        return out

@@ -1,0 +1,219 @@
+"""Rule ``lockdiscipline`` — guarded attributes touched only under the lock.
+
+The async serving worker (``AnnService._batch_loop``) shares mutable state
+with caller threads; the contract (config ``lock_contracts``) says which
+methods run on the worker thread and which attribute is the lock.  The rule
+computes:
+
+  1. the **worker-reachable** methods: BFS over the intra-class
+     ``self.method()`` call graph from ``worker_entries``;
+  2. the **guarded set**: every ``self.<attr>`` the worker-reachable
+     methods mutate, plus ``extra_guarded`` (state mutated from many
+     *caller* threads, like admission-control counters), minus
+     ``threadsafe_attrs`` (queue.Queue / threading.Event are internally
+     synchronized);
+  3. **lock-held contexts**: statements lexically inside
+     ``with self._lock`` — plus private helper methods whose intra-class
+     call sites are *all* lock-held (fixed point), e.g. ``_search_batch``
+     called only from ``search_batch``'s locked region.
+
+Any mutation of a guarded attribute outside a lock-held context (and
+outside ``exempt_methods`` — construction and worker lifecycle run before
+or after concurrency) is a finding.  Mutation means assignment,
+``+=``, subscript/attribute stores through ``self.<attr>``, or calling a
+mutating method (``append``/``clear``/``pop``/...) on it.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Dict, List, Optional, Set
+
+from tools.reprolint.framework import FileContext, Finding, Rule
+
+_MUTATING_METHODS = {
+    "append", "appendleft", "extend", "extendleft", "insert", "add",
+    "update", "clear", "pop", "popleft", "popitem", "remove", "discard",
+    "setdefault", "sort", "reverse", "fill",
+}
+
+
+def _self_attr(node: ast.expr) -> Optional[str]:
+    """'x' for ``self.x``, else None."""
+    if isinstance(node, ast.Attribute) and isinstance(node.value, ast.Name) \
+            and node.value.id == "self":
+        return node.attr
+    return None
+
+
+def _self_attr_root(node: ast.expr) -> Optional[str]:
+    """'x' for ``self.x``, ``self.x[i]``, ``self.x.y`` ... chains."""
+    cur = node
+    while isinstance(cur, (ast.Subscript, ast.Attribute)):
+        got = _self_attr(cur)
+        if got is not None:
+            return got
+        cur = cur.value
+    return None
+
+
+@dataclasses.dataclass
+class _Mutation:
+    attr: str
+    line: int
+    locked: bool
+    method: str
+
+
+@dataclasses.dataclass
+class _CallSite:
+    callee: str
+    locked: bool
+
+
+class LockDisciplineRule(Rule):
+    name = "lockdiscipline"
+
+    def check(self, ctx: FileContext) -> List[Finding]:
+        out: List[Finding] = []
+        for contract in ctx.config.lock_contracts:
+            if not ctx.matches((contract.path_glob,)):
+                continue
+            cls = next(
+                (
+                    n for n in ast.walk(ctx.tree)
+                    if isinstance(n, ast.ClassDef)
+                    and n.name == contract.class_name
+                ),
+                None,
+            )
+            if cls is None:
+                out.append(self.finding(
+                    ctx, 1,
+                    f"lock contract names class {contract.class_name!r} "
+                    "which does not exist in this file — update "
+                    "reprolint config",
+                ))
+                continue
+            out.extend(self._check_class(ctx, cls, contract))
+        return out
+
+    def _check_class(self, ctx, cls, contract) -> List[Finding]:
+        methods: Dict[str, ast.FunctionDef] = {
+            n.name: n for n in cls.body
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+        }
+
+        def is_locked(node: ast.AST, method: ast.AST) -> bool:
+            cur = ctx.parent(node)
+            while cur is not None and cur is not method:
+                if isinstance(cur, ast.With):
+                    for item in cur.items:
+                        expr = item.context_expr
+                        if isinstance(expr, ast.Call):
+                            expr = expr.func  # self._lock() style (no-op here)
+                        if _self_attr(expr) == contract.lock_attr:
+                            return True
+                cur = ctx.parent(cur)
+            return False
+
+        # Pass 1: mutations + intra-class call sites per method.
+        mutations: List[_Mutation] = []
+        calls: Dict[str, List[_CallSite]] = {m: [] for m in methods}
+        for mname, mnode in methods.items():
+            for node in ast.walk(mnode):
+                if isinstance(node, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+                    targets = (
+                        node.targets if isinstance(node, ast.Assign)
+                        else [node.target]
+                    )
+                    for tgt in targets:
+                        attr = _self_attr_root(tgt)
+                        if attr is not None:
+                            mutations.append(_Mutation(
+                                attr, node.lineno,
+                                is_locked(node, mnode), mname,
+                            ))
+                elif isinstance(node, ast.Call):
+                    f = node.func
+                    if isinstance(f, ast.Attribute):
+                        # self.helper(...) -> intra-class call edge
+                        if isinstance(f.value, ast.Name) \
+                                and f.value.id == "self" \
+                                and f.attr in methods:
+                            calls[f.attr].append(_CallSite(
+                                mname, is_locked(node, mnode)
+                            ))
+                        # self.attr.append(...) -> mutation of self.attr
+                        elif f.attr in _MUTATING_METHODS:
+                            attr = _self_attr_root(f.value)
+                            if attr is not None:
+                                mutations.append(_Mutation(
+                                    attr, node.lineno,
+                                    is_locked(node, mnode), mname,
+                                ))
+
+        # Pass 2: worker-reachable methods (call graph BFS from entries).
+        worker: Set[str] = set()
+        frontier = [m for m in contract.worker_entries if m in methods]
+        while frontier:
+            m = frontier.pop()
+            if m in worker:
+                continue
+            worker.add(m)
+            for callee, sites in calls.items():
+                if any(s.callee == m for s in sites):
+                    frontier.append(callee)
+
+        # Pass 3: guarded attribute set.
+        guarded: Set[str] = set(contract.extra_guarded)
+        for mut in mutations:
+            if mut.method in worker:
+                guarded.add(mut.attr)
+        guarded -= set(contract.threadsafe_attrs)
+        guarded.discard(contract.lock_attr)
+
+        # Pass 4: lock-held helper propagation to a fixed point.  Only
+        # private helpers qualify (public methods have external callers the
+        # AST cannot see); worker entries run with no lock by definition.
+        lock_held: Set[str] = set(contract.exempt_methods) & set(methods)
+        changed = True
+        while changed:
+            changed = False
+            for mname in methods:
+                if mname in lock_held:
+                    continue
+                if not mname.startswith("_") or mname.startswith("__"):
+                    continue
+                if mname in contract.worker_entries:
+                    continue
+                sites = calls.get(mname, [])
+                if sites and all(
+                    s.locked or s.callee in lock_held for s in sites
+                ):
+                    lock_held.add(mname)
+                    changed = True
+
+        # Pass 5: report unguarded mutations of guarded attributes.
+        findings: List[Finding] = []
+        for mut in mutations:
+            if mut.attr not in guarded:
+                continue
+            if mut.method in contract.exempt_methods:
+                continue
+            if mut.locked or mut.method in lock_held:
+                continue
+            where = (
+                "on the worker thread" if mut.method in worker
+                else "from caller threads"
+            )
+            findings.append(self.finding(
+                ctx, mut.line,
+                f"{contract.class_name}.{mut.method} mutates "
+                f"self.{mut.attr} {where} without holding "
+                f"self.{contract.lock_attr}; it is shared with "
+                + ("caller" if mut.method in worker else "the worker")
+                + " thread state — wrap the mutation in "
+                f"`with self.{contract.lock_attr}:`",
+            ))
+        return findings

@@ -1,0 +1,269 @@
+"""Rule ``retrace`` — jit / cache-key hygiene (the recompile-churn class).
+
+The executable-cache work (docs/DESIGN.md §14) fixed a whole family of
+"silently recompiles every call" bugs by hand; this rule flags the static
+shapes of that family:
+
+  * **jit-in-loop** — ``jax.jit(...)`` / ``.lower(...)`` / ``.compile()``
+    inside a ``for``/``while`` body: a fresh jitted callable (or AOT
+    executable) per iteration defeats jit's identity-keyed cache.
+  * **local-jit** — ``jax.jit`` applied to a function or lambda defined in
+    the enclosing *function* scope: every call of the enclosing function
+    builds a new closure object, so the jit cache can never hit.  Builder
+    functions (``make_*`` / ``build*`` / ``_bind`` — configurable) are the
+    blessed exception: they construct the closure once per snapshot/bind
+    and hold on to it.
+  * **closure-unhashable** — a jitted nested function closing over a name
+    bound to a list/dict/set display in the enclosing function: mutating the
+    captured object silently changes semantics without retracing (and such
+    values can never participate in a cache key).
+  * **closure-array** — a jitted nested function closing over a name bound
+    to an ``np.*``/``jnp.*`` array construction in the enclosing function:
+    the array is baked into the traced graph as a constant, so every fresh
+    closure re-traces and re-constant-folds it (pass it as an argument
+    instead).
+
+Python-scalar cache-key churn (the ``df_num_docs`` class) is only partially
+visible statically; the dynamic trace audit
+(:mod:`tools.reprolint.trace_audit`) owns that end of the family.
+"""
+from __future__ import annotations
+
+import ast
+import fnmatch
+from typing import Dict, List, Optional, Set
+
+from tools.reprolint.framework import (
+    FileContext,
+    Finding,
+    Rule,
+    call_name,
+    dotted_name,
+)
+
+_JIT_NAMES = {"jax.jit", "jit", "pjit", "jax.pjit"}
+_ARRAY_CTORS = (
+    "np.array", "np.asarray", "np.zeros", "np.ones", "np.full",
+    "np.arange", "jnp.array", "jnp.asarray", "jnp.zeros", "jnp.ones",
+    "jnp.full", "jnp.arange", "numpy.array", "numpy.asarray",
+)
+
+
+def _is_jit_call(node: ast.Call) -> bool:
+    name = call_name(node)
+    if name in _JIT_NAMES:
+        return True
+    # functools.partial(jax.jit, ...) used as a decorator factory
+    if name in ("functools.partial", "partial") and node.args:
+        return dotted_name(node.args[0]) in _JIT_NAMES
+    return False
+
+
+def _jitted_target(node: ast.Call) -> Optional[ast.AST]:
+    """The function being jitted, skipping through functools.partial."""
+    name = call_name(node)
+    if name in ("functools.partial", "partial"):
+        return None  # decorator factory: target is the decorated def
+    return node.args[0] if node.args else None
+
+
+class _Scope:
+    """Names bound in one function scope, by how they were bound."""
+
+    def __init__(self, fn: ast.AST):
+        self.fn = fn
+        self.local_defs: Set[str] = set()        # nested def / lambda names
+        self.unhashable: Dict[str, int] = {}     # name -> assign line
+        self.arrays: Dict[str, int] = {}         # name -> assign line
+        self.params: Set[str] = set()
+        args = getattr(fn, "args", None)
+        if args is not None:
+            for a in (
+                args.posonlyargs + args.args + args.kwonlyargs
+                + ([args.vararg] if args.vararg else [])
+                + ([args.kwarg] if args.kwarg else [])
+            ):
+                self.params.add(a.arg)
+
+
+def _scan_scope(ctx: FileContext, fn: ast.AST) -> _Scope:
+    scope = _Scope(fn)
+    for node in ast.walk(fn):
+        if node is not fn and isinstance(
+            node, (ast.FunctionDef, ast.AsyncFunctionDef)
+        ):
+            if ctx.enclosing_function(node) is fn:
+                scope.local_defs.add(node.name)
+        if isinstance(node, ast.Assign) and ctx.enclosing_function(node) is fn:
+            for tgt in node.targets:
+                if not isinstance(tgt, ast.Name):
+                    continue
+                val = node.value
+                if isinstance(val, ast.Lambda):
+                    scope.local_defs.add(tgt.id)
+                elif isinstance(val, (ast.List, ast.Dict, ast.Set, ast.ListComp,
+                                      ast.DictComp, ast.SetComp)):
+                    scope.unhashable[tgt.id] = node.lineno
+                elif isinstance(val, ast.Call) and call_name(val) in _ARRAY_CTORS:
+                    scope.arrays[tgt.id] = node.lineno
+    return scope
+
+
+def _free_names(fn: ast.AST) -> Set[str]:
+    """Names loaded in ``fn`` but not bound inside it (approximate)."""
+    bound: Set[str] = set()
+    loaded: Set[str] = set()
+    args = getattr(fn, "args", None)
+    if args is not None:
+        for a in (
+            args.posonlyargs + args.args + args.kwonlyargs
+            + ([args.vararg] if args.vararg else [])
+            + ([args.kwarg] if args.kwarg else [])
+        ):
+            bound.add(a.arg)
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Name):
+            if isinstance(node.ctx, ast.Store):
+                bound.add(node.id)
+            else:
+                loaded.add(node.id)
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            if node is not fn:
+                bound.add(node.name)
+    return loaded - bound
+
+
+class RetraceRule(Rule):
+    name = "retrace"
+
+    def check(self, ctx: FileContext) -> List[Finding]:
+        out: List[Finding] = []
+        scopes: Dict[ast.AST, _Scope] = {}
+
+        def scope_for(fn: ast.AST) -> _Scope:
+            if fn not in scopes:
+                scopes[fn] = _scan_scope(ctx, fn)
+            return scopes[fn]
+
+        builder_pats = ctx.config.retrace_builder_patterns
+
+        def in_builder(fn: Optional[ast.AST]) -> bool:
+            while fn is not None:
+                if any(
+                    fnmatch.fnmatch(fn.name, p) for p in builder_pats
+                ):
+                    return True
+                fn = ctx.enclosing_function(fn)
+            return False
+
+        def check_closure(target_fn: ast.AST, line: int) -> None:
+            """closure-unhashable / closure-array on a jitted nested fn."""
+            encl = ctx.enclosing_function(target_fn)
+            if encl is None or in_builder(encl):
+                return
+            scope = _scan_scope(ctx, encl)
+            free = _free_names(target_fn)
+            for nm in sorted(free & set(scope.unhashable)):
+                out.append(self.finding(
+                    ctx, line,
+                    f"jitted function closes over unhashable local "
+                    f"{nm!r} (list/dict/set built at line "
+                    f"{scope.unhashable[nm]}); mutation silently skips "
+                    "retracing — pass it as a static arg or freeze it",
+                ))
+            for nm in sorted(free & set(scope.arrays)):
+                out.append(self.finding(
+                    ctx, line,
+                    f"jitted function captures array {nm!r} by closure "
+                    f"(constructed at line {scope.arrays[nm]}); it is baked "
+                    "into the trace as a constant and re-traced per "
+                    "closure — pass it as an operand",
+                ))
+
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call) or not _is_jit_call(node):
+                continue
+            name = call_name(node)
+            encl = ctx.enclosing_function(node)
+
+            # jit-in-loop: any jit construction lexically inside a loop.
+            cur = ctx.parent(node)
+            loop = None
+            while cur is not None and not isinstance(
+                cur, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Module)
+            ):
+                if isinstance(cur, (ast.For, ast.While)):
+                    loop = cur
+                    break
+                cur = ctx.parent(cur)
+            if loop is not None:
+                out.append(self.finding(
+                    ctx, node.lineno,
+                    f"{name}(...) constructed inside a "
+                    f"{type(loop).__name__.lower()} loop: a fresh jitted "
+                    "callable per iteration retraces every time — hoist it "
+                    "or route through an explicit executable cache",
+                ))
+                continue
+
+            target = _jitted_target(node)
+            if target is None or encl is None or in_builder(encl):
+                # Decorator factories check the decorated def below;
+                # module-scope and builder-scope jits are the blessed forms.
+                if isinstance(target, (ast.FunctionDef, ast.Lambda)):
+                    check_closure(target, node.lineno)
+                continue
+
+            scope = scope_for(encl)
+            if isinstance(target, ast.Lambda):
+                out.append(self.finding(
+                    ctx, node.lineno,
+                    "jax.jit over a lambda inside a non-builder function: "
+                    "a new closure (and a full retrace) per call — hoist it "
+                    "to module scope or a make_*/build* builder",
+                ))
+            elif isinstance(target, ast.Name) and target.id in scope.local_defs:
+                out.append(self.finding(
+                    ctx, node.lineno,
+                    f"jax.jit over locally-defined {target.id!r} inside a "
+                    "non-builder function: the jit cache keys on the "
+                    "closure object, which is rebuilt (and retraced) every "
+                    "call — hoist it or use a make_*/build* builder",
+                ))
+                fdef = next(
+                    (
+                        n for n in ast.walk(encl)
+                        if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+                        and n.name == target.id
+                    ),
+                    None,
+                )
+                if fdef is not None:
+                    check_closure(fdef, node.lineno)
+
+        # Decorated defs: @jax.jit / @functools.partial(jax.jit, ...) on a
+        # NESTED def — closure checks apply (module-level defs have no
+        # enclosing function locals to capture).
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            jitted = False
+            for dec in node.decorator_list:
+                if (dotted_name(dec) in _JIT_NAMES) or (
+                    isinstance(dec, ast.Call) and _is_jit_call(dec)
+                ):
+                    jitted = True
+            if not jitted:
+                continue
+            encl = ctx.enclosing_function(node)
+            if encl is None:
+                continue
+            if not in_builder(encl):
+                out.append(self.finding(
+                    ctx, node.lineno,
+                    f"@jit-decorated def {node.name!r} nested inside a "
+                    "non-builder function: rebuilt (and retraced) on every "
+                    "call of the enclosing function",
+                ))
+            check_closure(node, node.lineno)
+        return out

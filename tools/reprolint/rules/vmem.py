@@ -1,0 +1,359 @@
+"""Rule ``vmem`` — static Pallas VMEM budget checking (docs/DESIGN.md §16).
+
+For every ``pl.pallas_call`` in a kernel file, statically bound the VMEM
+footprint:
+
+    (sum of in/out BlockSpec block bytes) * double_buffer
+        + sum of scratch_shapes bytes          <=  budget
+
+Block shapes are expressions over tile-size locals (``bq``, ``bn``, ...), so
+the rule runs a small **upper-bound abstract interpreter** over the enclosing
+function body:
+
+  * parameters seed from their declared defaults (``bq: int = 128``) or from
+    ``x or DEFAULT`` re-binding; a caller overriding tiles upward is outside
+    static scope (the runtime asserts / trace audit own that);
+  * ``min(a, b)`` keeps the smallest known bound (unknown operands are
+    ignored — ``min`` can only shrink); ``max``/``+``/``*`` need all
+    operands bounded; ``a // b`` with unknown ``b`` bounds to ``a``
+    (divisors are >= 1 here); ``common.round_up(x, m)`` bounds to
+    ``x + m - 1``; ``common.next_pow2(x)`` to ``next_pow2(x)``;
+  * ``if``/``else`` join per-name bounds with ``max`` (either branch may
+    run);
+  * names that stay unknown (runtime static args like ``depth``) fall back
+    to ``config.vmem_assumed_bounds``; a block dimension that cannot be
+    bounded at all is itself a finding.
+
+Dtypes resolve from ``jnp.<dtype>`` spellings; unresolved dtypes charge the
+conservative ``vmem_default_itemsize`` (4 bytes).  BlockSpecs constructed in
+helper functions (no ``pallas_call`` of their own) are charged to each
+caller at the helper's largest block, with the helper's parameters bound to
+the caller's argument bounds.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from tools.reprolint.framework import FileContext, Finding, Rule, call_name
+
+Env = Dict[str, Optional[int]]
+
+_DTYPE_BYTES = {
+    "float64": 8, "int64": 8, "uint64": 8,
+    "float32": 4, "int32": 4, "uint32": 4,
+    "bfloat16": 2, "float16": 2, "int16": 2, "uint16": 2,
+    "int8": 1, "uint8": 1, "bool_": 1, "bool": 1,
+}
+_COMMON_CONSTS = {
+    "LANE": 128, "SUBLANE_F32": 8, "SUBLANE_BF16": 16, "SUBLANE_INT8": 32,
+}
+
+
+def _next_pow2(x: int) -> int:
+    return 1 << max(0, (x - 1).bit_length())
+
+
+class _Evaluator:
+    """Upper-bound abstract interpretation of one function body."""
+
+    def __init__(self, fn: ast.FunctionDef, assumed: Dict[str, int]):
+        self.assumed = assumed
+        self.env: Env = {}
+        args = fn.args
+        pos = args.posonlyargs + args.args
+        defaults: List[Optional[ast.expr]] = (
+            [None] * (len(pos) - len(args.defaults)) + list(args.defaults)
+        )
+        for a, d in zip(pos, defaults):
+            self.env[a.arg] = self._const(d) if d is not None else None
+        for a, d in zip(args.kwonlyargs, args.kw_defaults):
+            self.env[a.arg] = self._const(d) if d is not None else None
+        self._run_body(fn.body)
+
+    @staticmethod
+    def _const(node: Optional[ast.expr]) -> Optional[int]:
+        if isinstance(node, ast.Constant) and isinstance(node.value, int) \
+                and not isinstance(node.value, bool):
+            return node.value
+        return None
+
+    # -- statements ---------------------------------------------------------
+
+    def _run_body(self, body: Sequence[ast.stmt]) -> None:
+        for stmt in body:
+            if isinstance(stmt, ast.Assign):
+                self._assign(stmt.targets, stmt.value)
+            elif isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+                self._assign([stmt.target], stmt.value)
+            elif isinstance(stmt, ast.AugAssign):
+                if isinstance(stmt.target, ast.Name):
+                    self.env[stmt.target.id] = None
+            elif isinstance(stmt, ast.If):
+                before = dict(self.env)
+                self._run_body(stmt.body)
+                after_if = self.env
+                self.env = dict(before)
+                self._run_body(stmt.orelse)
+                joined: Env = {}
+                for k in set(after_if) | set(self.env):
+                    a, b = after_if.get(k), self.env.get(k)
+                    joined[k] = max(a, b) if (a is not None and b is not None) \
+                        else None
+                self.env = joined
+            # for/while/with/try bodies never bind tile sizes in this repo;
+            # anything they do bind stays unknown (conservative).
+
+    def _assign(self, targets: Sequence[ast.expr], value: ast.expr) -> None:
+        for tgt in targets:
+            if isinstance(tgt, ast.Tuple) and isinstance(value, ast.Tuple) \
+                    and len(tgt.elts) == len(value.elts):
+                for t, v in zip(tgt.elts, value.elts):
+                    if isinstance(t, ast.Name):
+                        self.env[t.id] = self.bound(v)
+            elif isinstance(tgt, ast.Name):
+                self.env[tgt.id] = self.bound(value)
+            elif isinstance(tgt, ast.Tuple):
+                for t in tgt.elts:
+                    if isinstance(t, ast.Name):
+                        self.env[t.id] = None
+
+    # -- expressions --------------------------------------------------------
+
+    def bound(self, node: Optional[ast.expr]) -> Optional[int]:
+        """Upper bound for an int expression; None = unbounded/unknown."""
+        if node is None:
+            return None
+        if isinstance(node, ast.Constant):
+            return self._const(node)
+        if isinstance(node, ast.Name):
+            v = self.env.get(node.id)
+            if v is not None:
+                return v
+            return self.assumed.get(node.id)
+        if isinstance(node, ast.Attribute):
+            if node.attr in _COMMON_CONSTS:
+                return _COMMON_CONSTS[node.attr]
+            return self.assumed.get(node.attr)
+        if isinstance(node, ast.BoolOp) and isinstance(node.op, ast.Or):
+            # ``x or DEFAULT``: either operand may win; bound = max(known).
+            known = [b for b in map(self.bound, node.values) if b is not None]
+            return max(known) if known else None
+        if isinstance(node, ast.BinOp):
+            left, right = self.bound(node.left), self.bound(node.right)
+            if isinstance(node.op, ast.FloorDiv):
+                if left is None:
+                    return None
+                if right is None or right <= 0:
+                    return left          # divisor >= 1 by construction
+                if self._const(node.right) is not None:
+                    return left // right  # exact divisor: monotone
+                return left
+            if left is None or right is None:
+                return None
+            if isinstance(node.op, ast.Add):
+                return left + right
+            if isinstance(node.op, ast.Sub):
+                return left  # b >= 0 everywhere relevant
+            if isinstance(node.op, ast.Mult):
+                return left * right
+            if isinstance(node.op, ast.LShift):
+                return left << right
+            return None
+        if isinstance(node, ast.Call):
+            return self._call_bound(node)
+        return None
+
+    def _call_bound(self, node: ast.Call) -> Optional[int]:
+        name = call_name(node) or ""
+        short = name.rsplit(".", 1)[-1]
+        if short == "min":
+            known = [b for b in map(self.bound, node.args) if b is not None]
+            return min(known) if known else None
+        if short == "max":
+            bounds = [self.bound(a) for a in node.args]
+            if any(b is None for b in bounds) or not bounds:
+                return None
+            return max(b for b in bounds if b is not None)
+        if short == "round_up" and len(node.args) == 2:
+            x, m = self.bound(node.args[0]), self.bound(node.args[1])
+            return None if x is None or m is None else x + m - 1
+        if short == "next_pow2" and len(node.args) == 1:
+            x = self.bound(node.args[0])
+            return None if x is None else _next_pow2(x)
+        return None
+
+
+def _itemsize(node: Optional[ast.expr], default: int) -> int:
+    if node is None:
+        return default
+    if isinstance(node, ast.Attribute):
+        return _DTYPE_BYTES.get(node.attr, default)
+    if isinstance(node, ast.Name):
+        return _DTYPE_BYTES.get(node.id, default)
+    return default
+
+
+def _shape_dims(node: ast.expr) -> Optional[List[ast.expr]]:
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return list(node.elts)
+    return None
+
+
+class _SpecCost:
+    def __init__(self, line: int, kind: str, dims: List[str], bytes_: Optional[int],
+                 unknown: Optional[str] = None):
+        self.line = line
+        self.kind = kind          # "block" | "scratch"
+        self.dims = dims
+        self.bytes = bytes_
+        self.unknown = unknown    # name of the dim that could not be bounded
+
+
+def _collect_specs(
+    fn: ast.FunctionDef, ev: _Evaluator, default_itemsize: int,
+) -> Tuple[List[_SpecCost], List[str]]:
+    """All BlockSpec / MemorySpace.VMEM costs lexically inside ``fn``, plus
+    the names of helper functions it calls (for helper attribution)."""
+    specs: List[_SpecCost] = []
+    callees: List[str] = []
+    for node in ast.walk(fn):
+        if not isinstance(node, ast.Call):
+            continue
+        name = call_name(node) or ""
+        short = name.rsplit(".", 1)[-1]
+        if short == "BlockSpec" and node.args:
+            dims = _shape_dims(node.args[0])
+            if dims is None:
+                specs.append(_SpecCost(node.lineno, "block", [], None,
+                                       unknown="<non-literal shape>"))
+                continue
+            total, bad, names = 1, None, []
+            for d in dims:
+                b = ev.bound(d)
+                names.append(ast.unparse(d))
+                if b is None:
+                    bad = ast.unparse(d)
+                    break
+                total *= b
+            if bad is not None:
+                specs.append(_SpecCost(node.lineno, "block", names, None,
+                                       unknown=bad))
+            else:
+                specs.append(_SpecCost(
+                    node.lineno, "block", names, total * default_itemsize
+                ))
+        elif short == "VMEM" and len(node.args) >= 1:
+            dims = _shape_dims(node.args[0])
+            if dims is None:
+                continue
+            isz = _itemsize(node.args[1] if len(node.args) > 1 else None,
+                            default_itemsize)
+            total, bad, names = 1, None, []
+            for d in dims:
+                b = ev.bound(d)
+                names.append(ast.unparse(d))
+                if b is None:
+                    bad = ast.unparse(d)
+                    break
+                total *= b
+            if bad is not None:
+                specs.append(_SpecCost(node.lineno, "scratch", names, None,
+                                       unknown=bad))
+            else:
+                specs.append(_SpecCost(node.lineno, "scratch", names,
+                                       total * isz))
+        elif isinstance(node.func, ast.Name):
+            callees.append(node.func.id)
+    return specs, callees
+
+
+class VmemBudgetRule(Rule):
+    name = "vmem"
+
+    def check(self, ctx: FileContext) -> List[Finding]:
+        if not ctx.matches(ctx.config.kernel_globs):
+            return []
+        out: List[Finding] = []
+        assumed = dict(ctx.config.vmem_assumed_bounds)
+        default_isz = ctx.config.vmem_default_itemsize
+
+        module_fns: Dict[str, ast.FunctionDef] = {
+            n.name: n for n in ctx.tree.body if isinstance(n, ast.FunctionDef)
+        }
+
+        def has_pallas_call(fn: ast.FunctionDef) -> bool:
+            return any(
+                isinstance(n, ast.Call)
+                and (call_name(n) or "").endswith("pallas_call")
+                for n in ast.walk(fn)
+            )
+
+        def helper_cost(helper: ast.FunctionDef, caller_ev: _Evaluator,
+                        call: ast.Call) -> Optional[int]:
+            """Largest block the helper can emit, with its params bound to
+            the caller's argument bounds (conservative: a helper returns one
+            of its specs per call path)."""
+            hev = _Evaluator(helper, assumed)
+            params = [a.arg for a in helper.args.posonlyargs + helper.args.args]
+            for p, arg in zip(params, call.args):
+                b = caller_ev.bound(arg)
+                if b is not None:
+                    hev.env[p] = b
+            hev._run_body(helper.body)  # re-run with caller bounds
+            specs, _ = _collect_specs(helper, hev, default_isz)
+            block_bytes = [s.bytes for s in specs
+                           if s.kind == "block" and s.bytes is not None]
+            return max(block_bytes) if block_bytes else None
+
+        for fn in module_fns.values():
+            if not has_pallas_call(fn):
+                continue
+            budget = ctx.config.vmem_budgets.get(
+                fn.name, ctx.config.vmem_budget_bytes
+            )
+            ev = _Evaluator(fn, assumed)
+            specs, callees = _collect_specs(fn, ev, default_isz)
+
+            block_bytes = 0
+            scratch_bytes = 0
+            for s in specs:
+                if s.bytes is None:
+                    out.append(self.finding(
+                        ctx, s.line,
+                        f"{fn.name}: cannot bound {s.kind} dimension "
+                        f"{s.unknown!r} — add it to vmem_assumed_bounds in "
+                        "reprolint.json or make the tile size a literal",
+                    ))
+                elif s.kind == "block":
+                    block_bytes += s.bytes
+                else:
+                    scratch_bytes += s.bytes
+
+            for callee_name in callees:
+                helper = module_fns.get(callee_name)
+                if helper is None or helper is fn or has_pallas_call(helper):
+                    continue
+                hc = helper_cost(helper, ev, next(
+                    n for n in ast.walk(fn)
+                    if isinstance(n, ast.Call)
+                    and isinstance(n.func, ast.Name)
+                    and n.func.id == callee_name
+                ))
+                if hc is not None:
+                    block_bytes += hc
+
+            total = (
+                block_bytes * ctx.config.vmem_double_buffer + scratch_bytes
+            )
+            if total > budget:
+                out.append(self.finding(
+                    ctx, fn.lineno,
+                    f"{fn.name}: estimated VMEM {total / 2**20:.2f} MiB "
+                    f"(blocks {block_bytes / 2**20:.2f} MiB x"
+                    f"{ctx.config.vmem_double_buffer} double-buffer + "
+                    f"scratch {scratch_bytes / 2**20:.2f} MiB) exceeds the "
+                    f"{budget / 2**20:.2f} MiB budget — shrink the tile "
+                    "sizes or raise vmem_budgets[\"" + fn.name + "\"]",
+                ))
+        return out

@@ -1,0 +1,139 @@
+"""Dynamic counterpart to the static ``retrace`` rule.
+
+The static rule flags the *shapes* of recompile-churn bugs; this module
+counts the *events*.  jax emits a monitoring event per backend compile
+(``.../backend_compile_duration`` — verified to fire exactly once per
+executable built, and not at all on cache hits, under the pinned jax), so a
+test can assert a hard ceiling on compiles across a workload::
+
+    with assert_max_traces(0):
+        for _ in range(10):
+            serve_one_batch()   # steady state must reuse executables
+
+or via the pytest fixture::
+
+    def test_steady_state(trace_audit):
+        warmup()
+        trace_audit.reset()
+        run_cycles(10)
+        trace_audit.assert_max(1)
+
+This replaces the hand-rolled ``cache.compiles``-counter assertions that
+grew in test_packed.py: those only see compiles routed through
+``ExecutableCache``, while the monitoring listener sees every jit retrace
+that reaches the backend, including ones that bypass the cache entirely.
+
+The listener registers once per process (jax.monitoring has no
+per-listener deregistration; ``clear_event_listeners`` would clobber other
+users) and only ever increments counters, so it is safe to leave in place.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Optional
+
+_BACKEND_COMPILE_SUFFIX = "backend_compile_duration"
+_TRACE_SUBSTR = "trace_duration"
+
+_counts = {"compiles": 0, "traces": 0}
+_registered = False
+_reg_lock = threading.Lock()
+
+
+def _on_event(event: str, duration: float, **kwargs) -> None:
+    if event.endswith(_BACKEND_COMPILE_SUFFIX):
+        _counts["compiles"] += 1
+    elif _TRACE_SUBSTR in event:
+        _counts["traces"] += 1
+
+
+def ensure_registered() -> None:
+    """Install the monitoring listener (idempotent, process-wide)."""
+    global _registered
+    with _reg_lock:
+        if _registered:
+            return
+        from jax import monitoring
+
+        monitoring.register_event_duration_secs_listener(_on_event)
+        _registered = True
+
+
+def compile_count() -> int:
+    """Backend compiles observed since the listener was installed."""
+    ensure_registered()
+    return _counts["compiles"]
+
+
+def trace_count() -> int:
+    """Jaxpr traces observed (informational: a trace that hits the jit
+    cache never reaches the backend and is cheap; compiles are the cost)."""
+    ensure_registered()
+    return _counts["traces"]
+
+
+class assert_max_traces:
+    """Context manager: at most ``n`` backend compiles inside the block.
+
+    >>> with assert_max_traces(1, "bucket growth compiles once"):
+    ...     refresh_and_search()
+    """
+
+    def __init__(self, n: int, message: str = ""):
+        self.n = n
+        self.message = message
+        self.compiles: Optional[int] = None  # filled on exit
+
+    def __enter__(self) -> "assert_max_traces":
+        ensure_registered()
+        self._start = _counts["compiles"]
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        self.compiles = _counts["compiles"] - self._start
+        if exc_type is None and self.compiles > self.n:
+            suffix = f" ({self.message})" if self.message else ""
+            raise AssertionError(
+                f"observed {self.compiles} backend compile(s), "
+                f"expected at most {self.n}{suffix} — something in the "
+                "block retraces per call (see tools/reprolint rule "
+                "'retrace' for the usual causes)"
+            )
+        return False
+
+
+class TraceAudit:
+    """Fixture handle: windowed compile counting with reset."""
+
+    def __init__(self):
+        ensure_registered()
+        self.reset()
+
+    def reset(self) -> None:
+        self._start = _counts["compiles"]
+
+    @property
+    def compiles(self) -> int:
+        return _counts["compiles"] - self._start
+
+    def assert_max(self, n: int, message: str = "") -> None:
+        got = self.compiles
+        if got > n:
+            suffix = f" ({message})" if message else ""
+            raise AssertionError(
+                f"observed {got} backend compile(s) since reset, "
+                f"expected at most {n}{suffix}"
+            )
+
+
+try:  # pytest is present in dev/CI; the module stays importable without it
+    import pytest
+except ImportError:  # pragma: no cover
+    pytest = None
+
+if pytest is not None:
+    @pytest.fixture
+    def trace_audit() -> TraceAudit:
+        """Counts backend compiles; ``reset()`` after warmup, then
+        ``assert_max(n)`` (or read ``.compiles``)."""
+        return TraceAudit()
